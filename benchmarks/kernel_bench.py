@@ -1,0 +1,69 @@
+"""Micro-benchmarks for the Pallas kernels (interpret-mode correctness +
+jnp-reference timing on CPU; the BlockSpec layout is the TPU contract)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.monitor.ref import batched_monitor_ref
+from repro.kernels.ssd.ref import ssd_chunk_ref
+from repro.models.ssm import ssd_chunked
+
+
+def _time(fn, *args, n=5):
+    out = jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn(*args))
+    return out, (time.perf_counter() - t0) / n * 1e6
+
+
+def monitor_fleet_throughput():
+    """Fleet monitor: queues/second the batched window stage sustains."""
+    rows = []
+    f = jax.jit(lambda w: batched_monitor_ref(w)[0])
+    for q in (256, 4096, 65_536):
+        win = jax.random.uniform(jax.random.PRNGKey(q), (q, 32)) * 100
+        _, us = _time(f, win)
+        rows.append(f"kernel_monitor/q={q},{us:.0f},"
+                    f"{q / us * 1e6:.2e}_queues_per_s")
+    return rows, "fleet monitor scales linearly in queue count"
+
+
+def ssd_chunk_flops():
+    B, S, H, P, N = 2, 2048, 8, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    f = jax.jit(lambda *a: ssd_chunked(*a, chunk=256)[0])
+    _, us = _time(f, x, dt, A, Bm, Cm)
+    nc = S // 256
+    flops = 2 * B * nc * 256 * 256 * (N + H * P) \
+        + 4 * B * nc * 256 * H * P * N
+    return ([f"kernel_ssd/s={S},{us:.0f},{flops / us / 1e3:.1f}_GFLOPs"],
+            "chunked SSD (jnp ref; Pallas kernel is the TPU form)")
+
+
+def flash_attention_ref_time():
+    B, S, H, K, hd = 1, 1024, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    _, us = _time(f, q, k, v)
+    flops = 4 * B * H * S * S * hd * 0.5
+    return ([f"kernel_attn/s={S},{us:.0f},{flops / us / 1e3:.1f}_GFLOPs"],
+            "causal attention reference")
+
+
+ALL = [monitor_fleet_throughput, ssd_chunk_flops,
+       flash_attention_ref_time]

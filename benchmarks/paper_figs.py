@@ -1,0 +1,261 @@
+"""Benchmarks reproducing each paper table/figure (Beard & Chamberlain
+2015).  Each function returns (rows, derived) where rows are CSV lines and
+derived is a short verdict string compared against the paper's claim."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (BufferAutotuner, DistributionClassifier,
+                        HostMonitor, MonitorConfig, TandemConfig,
+                        mm1k_throughput, optimal_buffer_size,
+                        pr_nonblocking_read, pr_nonblocking_write,
+                        sample_periods, simulate_tandem)
+from repro.core.monitor import SamplingPeriodController
+
+
+def _timed(fn, *args, n=3, **kw):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) / n * 1e6
+
+
+def fig2_buffer_sweep():
+    """Fig 2: throughput vs buffer size has a knee then flattens."""
+    rows = []
+    thr = {}
+    for cap in (1, 2, 4, 8, 16, 32, 64, 128):
+        cfg = TandemConfig(mu_a=4e5, mu_b=4.2e5, capacity=cap,
+                           n_items=60_000, seed=cap)
+        res, us = _timed(simulate_tandem, cfg, n=1)
+        t = cfg.n_items / res.finish_t[-1]
+        thr[cap] = t
+        rows.append(f"fig2_buffer_sweep/cap={cap},{us:.0f},{t:.0f}")
+    knee = thr[16] / thr[1]
+    flat = abs(thr[128] - thr[32]) / thr[32]
+    return rows, (f"knee x{knee:.2f} from cap1->16, <{flat:.1%} change "
+                  f"32->128 (paper: improves then flattens)")
+
+
+def fig3_raw_observations():
+    """Fig 3: raw tc samples are noisy around the set rate."""
+    cfg = TandemConfig(mu_a=8e5, mu_b=2e5, capacity=64, n_items=80_000)
+    res = simulate_tandem(cfg)
+    (tc, blocked, _), us = _timed(sample_periods, res, 1e-3, n=1)
+    good = tc[~blocked]
+    cv = good.std() / good.mean()
+    return ([f"fig3_raw_observations,{us:.0f},cv={cv:.3f}"],
+            f"raw sample cv {cv:.2f} (noisy, needs the heuristic)")
+
+
+def fig4_nonblocking_probability():
+    """Fig 4 / Eq 1: Pr[non-blocking read] falls with T and mu."""
+    rows = []
+    for mu in (1e5, 2e5, 4e5):
+        ps = [float(pr_nonblocking_read(T, 0.9, mu))
+              for T in (1e-4, 1e-3, 1e-2)]
+        rows.append(f"fig4_pr_read/mu={mu:.0e},0,"
+                    f"{'|'.join(f'{p:.2e}' for p in ps)}")
+        assert ps[0] >= ps[1] >= ps[2]
+    pw = float(pr_nonblocking_write(1e-3, 64, 0.5, 2e4))
+    rows.append(f"fig4_pr_write,0,{pw:.4f}")
+    return rows, "monotone decreasing in T and mu (matches Fig 4)"
+
+
+def fig6_sampling_period():
+    """Fig 6 / IV-A: T widens under stability, fails under chaos."""
+    c = SamplingPeriodController(base_latency_s=300e-9,
+                                 max_period_s=1e-3)
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        c.observe(c.period_s * rng.normal(1.0, 0.05), blocked=False)
+    widened = c.period_s / 300e-9
+    c2 = SamplingPeriodController(base_latency_s=300e-9, j_stable=4)
+    for _ in range(40):
+        c2.observe(c2.period_s * rng.uniform(0.2, 5.0), blocked=True)
+    return ([f"fig6_sampling_period,0,widened_x{widened:.0f}"
+             f"_fails={c2.failed}"],
+            f"T widened {widened:.0f}x under stability; noisy timer "
+            f"fails knowingly={c2.failed}")
+
+
+def fig8_9_convergence():
+    """Figs 7-9: q-bar converges; filtered sigma crosses the threshold."""
+    cfg = TandemConfig(mu_a=8e5, mu_b=2e5, capacity=64, n_items=150_000)
+    res = simulate_tandem(cfg)
+    tc, blocked, _ = sample_periods(res, 1e-3)
+    hm = HostMonitor(MonitorConfig(), period_s=1e-3)
+    first_epoch_at = None
+    t0 = time.perf_counter()
+    for i, (t, b) in enumerate(zip(tc, blocked)):
+        if hm.update(float(t), bool(b)) and first_epoch_at is None:
+            first_epoch_at = i
+    us = (time.perf_counter() - t0) / max(len(tc), 1) * 1e6
+    err = abs(hm.rate_items_per_s() - cfg.mu_b) / cfg.mu_b
+    return ([f"fig8_convergence,{us:.1f},first_epoch@{first_epoch_at}"
+             f"_err={err:.1%}"],
+            f"converged at sample {first_epoch_at}, estimate within "
+            f"{err:.1%} ({us:.1f}us/sample online cost)")
+
+
+def fig10_dual_phase():
+    """Figs 10/14: successive converged estimates track a rate switch."""
+    cfg = TandemConfig(mu_a=8e5, mu_b=2.66e5, mu_b2=1e5, capacity=64,
+                       n_items=250_000, seed=3)
+    res = simulate_tandem(cfg)
+    tc, blocked, _ = sample_periods(res, 1e-3, seed=4)
+    hm = HostMonitor(MonitorConfig(), period_s=1e-3)
+    ests = []
+    for t, b in zip(tc, blocked):
+        if hm.update(float(t), bool(b)):
+            ests.append(hm.last_qbar / 1e-3)
+    e1 = abs(ests[0] - cfg.mu_b) / cfg.mu_b
+    e2 = abs(ests[-1] - cfg.mu_b2) / cfg.mu_b2
+    return ([f"fig10_dual_phase,0,phase1_err={e1:.1%}"
+             f"_phase2_err={e2:.1%}_epochs={len(ests)}"],
+            f"tracked 2.66e5->1e5 switch ({len(ests)} epochs)")
+
+
+def fig13_single_phase_histogram(n_runs: int = 60):
+    """Fig 13: percent-difference histogram over many runs.
+    Paper: 'the majority of the results are within 20%'."""
+    rng = np.random.default_rng(0)
+    errs = []
+    t0 = time.perf_counter()
+    for i in range(n_runs):
+        mu_b = float(rng.uniform(0.8e5, 8e5))
+        dist = "exponential" if i % 2 else "deterministic"
+        cfg = TandemConfig(mu_a=mu_b * rng.uniform(1.5, 4.0), mu_b=mu_b,
+                           dist_b=dist, capacity=64, n_items=60_000,
+                           seed=100 + i)
+        res = simulate_tandem(cfg)
+        T = max(50.0 / mu_b, 2e-4)      # ~50 items per period
+        tc, blocked, _ = sample_periods(res, T, seed=200 + i)
+        hm = HostMonitor(MonitorConfig(), period_s=T)
+        for t, b in zip(tc, blocked):
+            hm.update(float(t), bool(b))
+        if hm.epoch or hm.qbar:
+            errs.append((hm.rate_items_per_s() - mu_b) / mu_b)
+    us = (time.perf_counter() - t0) / n_runs * 1e6
+    errs = np.array(errs)
+    within20 = float(np.mean(np.abs(errs) < 0.20))
+    hist, edges = np.histogram(errs, bins=np.arange(-0.5, 0.55, 0.1))
+    rows = [f"fig13_hist/bin={edges[i]:+.1f},{us:.0f},{hist[i]}"
+            for i in range(len(hist))]
+    rows.append(f"fig13_within20pct,{us:.0f},{within20:.2f}")
+    return rows, (f"{within20:.0%} of {len(errs)} runs within 20% "
+                  "(paper: 'majority within 20%')")
+
+
+def fig15_dual_phase_classification(n_runs: int = 40):
+    """Fig 15: phase classification vs utilization rho."""
+    rng = np.random.default_rng(1)
+    out = {"high": {"Both": 0, "A": 0, "B": 0, "Neither": 0, "n": 0},
+           "low": {"Both": 0, "A": 0, "B": 0, "Neither": 0, "n": 0}}
+    for i in range(n_runs):
+        mu1 = float(rng.uniform(1e5, 4e5))
+        mu2 = mu1 * float(rng.uniform(0.3, 0.6))
+        high = i % 2 == 0
+        mu_a = (mu1 * 2.0) if high else (mu1 * 0.5)
+        cfg = TandemConfig(mu_a=mu_a, mu_b=mu1, mu_b2=mu2, capacity=64,
+                           n_items=120_000, seed=300 + i)
+        res = simulate_tandem(cfg)
+        T = max(50.0 / mu1, 2e-4)
+        tc, blocked, _ = sample_periods(res, T, seed=400 + i)
+        hm = HostMonitor(MonitorConfig(), period_s=T)
+        ests = []
+        for t, b in zip(tc, blocked):
+            if hm.update(float(t), bool(b)):
+                ests.append(hm.last_qbar / T)
+        got1 = any(abs(e - mu1) / mu1 < 0.25 for e in ests[:max(
+            len(ests) // 2, 1)])
+        got2 = any(abs(e - mu2) / mu2 < 0.25 for e in ests[len(
+            ests) // 2:])
+        key = "high" if high else "low"
+        cls = ("Both" if got1 and got2 else "A" if got1
+               else "B" if got2 else "Neither")
+        out[key][cls] += 1
+        out[key]["n"] += 1
+    rows = []
+    for key in ("high", "low"):
+        n = max(out[key]["n"], 1)
+        rows.append(f"fig15_classify/rho={key},0,"
+                    + "|".join(f"{c}={out[key][c]}" for c in
+                               ("Both", "A", "B", "Neither")))
+    hb = out["high"]["Both"] / max(out["high"]["n"], 1)
+    lb = out["low"]["Both"] / max(out["low"]["n"], 1)
+    return rows, (f"Both-phase detection: high-rho {hb:.0%} >= "
+                  f"low-rho {lb:.0%} (paper: high rho classifies better)")
+
+
+def table_overhead():
+    """Paper VI: instrumentation overhead is 1-2%."""
+    import threading
+    from repro.streams import Pipeline, Stage
+
+    def work(x):
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < 10e-6:
+            pass
+        return x
+
+    def run(monitored: bool):
+        pipe = Pipeline([Stage("src", source=range(20_000)),
+                         Stage("w", fn=work)], capacity=64,
+                        base_period_s=2e-3)
+        if not monitored:
+            pipe.monitor = type("_N", (), {
+                "start": lambda s: None, "stop": lambda s: None})()
+        t0 = time.perf_counter()
+        out = pipe.run_collect(timeout_s=120)
+        return time.perf_counter() - t0, len(out)
+
+    t_mon, n1 = run(True)
+    t_raw, n2 = run(False)
+    ovh = (t_mon - t_raw) / t_raw
+    return ([f"table_overhead,0,monitored={t_mon:.2f}s_raw={t_raw:.2f}s"
+             f"_overhead={ovh:+.1%}"],
+            f"monitor overhead {ovh:+.1%} (paper: 1-2%)")
+
+
+def controller_buffer_sizing():
+    """Closing the loop: Eq-1-chosen T -> monitored mu -> analytic buffer
+    size that achieves target throughput (the paper's motivating use).
+
+    At rho=0.95 a 1 ms period ALWAYS contains a starvation (Eq 1c:
+    rho^(mu T) ~ 0), so every sample is censored; shortening T until
+    Pr[non-blocking period] ~ 0.5 makes the rate observable — the paper's
+    sampling-period determination in action."""
+    cfg = TandemConfig(mu_a=3.8e5, mu_b=4e5, capacity=4, n_items=80_000)
+    res = simulate_tandem(cfg)
+    rho = cfg.mu_a / cfg.mu_b
+    # censored at T=1ms:
+    _, blocked_1ms, _ = sample_periods(res, 1e-3)
+    # Eq 1: pick T so rho^(mu T) ~ 0.5 (k = ln .5 / ln rho items)
+    k_items_target = np.log(0.5) / np.log(rho)
+    T = float(k_items_target / cfg.mu_b)
+    tc, blocked, _ = sample_periods(res, T)
+    hm = HostMonitor(MonitorConfig(), period_s=T)
+    for t, b in zip(tc, blocked):
+        hm.update(float(t), bool(b))
+    mu_est = hm.rate_items_per_s()
+    k = optimal_buffer_size(cfg.mu_a, max(mu_est, 1.0), target_frac=0.99)
+    thr_before = float(mm1k_throughput(cfg.mu_a, cfg.mu_b, 4))
+    thr_after = float(mm1k_throughput(cfg.mu_a, cfg.mu_b, k))
+    return ([f"controller_buffer,0,censored@1ms={blocked_1ms.mean():.2f}"
+             f"_T={T:.1e}_mu_est={mu_est:.0f}_K={k}"
+             f"_thr_{thr_before:.0f}->{thr_after:.0f}"],
+            f"1ms periods {blocked_1ms.mean():.0%} censored; Eq-1 T="
+            f"{T * 1e6:.0f}us -> mu within "
+            f"{abs(mu_est - cfg.mu_b) / cfg.mu_b:.0%}, K={k} lifts model "
+            f"throughput {(thr_after / thr_before - 1):+.1%}")
+
+
+ALL = [fig2_buffer_sweep, fig3_raw_observations,
+       fig4_nonblocking_probability, fig6_sampling_period,
+       fig8_9_convergence, fig10_dual_phase,
+       fig13_single_phase_histogram, fig15_dual_phase_classification,
+       table_overhead, controller_buffer_sizing]

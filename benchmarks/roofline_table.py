@@ -1,0 +1,53 @@
+"""Roofline table benchmark: reads the dry-run sweep results and prints
+the per-cell three-term roofline (assignment deliverable g)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import pathlib
+
+_DIRS = ("results/dryrun_opt", "results/dryrun")
+
+
+def roofline_rows():
+    rows = []
+    root = pathlib.Path(__file__).resolve().parent.parent
+    found = None
+    for d in _DIRS:
+        if (root / d).exists() and list((root / d).glob("*__single.json")):
+            found = root / d
+            break
+    if found is None:
+        return (["roofline_table,0,no_dryrun_results_found_run_"
+                 "repro.launch.sweep"],
+                "run PYTHONPATH=src python -m repro.launch.sweep first")
+    n_ok = n_skip = 0
+    fracs = []
+    for f in sorted(found.glob("*__single.json")):
+        r = json.loads(pathlib.Path(f).read_text())
+        tag = f.name.replace("__single.json", "")
+        if r["status"] == "skipped":
+            n_skip += 1
+            rows.append(f"roofline/{tag},0,skipped")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"roofline/{tag},0,ERROR")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        frac = rf.get("decode_bw_fraction") or rf["roofline_fraction"]
+        fracs.append(frac)
+        rows.append(
+            f"roofline/{tag},{r.get('compile_s', 0)},"
+            f"comp={rf['compute_s']:.3f}s|mem={rf['memory_s']:.3f}s|"
+            f"coll={rf['collective_s']:.3f}s|dom={rf['dominant']}|"
+            f"frac={frac:.3f}")
+    import numpy as np
+    gm = float(np.exp(np.mean(np.log(np.maximum(fracs, 1e-4))))) \
+        if fracs else 0.0
+    return rows, (f"{n_ok} cells ok, {n_skip} skipped; geomean roofline "
+                  f"fraction {gm:.3f} ({found.name})")
+
+
+ALL = [roofline_rows]

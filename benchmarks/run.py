@@ -1,0 +1,38 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows plus a per-benchmark verdict vs the paper's claim.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import apps, kernel_bench, paper_figs, roofline_table
+
+    suites = [("paper", paper_figs.ALL), ("apps", apps.ALL),
+              ("kernels", kernel_bench.ALL),
+              ("roofline", roofline_table.ALL)]
+    print("name,us_per_call,derived")
+    n_fail = 0
+    t0 = time.time()
+    for suite, fns in suites:
+        for fn in fns:
+            try:
+                rows, verdict = fn()
+                for r in rows:
+                    print(r, flush=True)
+                print(f"# VERDICT {suite}/{fn.__name__}: {verdict}",
+                      flush=True)
+            except Exception:  # noqa: BLE001
+                n_fail += 1
+                print(f"# FAILED {suite}/{fn.__name__}:", flush=True)
+                traceback.print_exc()
+    print(f"# done in {time.time() - t0:.0f}s, failures={n_fail}",
+          flush=True)
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: monitor a two-kernel streaming pipeline online.
+
+The paper's Figure 1 setup: kernel A -> queue -> kernel B.  We set B's
+service rate ourselves, then watch the monitor recover it online without
+being told.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+from repro.core.monitor import MonitorConfig
+from repro.streams import Pipeline, Stage
+
+SET_RATE = 20_000  # items/s we secretly give kernel B
+
+
+def kernel_b(x):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < 1.0 / SET_RATE:
+        pass
+    return x * 2
+
+
+def main():
+    pipe = Pipeline(
+        [Stage("A", source=range(60_000)), Stage("B", fn=kernel_b)],
+        capacity=64, base_period_s=2e-3,
+        monitor_cfg=MonitorConfig(window=16, min_q_samples=16))
+    print(f"running pipeline; B's true (hidden) rate = {SET_RATE}/s ...")
+    out = pipe.run_collect(timeout_s=120)
+    print(f"processed {len(out)} items")
+    for name, r in pipe.rates().items():
+        print(f"queue {name}:")
+        print(f"  estimated service rate : {r['service_rate']:.0f}/s")
+        print(f"  converged epochs       : {r['epochs']}")
+        print(f"  blocking fraction      : {r['blocking_frac']:.2f}")
+    est = pipe.rates()["A->B"]["service_rate"]
+    if est:
+        print(f"\nmonitor error vs set rate: "
+              f"{(est - SET_RATE) / SET_RATE:+.1%} "
+              "(paper Fig 13: majority within 20%)")
+
+
+if __name__ == "__main__":
+    main()

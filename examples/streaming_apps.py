@@ -1,0 +1,21 @@
+"""The paper's two full applications (sections V-B/VI) on the streaming
+substrate: matrix multiply (Fig 16) and Rabin-Karp search (Fig 17), with
+their queues monitored online.
+
+  PYTHONPATH=src:. python examples/streaming_apps.py
+"""
+
+from benchmarks.apps import fig16_matmul_app, fig17_rabin_karp
+
+
+def main():
+    for fn in (fig16_matmul_app, fig17_rabin_karp):
+        rows, verdict = fn()
+        print(f"== {fn.__name__}")
+        for r in rows:
+            print("  ", r)
+        print("  verdict:", verdict)
+
+
+if __name__ == "__main__":
+    main()

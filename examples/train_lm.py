@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the monitor-instrumented data pipeline, checkpoint/restart, and the
+service-rate-driven controllers.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.data import DataPipeline, SyntheticLMSource
+from repro.models import build_model
+from repro.train import OptConfig, TrainConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+# ~100M params: 12L x 512 x 8H, d_ff 2048, 32k vocab
+LM_100M = ArchConfig(
+    name="repro-lm-100m", family="dense", n_layers=12, d_model=512,
+    n_heads=8, n_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32_000,
+    rope_mode="rope", mlp_act="swiglu", norm="rmsnorm")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--small", action="store_true",
+                    help="4L/256d variant for quick runs")
+    args = ap.parse_args()
+
+    cfg = LM_100M
+    if args.small:
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256,
+                                  d_ff=1024, n_heads=4, n_kv_heads=2,
+                                  vocab_size=4096)
+    model = build_model(cfg)
+    print(f"arch {cfg.name}: {cfg.n_params() / 1e6:.0f}M params")
+
+    trainer = Trainer(model, TrainerConfig(
+        train=TrainConfig(opt=OptConfig(lr_peak=3e-4, warmup_steps=50,
+                                        total_steps=args.steps),
+                          remat_policy=None),
+        ckpt_dir=args.ckpt, ckpt_every=100, log_every=10))
+    start = trainer.maybe_restore()
+    if start:
+        print(f"auto-resumed from checkpoint at step {start}")
+
+    pipe = DataPipeline(SyntheticLMSource(cfg.vocab_size, doc_len=512),
+                        seq_len=args.seq, batch_size=args.batch,
+                        queue_capacity=8,
+                        max_batches=args.steps + 8).start()
+    t0 = time.time()
+    hist = trainer.fit(iter(pipe), steps=args.steps)
+    dt = time.time() - t0
+    pipe.stop()
+
+    first, last = hist[0], hist[-1]
+    print(f"\nsteps {first['step']}->{last['step']} in {dt:.0f}s "
+          f"({last['steps_per_s']:.2f} steps/s)")
+    print(f"loss {first['loss']:.3f} -> {last['loss']:.3f}")
+    print("data-pipeline service rates (monitor):")
+    for name, r in pipe.rates().items():
+        print(f"  {name}: service={r['service_rate']:.1f}/s "
+              f"arrivals={r['arrival_rate']:.1f}/s epochs={r['epochs']}")
+    print("straggler check:", trainer.ft.rates.stragglers() or "none")
+    print(f"checkpoints: {trainer.ckpt.steps()} in {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

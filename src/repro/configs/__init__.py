@@ -1,0 +1,8 @@
+from repro.configs.base import (ArchConfig, ShapeConfig, SHAPES, applicable,
+                                pad_vocab)
+from repro.configs.registry import (ARCH_IDS, get_config, get_smoke_config,
+                                    get_shape, all_cells)
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "applicable", "pad_vocab",
+           "ARCH_IDS", "get_config", "get_smoke_config", "get_shape",
+           "all_cells"]

@@ -1,0 +1,22 @@
+# The paper's primary contribution: online non-blocking service-rate
+# approximation (Beard & Chamberlain 2015) as a composable JAX module, plus
+# the queueing model and run-time controllers it feeds.
+from repro.core.filters import (gaussian_kernel, log_kernel, convolve_valid,
+                                gaussian_filter_valid, log_filter_valid)
+from repro.core.stats import (Welford, welford_init, welford_update,
+                              welford_merge, welford_mean, welford_variance,
+                              welford_std, welford_stderr, Moments,
+                              moments_init, moments_update, moments_merge,
+                              moments_finalize)
+from repro.core.monitor import (MonitorConfig, MonitorState, MonitorOutput,
+                                monitor_init, monitor_update, run_monitor,
+                                HostMonitor, SamplingPeriodController, Z_95)
+from repro.core.queueing import (pr_nonblocking_read, pr_nonblocking_write,
+                                 mm1k_throughput, mm1k_blocking_prob,
+                                 mm1k_mean_occupancy, optimal_buffer_size)
+from repro.core.controller import (BufferAutotuner, ParallelismController,
+                                   StragglerDetector, DistributionClassifier)
+from repro.core.simulate import (TandemConfig, TandemResult, simulate_tandem,
+                                 sample_periods)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

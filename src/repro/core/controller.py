@@ -1,0 +1,154 @@
+"""Run-time controllers that consume monitored service rates.
+
+This is the paper's "so what": once every queue's non-blocking service rate
+is known online, the run-time can (a) size buffers analytically instead of
+branch-and-bound re-allocating (Fig. 2), (b) make informed duplication /
+parallelization decisions (Gordon et al., Li et al.), and (c) — our
+pod-scale extension — detect stragglers as service-rate phase changes
+(paper Figs. 10/14/15 generalized to per-host step streams).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core import queueing
+from repro.core.stats import Moments, moments_finalize, moments_init, \
+    moments_update
+
+__all__ = [
+    "BufferAutotuner",
+    "ParallelismController",
+    "StragglerDetector",
+    "DistributionClassifier",
+]
+
+
+@dataclasses.dataclass
+class BufferAutotuner:
+    """Analytic queue-capacity controller.
+
+    Given converged estimates of the producer rate (lambda) and consumer
+    rate (mu) of one queue, recommend the smallest capacity K achieving
+    ``target_frac`` of the saturation throughput, with hysteresis so we only
+    re-allocate when the recommendation moves by more than
+    ``resize_factor`` x (re-allocation itself perturbs the system — the
+    paper resizes sparingly and only when informative).
+    """
+    target_frac: float = 0.99
+    resize_factor: float = 1.5
+    min_capacity: int = 4
+    max_capacity: int = 1 << 20
+    current: int = 64
+
+    def recommend(self, lam: float, mu: float, cv2: float = 1.0) -> int:
+        if lam <= 0 or mu <= 0:
+            return self.current
+        k = queueing.optimal_buffer_size(
+            lam, mu, target_frac=self.target_frac, cv2=cv2,
+            max_k=self.max_capacity)
+        return int(np.clip(k, self.min_capacity, self.max_capacity))
+
+    def maybe_resize(self, lam: float, mu: float, cv2: float = 1.0
+                     ) -> tuple[int, bool]:
+        rec = self.recommend(lam, mu, cv2)
+        ratio = rec / max(self.current, 1)
+        if ratio >= self.resize_factor or ratio <= 1.0 / self.resize_factor:
+            self.current = rec
+            return rec, True
+        return self.current, False
+
+
+@dataclasses.dataclass
+class ParallelismController:
+    """Duplication decision: how many copies of a stage keep up with the
+    offered load?  n = ceil(lambda_upstream / mu_stage * headroom)."""
+    headroom: float = 1.2
+    max_replicas: int = 64
+
+    def replicas(self, upstream_rate: float, stage_rate: float) -> int:
+        if stage_rate <= 0:
+            return self.max_replicas
+        n = math.ceil(self.headroom * upstream_rate / stage_rate)
+        return int(np.clip(n, 1, self.max_replicas))
+
+    def should_scale(self, current: int, upstream_rate: float,
+                     stage_rate: float) -> tuple[int, bool]:
+        n = self.replicas(upstream_rate, stage_rate)
+        return n, n != current
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Pod-scale phase-change detector.
+
+    Each host feeds its converged step-rate estimates (q-bar per epoch) in;
+    a host whose latest converged rate drops below ``threshold`` x the fleet
+    median is flagged.  This is exactly the paper's dual-phase detection
+    (Fig. 14) applied across hosts instead of across time.
+    """
+    threshold: float = 0.8
+    min_hosts: int = 4
+
+    def __post_init__(self):
+        self.rates: dict[str, float] = {}
+
+    def report(self, host: str, rate: float) -> None:
+        if rate > 0:
+            self.rates[host] = rate
+
+    def stragglers(self) -> list[str]:
+        if len(self.rates) < self.min_hosts:
+            return []
+        med = float(np.median(list(self.rates.values())))
+        return [h for h, r in self.rates.items()
+                if r < self.threshold * med]
+
+    def healthy_fraction(self) -> float:
+        if not self.rates:
+            return 1.0
+        return 1.0 - len(self.stragglers()) / len(self.rates)
+
+
+class DistributionClassifier:
+    """Paper §VII: stream the service process's moments (Pebay) and classify
+    the distribution so a closed-form model can be selected.
+
+    cv^2 ~ 0   -> 'D'  (deterministic; use M/D/1/K sizing)
+    cv^2 ~ 1   -> 'M'  (exponential; use M/M/1/K sizing)
+    otherwise  -> 'G'  (general; fall back to conservative M/M/1/K)
+    """
+
+    def __init__(self, d_tol: float = 0.25, m_tol: float = 0.35):
+        self.d_tol = d_tol
+        self.m_tol = m_tol
+        self._m: Moments = moments_init()
+
+    def update(self, service_time: float) -> None:
+        self._m = moments_update(self._m, service_time)
+
+    def update_batch(self, service_times) -> None:
+        for s in np.asarray(service_times).ravel():
+            self._m = moments_update(self._m, float(s))
+
+    @property
+    def cv2(self) -> float:
+        return float(moments_finalize(self._m)[4])
+
+    def classify(self) -> str:
+        if float(self._m.count) < 16:
+            return "G"
+        cv2 = self.cv2
+        if cv2 < self.d_tol:
+            return "D"
+        if abs(cv2 - 1.0) < self.m_tol:
+            return "M"
+        return "G"
+
+    def sizing_fn(self) -> Callable:
+        return (queueing.md1k_throughput_approx if self.classify() == "D"
+                else queueing.mm1k_throughput)

@@ -1,0 +1,396 @@
+"""Online non-blocking service-rate monitor — the paper's Algorithm 1.
+
+Pipeline (paper §IV):
+
+  tc sample --[discard blocked states]--> sliding window S (size w)
+     --[Gaussian filter r=2, Eq.2, valid mode]--> S'
+     --[q = mean(S') + 1.64485 * std(S'), Eq.3]--> q stream
+     --[Welford running mean]--> q-bar, sigma(q-bar)
+     --[LoG filter r=1 sigma=.5, Eq.4 over sigma trace; max|.| < tol]-->
+        converged -> emit q-bar, resetStats(), next epoch
+
+Two implementations, same math:
+
+* ``MonitorState`` + ``monitor_update`` — a pure-JAX state machine usable
+  under ``jit`` / ``lax.scan`` (and vmappable across thousands of queues;
+  the Pallas kernel in ``repro.kernels.monitor`` fuses the window stage).
+* ``HostMonitor`` — float64 numpy object used by the real host-side monitor
+  threads in ``repro.streams`` (the paper's per-queue monitor thread).
+
+Rates are maintained in *items per period*; callers convert with
+``rate = q_bar * d_bytes / T_seconds`` exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import filters
+from repro.core.stats import (Welford, welford_init, welford_update,
+                              welford_stderr)
+
+__all__ = [
+    "MonitorConfig",
+    "MonitorState",
+    "MonitorOutput",
+    "monitor_init",
+    "monitor_update",
+    "run_monitor",
+    "HostMonitor",
+    "SamplingPeriodController",
+]
+
+Z_95 = 1.64485  # Eq. 3: standard-normal 95th-percentile multiplier.
+_BIG = 1e30     # finite "not ready" sentinel (inf would NaN through the LoG)
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorConfig:
+    """Tuning knobs; defaults follow the paper where given."""
+    window: int = 32                 # w — sliding window of tc samples
+    gauss_radius: int = 2            # paper: radius 2 ("best balance")
+    gauss_sigma: float = 1.0
+    gauss_normalize: bool = True     # False = verbatim Eq. 2 (sum ~ .9913)
+    quantile_z: float = Z_95
+    conv_window: int = 16            # paper: w <- 16 for convergence
+    log_radius: int = 1              # paper: radius 1
+    log_sigma: float = 0.5           # paper: sigma = 1/2
+    conv_tol: float = 1e-3           # tolerance on filtered sigma trace
+    conv_tol_mode: str = "rel"       # "rel": tol * |q-bar|; "abs": paper's 5e-7
+    sigma_mode: str = "window_std"   # "window_std" | "stderr"
+    min_q_samples: int = 32          # q obs required before testing conv.
+
+    @classmethod
+    def paper_faithful(cls) -> "MonitorConfig":
+        """The constants exactly as printed in the paper (abs 5e-7)."""
+        return cls(conv_tol=5e-7, conv_tol_mode="abs", gauss_normalize=False)
+
+    @property
+    def sig_trace_len(self) -> int:
+        return self.conv_window + 2 * self.log_radius
+
+    def __post_init__(self):
+        if self.window <= 2 * self.gauss_radius:
+            raise ValueError("window must exceed 2*gauss_radius")
+        if self.conv_tol_mode not in ("rel", "abs"):
+            raise ValueError(f"bad conv_tol_mode {self.conv_tol_mode}")
+        if self.sigma_mode not in ("window_std", "stderr"):
+            raise ValueError(f"bad sigma_mode {self.sigma_mode}")
+
+
+class MonitorState(NamedTuple):
+    s_buf: jnp.ndarray       # (window,) sliding tc window S
+    s_fill: jnp.ndarray      # int32, valid entries in s_buf (saturating)
+    q_stats: Welford         # running stats of q -> q-bar
+    qbar_buf: jnp.ndarray    # (conv_window,) recent q-bar values
+    qbar_fill: jnp.ndarray
+    sig_buf: jnp.ndarray     # (sig_trace_len,) trace of sigma(q-bar)
+    sig_fill: jnp.ndarray
+    epoch: jnp.ndarray       # int32, completed convergences
+    last_qbar: jnp.ndarray   # last converged estimate (items/period)
+    n_total: jnp.ndarray     # int32 diagnostics
+    n_blocked: jnp.ndarray
+
+
+class MonitorOutput(NamedTuple):
+    q: jnp.ndarray           # this step's Eq.3 quantile (0 until window full)
+    qbar: jnp.ndarray        # running mean of q
+    sigma_qbar: jnp.ndarray  # stability statistic
+    converged: jnp.ndarray   # bool — emitted this step
+    estimate: jnp.ndarray    # last converged q-bar (items/period)
+    epoch: jnp.ndarray
+
+
+def monitor_init(cfg: MonitorConfig, dtype=jnp.float32) -> MonitorState:
+    i0 = jnp.zeros((), jnp.int32)
+    f0 = jnp.zeros((), dtype)
+    return MonitorState(
+        s_buf=jnp.zeros((cfg.window,), dtype),
+        s_fill=i0,
+        q_stats=welford_init(dtype),
+        qbar_buf=jnp.zeros((cfg.conv_window,), dtype),
+        qbar_fill=i0,
+        sig_buf=jnp.zeros((cfg.sig_trace_len,), dtype),
+        sig_fill=i0,
+        epoch=i0,
+        last_qbar=f0,
+        n_total=i0,
+        n_blocked=i0,
+    )
+
+
+def _push(buf, x, do_push):
+    """Shift-push x into a chronological buffer iff do_push (jit-safe)."""
+    pushed = jnp.concatenate([buf[1:], jnp.reshape(x, (1,)).astype(buf.dtype)])
+    return jnp.where(do_push, pushed, buf)
+
+
+def _where_tree(cond, new, old):
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(cond, n, o), new, old)
+
+
+def monitor_update(cfg: MonitorConfig, state: MonitorState, tc, blocked
+                   ) -> tuple[MonitorState, MonitorOutput]:
+    """One sampling period: ingest (tc, blocked), advance Algorithm 1."""
+    dtype = state.s_buf.dtype
+    tc = jnp.asarray(tc, dtype)
+    blocked = jnp.asarray(blocked, jnp.bool_)
+    valid = jnp.logical_not(blocked)
+
+    n_total = state.n_total + 1
+    n_blocked = state.n_blocked + blocked.astype(jnp.int32)
+
+    # --- window stage -----------------------------------------------------
+    s_buf = _push(state.s_buf, tc, valid)
+    s_fill = jnp.minimum(state.s_fill + valid.astype(jnp.int32), cfg.window)
+    window_ready = jnp.logical_and(valid, s_fill >= cfg.window)
+
+    s_prime = filters.gaussian_filter_valid(
+        s_buf, cfg.gauss_radius, cfg.gauss_sigma,
+        normalize=cfg.gauss_normalize)
+    mu_sp = jnp.mean(s_prime)
+    sd_sp = jnp.std(s_prime)
+    q = mu_sp + jnp.asarray(cfg.quantile_z, dtype) * sd_sp  # Eq. 3
+
+    # --- q-bar stage (Welford) --------------------------------------------
+    q_stats = _where_tree(window_ready,
+                          welford_update(state.q_stats, q), state.q_stats)
+    qbar = q_stats.mean
+
+    qbar_buf = _push(state.qbar_buf, qbar, window_ready)
+    qbar_fill = jnp.minimum(state.qbar_fill + window_ready.astype(jnp.int32),
+                            cfg.conv_window)
+
+    if cfg.sigma_mode == "stderr":
+        sigma_qbar = welford_stderr(q_stats)
+    else:  # std of the recent q-bar trajectory — its decay *is* stability
+        have = qbar_fill >= cfg.conv_window
+        sigma_qbar = jnp.where(have, jnp.std(qbar_buf),
+                               jnp.asarray(_BIG, dtype))
+
+    sig_buf = _push(state.sig_buf, sigma_qbar, window_ready)
+    sig_fill = jnp.minimum(state.sig_fill + window_ready.astype(jnp.int32),
+                           cfg.sig_trace_len)
+
+    # --- convergence stage (Eq. 4) ----------------------------------------
+    filt = filters.log_filter_valid(sig_buf, cfg.log_radius, cfg.log_sigma)
+    resp = jnp.max(jnp.abs(filt))
+    tol = jnp.asarray(cfg.conv_tol, dtype)
+    if cfg.conv_tol_mode == "rel":
+        tol = tol * jnp.maximum(jnp.abs(qbar), jnp.asarray(1e-12, dtype))
+    trace_ready = jnp.logical_and(sig_fill >= cfg.sig_trace_len,
+                                  q_stats.count >= cfg.min_q_samples)
+    finite = jnp.isfinite(resp)
+    converged = window_ready & trace_ready & finite & (resp < tol)
+
+    # --- emit + resetStats() ----------------------------------------------
+    last_qbar = jnp.where(converged, qbar, state.last_qbar)
+    epoch = state.epoch + converged.astype(jnp.int32)
+    fresh = monitor_init(cfg, dtype)
+    q_stats = _where_tree(converged, fresh.q_stats, q_stats)
+    qbar_buf = jnp.where(converged, fresh.qbar_buf, qbar_buf)
+    qbar_fill = jnp.where(converged, fresh.qbar_fill, qbar_fill)
+    sig_buf = jnp.where(converged, fresh.sig_buf, sig_buf)
+    sig_fill = jnp.where(converged, fresh.sig_fill, sig_fill)
+
+    new_state = MonitorState(
+        s_buf=s_buf, s_fill=s_fill, q_stats=q_stats,
+        qbar_buf=qbar_buf, qbar_fill=qbar_fill,
+        sig_buf=sig_buf, sig_fill=sig_fill,
+        epoch=epoch, last_qbar=last_qbar,
+        n_total=n_total, n_blocked=n_blocked)
+    out = MonitorOutput(
+        q=jnp.where(window_ready, q, jnp.zeros((), dtype)),
+        qbar=qbar,
+        sigma_qbar=sigma_qbar,
+        converged=converged,
+        estimate=last_qbar,
+        epoch=epoch)
+    return new_state, out
+
+
+def run_monitor(cfg: MonitorConfig, tc_seq, blocked_seq=None,
+                dtype=jnp.float32) -> MonitorOutput:
+    """Drive the monitor over a whole sample stream with ``lax.scan``.
+
+    Returns stacked ``MonitorOutput`` (leading time axis).  Used by tests,
+    benchmarks, and the batched (vmapped) fleet monitor.
+    """
+    tc_seq = jnp.asarray(tc_seq, dtype)
+    if blocked_seq is None:
+        blocked_seq = jnp.zeros(tc_seq.shape, jnp.bool_)
+    else:
+        blocked_seq = jnp.asarray(blocked_seq, jnp.bool_)
+
+    def step(state, xs):
+        tc, blk = xs
+        return monitor_update(cfg, state, tc, blk)
+
+    _, outs = jax.lax.scan(step, monitor_init(cfg, dtype),
+                           (tc_seq, blocked_seq))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Host-side implementation (the paper's monitor thread), float64 numpy.
+# ---------------------------------------------------------------------------
+
+class HostMonitor:
+    """Per-queue online monitor for the host pipeline threads.
+
+    Same algorithm as ``monitor_update`` in float64; kept dependency-light
+    (numpy only) because it runs on the instrumentation thread and must obey
+    the paper's low-overhead contract (1-2%).
+    """
+
+    def __init__(self, cfg: MonitorConfig | None = None, *,
+                 period_s: float = 1e-3, item_bytes: float = 1.0):
+        self.cfg = cfg or MonitorConfig()
+        self.period_s = float(period_s)
+        self.item_bytes = float(item_bytes)
+        c = self.cfg
+        self._gauss = filters.gaussian_kernel(
+            c.gauss_radius, c.gauss_sigma, normalize=c.gauss_normalize)
+        self._log = filters.log_kernel(c.log_radius, c.log_sigma)
+        self.n_total = 0
+        self.n_blocked = 0
+        self.epoch = 0
+        self.last_qbar = 0.0
+        self.estimates: list[float] = []   # converged q-bar per epoch
+        self._s = np.zeros(c.window)
+        self._s_fill = 0
+        self._reset_stats()
+
+    # -- Algorithm 1's resetStats() ----------------------------------------
+    def _reset_stats(self):
+        self._n = 0
+        self._mean = 0.0
+        self._m2 = 0.0
+        self._qbars: list[float] = []
+        self._sigs: list[float] = []
+
+    def update(self, tc: float, blocked: bool = False) -> bool:
+        """Ingest one period's sample; returns True if converged+emitted."""
+        c = self.cfg
+        self.n_total += 1
+        if blocked:
+            self.n_blocked += 1
+            return False
+        self._s[:-1] = self._s[1:]
+        self._s[-1] = tc
+        self._s_fill = min(self._s_fill + 1, c.window)
+        if self._s_fill < c.window:
+            return False
+
+        sp = filters.convolve_valid(self._s, self._gauss)
+        q = float(np.mean(sp) + c.quantile_z * np.std(sp))
+
+        self._n += 1
+        delta = q - self._mean
+        self._mean += delta / self._n
+        self._m2 += delta * (q - self._mean)
+        qbar = self._mean
+
+        self._qbars.append(qbar)
+        if len(self._qbars) > c.conv_window:
+            self._qbars.pop(0)
+        if c.sigma_mode == "stderr":
+            sig = math.sqrt(self._m2 / self._n / self._n) if self._n else 0.0
+        else:
+            sig = (float(np.std(self._qbars))
+                   if len(self._qbars) >= c.conv_window else _BIG)
+        self._sigs.append(sig)
+        if len(self._sigs) > c.sig_trace_len:
+            self._sigs.pop(0)
+
+        if (len(self._sigs) < c.sig_trace_len
+                or self._n < c.min_q_samples):
+            return False
+        filt = filters.convolve_valid(np.asarray(self._sigs), self._log)
+        resp = float(np.max(np.abs(filt)))
+        if not math.isfinite(resp):
+            return False
+        tol = c.conv_tol * (max(abs(qbar), 1e-12)
+                            if c.conv_tol_mode == "rel" else 1.0)
+        if resp >= tol:
+            return False
+
+        self.last_qbar = qbar
+        self.estimates.append(qbar)
+        self.epoch += 1
+        self._reset_stats()
+        return True
+
+    # -- readouts ------------------------------------------------------------
+    @property
+    def qbar(self) -> float:
+        return self._mean if self._n else self.last_qbar
+
+    def rate_items_per_s(self) -> float:
+        q = self.last_qbar if self.epoch else self.qbar
+        return q / self.period_s if self.period_s > 0 else 0.0
+
+    def rate_bytes_per_s(self) -> float:
+        return self.rate_items_per_s() * self.item_bytes
+
+    def observed_blocking_fraction(self) -> float:
+        return self.n_blocked / self.n_total if self.n_total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Sampling-period determination (paper §IV-A).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SamplingPeriodController:
+    """Find the widest stable sampling period T (paper Fig. 6).
+
+    Start at the timing mechanism's minimum latency and lengthen T while
+    (1) no blockage occurred at either queue end in the last ``k`` periods
+    and (2) the realized period stayed within ``eps`` of target for the last
+    ``j`` periods.  If T cannot stabilize at the minimum, the method *fails
+    knowingly* (``failed`` is set) — the paper's stated behavior.
+    """
+    base_latency_s: float = 300e-9     # paper: ~50-300 ns timer latency
+    max_period_s: float = 10e-3        # ~ scheduler quantum
+    k_no_block: int = 8
+    j_stable: int = 8
+    eps_rel: float = 0.25
+    growth: float = 2.0
+
+    def __post_init__(self):
+        self.period_s = self.base_latency_s
+        self._no_block_run = 0
+        self._stable_run = 0
+        self._unstable_run = 0
+        self.failed = False
+
+    def observe(self, realized_period_s: float, blocked: bool) -> float:
+        """Report one period's outcome; returns the (possibly new) T."""
+        stable = (abs(realized_period_s - self.period_s)
+                  <= self.eps_rel * self.period_s)
+        self._stable_run = self._stable_run + 1 if stable else 0
+        self._unstable_run = 0 if stable else self._unstable_run + 1
+        self._no_block_run = 0 if blocked else self._no_block_run + 1
+
+        if (self._no_block_run >= self.k_no_block
+                and self._stable_run >= self.j_stable
+                and self.period_s * self.growth <= self.max_period_s):
+            self.period_s *= self.growth
+            self._no_block_run = 0
+            self._stable_run = 0
+        elif self._unstable_run >= self.j_stable:
+            if self.period_s <= self.base_latency_s * 1.0001:
+                self.failed = True     # cannot stabilize even at minimum
+            else:
+                self.period_s = max(self.period_s / self.growth,
+                                    self.base_latency_s)
+            self._unstable_run = 0
+        return self.period_s

@@ -1,0 +1,133 @@
+"""Queueing model: paper Eq. 1 plus the M/M/1/K machinery the run-time uses.
+
+Eq. 1 (a Kleinrock-derived modification) gives the probability of observing a
+*non-blocking* read / write over a sampling period T for an M/M/1 station —
+the quantity that determines whether the monitor can see the latent service
+rate at all (paper Fig. 4), and which drives the sampling-period controller.
+
+The buffer-sizing functions below are what ``core.controller.BufferAutotuner``
+uses to turn two monitored service rates (producer lambda, consumer mu) into
+a queue capacity, replacing branch-and-bound reallocation — the paper's
+motivating use case (Fig. 2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "k_items",
+    "pr_nonblocking_read",
+    "pr_nonblocking_write",
+    "mm1k_blocking_prob",
+    "mm1k_throughput",
+    "mm1k_mean_occupancy",
+    "md1k_throughput_approx",
+    "optimal_buffer_size",
+]
+
+
+def k_items(mu_s, T):
+    """Eq. 1a: k = ceil(mu_s * T) — items the server consumes during T."""
+    return jnp.ceil(mu_s * T)
+
+
+def pr_nonblocking_read(T, rho, mu_s):
+    """Eq. 1b/1c: Pr[READ](T, rho, mu_s) = rho^k with k = ceil(mu_s T).
+
+    Probability that the in-bound queue holds at least the k items the server
+    needs for the whole period (so no read ever blocks during T).
+    """
+    k = k_items(mu_s, T)
+    return jnp.asarray(rho, dtype=jnp.result_type(float)) ** k
+
+
+def pr_nonblocking_write(T, C, rho, mu_s):
+    """Eq. 1d: 1 - rho^(C - k + 1) if C >= mu_s*T else 0.
+
+    Probability the out-bound queue (capacity C) retains space for the
+    server's entire output over the period.
+    """
+    k = k_items(mu_s, T)
+    rho = jnp.asarray(rho, dtype=jnp.result_type(float))
+    p = 1.0 - rho ** (C - k + 1.0)
+    return jnp.where(C >= mu_s * T, p, 0.0)
+
+
+def mm1k_blocking_prob(lam, mu, K):
+    """P_K for M/M/1/K: probability an arrival finds the buffer full."""
+    rho = lam / mu
+    # rho == 1 limit: P_K = 1/(K+1)
+    near1 = jnp.abs(rho - 1.0) < 1e-9
+    safe_rho = jnp.where(near1, 0.5, rho)
+    p = (1.0 - safe_rho) * safe_rho ** K / (1.0 - safe_rho ** (K + 1.0))
+    return jnp.where(near1, 1.0 / (K + 1.0), p)
+
+
+def mm1k_throughput(lam, mu, K):
+    """Accepted throughput of an M/M/1/K station: lam * (1 - P_K)."""
+    return lam * (1.0 - mm1k_blocking_prob(lam, mu, K))
+
+
+def mm1k_mean_occupancy(lam, mu, K):
+    rho = lam / mu
+    near1 = jnp.abs(rho - 1.0) < 1e-9
+    safe_rho = jnp.where(near1, 0.5, rho)
+    n = (safe_rho / (1.0 - safe_rho)
+         - (K + 1.0) * safe_rho ** (K + 1.0) / (1.0 - safe_rho ** (K + 1.0)))
+    return jnp.where(near1, K / 2.0, n)
+
+
+def md1k_throughput_approx(lam, mu, K):
+    """M/D/1/K accepted-throughput approximation.
+
+    Deterministic service halves queueing variability; we use the standard
+    two-moment interpolation (a G/M/1-style cv^2 scaling of the M/M/1/K
+    blocking exponent).  Selected by the distribution classifier when the
+    monitored service process looks deterministic (cv^2 ~ 0).
+    """
+    rho = lam / mu
+    # Effective capacity grows ~2x for D service (Kramer/Langenbach-Belz
+    # style two-moment correction with cv^2 = 0 -> exponent doubles).
+    K_eff = 2.0 * K - 1.0
+    return mm1k_throughput(lam, mu, K_eff)
+
+
+def optimal_buffer_size(lam, mu, *, target_frac: float = 0.99,
+                        max_k: int = 1 << 16, cv2: float = 1.0) -> int:
+    """Smallest capacity K whose accepted throughput reaches
+    ``target_frac * min(lam, mu)`` — the analytic replacement for the
+    paper's branch-and-bound buffer search.
+
+    ``cv2`` (squared coefficient of variation of the *service* process,
+    from the streaming moment estimator) selects between the M/M/1/K
+    (cv2 >= 0.5) and M/D/1/K (cv2 < 0.5) models.
+    """
+    lam = float(lam)
+    mu = float(mu)
+    if lam <= 0 or mu <= 0:
+        return 1
+    target = target_frac * min(lam, mu)
+    thr_fn = mm1k_throughput if cv2 >= 0.5 else md1k_throughput_approx
+    # Galloping + binary search on monotone thr(K).
+    lo, hi = 1, 2
+    while hi < max_k and float(thr_fn(lam, mu, hi)) < target:
+        lo, hi = hi, hi * 2
+    hi = min(hi, max_k)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if float(thr_fn(lam, mu, mid)) >= target:
+            hi = mid
+        else:
+            lo = mid + 1
+    return int(lo)
+
+
+def expected_nonblocking_fraction(T, C, rho, mu_s) -> float:
+    """Joint probability that a whole period is non-blocking at both ends
+    (independence approximation) — used by the sampling-period controller to
+    predict whether a candidate T can ever yield usable samples."""
+    pr = float(np.asarray(pr_nonblocking_read(T, rho, mu_s)))
+    pw = float(np.asarray(pr_nonblocking_write(T, C, rho, mu_s)))
+    return pr * pw

@@ -1,0 +1,153 @@
+"""Streaming statistics: Welford/Chan mean+variance and Pebay higher moments.
+
+The paper's Algorithm 1 presumes "an implementation of a streaming mean and
+standard deviation (see Welford and Chan et al.)" — updateStats(),
+updateMeanQ(), resetStats().  Section VII additionally proposes streaming
+higher moments (Pebay, SAND2008-6212) so the run-time can classify the
+service process distribution; we implement those too and use them in
+``core.controller.DistributionClassifier``.
+
+All states are NamedTuples of scalars, so they are jit/scan-compatible
+pytrees and equally usable with python floats or numpy float64 on the host
+monitor threads.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "Welford",
+    "welford_init",
+    "welford_update",
+    "welford_merge",
+    "welford_mean",
+    "welford_variance",
+    "welford_std",
+    "welford_stderr",
+    "Moments",
+    "moments_init",
+    "moments_update",
+    "moments_merge",
+    "moments_finalize",
+]
+
+
+class Welford(NamedTuple):
+    count: jnp.ndarray  # float scalar (float keeps it one dtype in scan)
+    mean: jnp.ndarray
+    m2: jnp.ndarray
+
+
+def welford_init(dtype=jnp.float32) -> Welford:
+    z = jnp.zeros((), dtype=dtype)
+    return Welford(count=z, mean=z, m2=z)
+
+
+def welford_update(state: Welford, x) -> Welford:
+    """Single-observation update (Welford 1962)."""
+    count = state.count + 1.0
+    delta = x - state.mean
+    mean = state.mean + delta / count
+    m2 = state.m2 + delta * (x - mean)
+    return Welford(count=count, mean=mean, m2=m2)
+
+
+def welford_merge(a: Welford, b: Welford) -> Welford:
+    """Pairwise merge (Chan, Golub & LeVeque 1983) — used to combine
+    per-host monitor statistics across a pod without shipping raw samples."""
+    count = a.count + b.count
+    # Guard the empty-merge case without python control flow.
+    safe = jnp.where(count > 0, count, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / safe)
+    m2 = a.m2 + b.m2 + delta * delta * (a.count * b.count / safe)
+    return Welford(count=count, mean=mean, m2=m2)
+
+
+def welford_mean(state: Welford):
+    return state.mean
+
+
+def welford_variance(state: Welford, ddof: int = 0):
+    denom = state.count - ddof
+    return jnp.where(denom > 0, state.m2 / jnp.where(denom > 0, denom, 1.0), 0.0)
+
+
+def welford_std(state: Welford, ddof: int = 0):
+    return jnp.sqrt(welford_variance(state, ddof))
+
+
+def welford_stderr(state: Welford):
+    """Standard error of the running mean — the paper's sigma(q-bar)."""
+    var = welford_variance(state, ddof=0)
+    n = jnp.where(state.count > 0, state.count, 1.0)
+    return jnp.sqrt(var / n)
+
+
+class Moments(NamedTuple):
+    """One-pass central moments up to order 4 (Pebay 2008)."""
+    count: jnp.ndarray
+    mean: jnp.ndarray
+    m2: jnp.ndarray
+    m3: jnp.ndarray
+    m4: jnp.ndarray
+
+
+def moments_init(dtype=jnp.float32) -> Moments:
+    z = jnp.zeros((), dtype=dtype)
+    return Moments(count=z, mean=z, m2=z, m3=z, m4=z)
+
+
+def moments_update(s: Moments, x) -> Moments:
+    n1 = s.count
+    n = s.count + 1.0
+    delta = x - s.mean
+    delta_n = delta / n
+    delta_n2 = delta_n * delta_n
+    term1 = delta * delta_n * n1
+    mean = s.mean + delta_n
+    m4 = (s.m4 + term1 * delta_n2 * (n * n - 3.0 * n + 3.0)
+          + 6.0 * delta_n2 * s.m2 - 4.0 * delta_n * s.m3)
+    m3 = s.m3 + term1 * delta_n * (n - 2.0) - 3.0 * delta_n * s.m2
+    m2 = s.m2 + term1
+    return Moments(count=n, mean=mean, m2=m2, m3=m3, m4=m4)
+
+
+def moments_merge(a: Moments, b: Moments) -> Moments:
+    n = a.count + b.count
+    safe = jnp.where(n > 0, n, 1.0)
+    delta = b.mean - a.mean
+    delta2 = delta * delta
+    delta3 = delta2 * delta
+    delta4 = delta2 * delta2
+    na, nb = a.count, b.count
+    mean = a.mean + delta * nb / safe
+    m2 = a.m2 + b.m2 + delta2 * na * nb / safe
+    m3 = (a.m3 + b.m3
+          + delta3 * na * nb * (na - nb) / (safe * safe)
+          + 3.0 * delta * (na * b.m2 - nb * a.m2) / safe)
+    m4 = (a.m4 + b.m4
+          + delta4 * na * nb * (na * na - na * nb + nb * nb) / (safe ** 3)
+          + 6.0 * delta2 * (na * na * b.m2 + nb * nb * a.m2) / (safe * safe)
+          + 4.0 * delta * (na * b.m3 - nb * a.m3) / safe)
+    return Moments(count=n, mean=mean, m2=m2, m3=m3, m4=m4)
+
+
+def moments_finalize(s: Moments):
+    """Return (mean, variance, skewness, kurtosis_excess, cv2).
+
+    cv2 = squared coefficient of variation of the sample — the statistic the
+    distribution classifier thresholds on (exponential: cv2 ~ 1,
+    deterministic: cv2 ~ 0).
+    """
+    n = jnp.where(s.count > 0, s.count, 1.0)
+    var = s.m2 / n
+    safe_var = jnp.where(var > 0, var, 1.0)
+    skew = jnp.where(var > 0, (s.m3 / n) / safe_var ** 1.5, 0.0)
+    kurt = jnp.where(var > 0, (s.m4 / n) / (safe_var * safe_var) - 3.0, 0.0)
+    mean_sq = jnp.where(s.mean != 0, s.mean * s.mean, 1.0)
+    cv2 = jnp.where(s.mean != 0, var / mean_sq, 0.0)
+    return s.mean, var, skew, kurt, cv2

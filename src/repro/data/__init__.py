@@ -1,0 +1,5 @@
+from repro.data.pipeline import (SyntheticLMSource, TextFileSource,
+                                 DataPipeline, pack_tokens)
+
+__all__ = ["SyntheticLMSource", "TextFileSource", "DataPipeline",
+           "pack_tokens"]

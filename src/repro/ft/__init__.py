@@ -1,0 +1,6 @@
+from repro.ft.failures import (HeartbeatRegistry, HostRateTracker,
+                               ElasticPlan, plan_elastic_mesh,
+                               FaultToleranceManager)
+
+__all__ = ["HeartbeatRegistry", "HostRateTracker", "ElasticPlan",
+           "plan_elastic_mesh", "FaultToleranceManager"]

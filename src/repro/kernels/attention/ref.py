@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (causal GQA forward)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (B,S,H,hd) k/v: (B,T,K,hd), H % K == 0 -> (B,S,H,hd) float32."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: fused batched service-rate window estimator.
+
+One launch evaluates the Gaussian-filter -> mean/std -> 95th-quantile
+stage for a (Q, w) block of queue windows resident in VMEM.  The 5-tap
+stencil is unrolled as shifted-slice multiply-adds (pure VPU work, w is
+the 128-lane dimension); the two reductions are lane reductions.  Block
+shape (BQ x w) is chosen so BQ is a multiple of 8 (sublane) and w a
+multiple of 128 when possible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.filters import gaussian_kernel
+from repro.core.monitor import Z_95
+
+__all__ = ["monitor_kernel", "batched_monitor_pallas"]
+
+
+def monitor_kernel(win_ref, q_ref, mu_ref, sd_ref, *, taps, n_out, z):
+    w = win_ref[...].astype(jnp.float32)            # (BQ, W)
+    acc = w[:, 0:n_out] * taps[0]
+    for i in range(1, len(taps)):
+        acc = acc + w[:, i:i + n_out] * taps[i]     # 5-tap stencil
+    mu = jnp.mean(acc, axis=1)
+    var = jnp.mean(acc * acc, axis=1) - mu * mu
+    sd = jnp.sqrt(jnp.maximum(var, 0.0))
+    q_ref[...] = mu + z * sd
+    mu_ref[...] = mu
+    sd_ref[...] = sd
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "sigma", "z",
+                                             "block_q", "interpret"))
+def batched_monitor_pallas(windows, *, radius: int = 2, sigma: float = 1.0,
+                           z: float = Z_95, block_q: int = 256,
+                           interpret: bool = True):
+    """windows: (Q, w) -> (q, mu, sd).  Q padded to a block multiple."""
+    Q, W = windows.shape
+    taps = tuple(float(t) for t in
+                 gaussian_kernel(radius, sigma, normalize=True))
+    n_out = W - 2 * radius
+    BQ = min(block_q, max(8, Q))
+    Qp = ((Q + BQ - 1) // BQ) * BQ
+    if Qp != Q:
+        windows = jnp.pad(windows, ((0, Qp - Q), (0, 0)))
+
+    kernel = functools.partial(monitor_kernel, taps=taps, n_out=n_out,
+                               z=float(z))
+    out_shape = [jax.ShapeDtypeStruct((Qp,), jnp.float32)] * 3
+    q, mu, sd = pl.pallas_call(
+        kernel,
+        grid=(Qp // BQ,),
+        in_specs=[pl.BlockSpec((BQ, W), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((BQ,), lambda i: (i,))] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(windows.astype(jnp.float32))
+    return q[:Q], mu[:Q], sd[:Q]

@@ -1,0 +1,41 @@
+"""Public op: fleet-scale batched monitor update.
+
+``fleet_monitor_q(windows)`` evaluates Eq. 2+3 of the paper for a batch of
+queue windows in one fused kernel launch (Pallas on TPU; interpret mode on
+CPU).  ``fleet_monitor_step`` additionally folds the result into running
+Welford states for q-bar, vmapped across queues — the full Algorithm-1
+inner loop for the whole fleet.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.stats import Welford, welford_update
+from repro.kernels.monitor.kernel import batched_monitor_pallas
+from repro.kernels.monitor.ref import batched_monitor_ref
+
+__all__ = ["fleet_monitor_q", "fleet_monitor_step", "batched_monitor_ref"]
+
+
+def fleet_monitor_q(windows, *, use_pallas: bool = True,
+                    interpret: bool = True):
+    """(Q, w) windows -> (Q,) Eq.3 quantile estimates."""
+    if use_pallas:
+        q, _, _ = batched_monitor_pallas(windows, interpret=interpret)
+        return q
+    q, _, _ = batched_monitor_ref(windows)
+    return q
+
+
+def fleet_monitor_step(windows, welford: Welford, *,
+                       use_pallas: bool = True, interpret: bool = True):
+    """One fleet monitoring tick: (Q,w) windows + vector Welford state
+    (leaves shaped (Q,)) -> (q, new_state, sigma_qbar)."""
+    q = fleet_monitor_q(windows, use_pallas=use_pallas,
+                        interpret=interpret)
+    new_state = jax.vmap(welford_update)(welford, q)
+    n = jnp.maximum(new_state.count, 1.0)
+    sigma_qbar = jnp.sqrt(jnp.maximum(new_state.m2, 0.0) / n / n)
+    return q, new_state, sigma_qbar

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the batched monitor kernel.
+
+Computes, for Q queues at once, the window stage of Algorithm 1:
+  S' = valid Gaussian(r=2) filter of each row
+  q  = mean(S') + z * std(S')
+This is the per-sample hot loop of the paper generalized to the 10^4-10^5
+queues a pod-scale runtime monitors (DESIGN.md sections 2-3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import gaussian_kernel
+from repro.core.monitor import Z_95
+
+__all__ = ["batched_monitor_ref"]
+
+
+def batched_monitor_ref(windows, *, radius: int = 2, sigma: float = 1.0,
+                        z: float = Z_95):
+    """windows: (Q, w) -> (q, mu, sd) each (Q,) float32."""
+    w = jnp.asarray(windows, jnp.float32)
+    taps = np.asarray(gaussian_kernel(radius, sigma, normalize=True),
+                      np.float32)
+    n_out = w.shape[-1] - (2 * radius)
+    acc = jnp.zeros(w.shape[:-1] + (n_out,), jnp.float32)
+    for i in range(2 * radius + 1):
+        acc = acc + w[..., i:i + n_out] * taps[i]
+    mu = jnp.mean(acc, axis=-1)
+    sd = jnp.std(acc, axis=-1)
+    return mu + jnp.float32(z) * sd, mu, sd

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel.
+
+Given one chunk of SSD inputs, produce the intra-chunk output, the chunk
+state contribution, and the chunk decay — exactly the quantities
+``repro.models.ssm.ssd_chunked`` computes per chunk (the inter-chunk scan
+stays in JAX).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunk_ref"]
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm):
+    """One chunk, one batch element.
+
+    x: (Q,H,P) dt: (Q,H) A: (H,) Bm/Cm: (Q,N)
+    returns (y_intra (Q,H,P), sstate (H,P,N), chunk_decay (H,))
+    """
+    f32 = jnp.float32
+    x, dt = x.astype(f32), dt.astype(f32)
+    Bm, Cm, A = Bm.astype(f32), Cm.astype(f32), A.astype(f32)
+    Q = x.shape[0]
+    a = dt * A                                   # (Q,H)
+    acum = jnp.cumsum(a, axis=0)                 # (Q,H)
+    CB = jnp.einsum("qn,sn->qs", Cm, Bm)         # (Q,Q)
+    diff = acum[:, None, :] - acum[None, :, :]   # (Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[..., None]
+    L = jnp.where(mask, jnp.exp(diff), 0.0)
+    M = CB[..., None] * L * dt[None, :, :]       # (Q,Q,H) source-dt
+    y = jnp.einsum("qsh,shp->qhp", M, x)
+    dte = jnp.exp(acum[-1:, :] - acum)           # (Q,H)
+    sstate = jnp.einsum("qn,qhp->hpn", Bm, x * (dt * dte)[..., None])
+    return y, sstate, jnp.exp(acum[-1])

@@ -1,0 +1,284 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any jax import: jax locks the device
+#   count at first init.  Only the dry-run gets 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell, print memory/cost analysis, derive roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Compiles are pure AOT: inputs are ShapeDtypeStructs, nothing is allocated.
+A cell failing here (sharding mismatch, OOM at compile, unsupported
+collective) is a bug in the system, not in the cell.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import SHAPES, applicable, get_config
+from repro.dist.api import ShardingContext, use_sharding
+from repro.dist.sharding import act_rules, param_rules, param_specs_tree, \
+    resolve_profile, spec_for
+from repro.launch.mesh import make_moe_mesh, make_production_mesh
+from repro.models import build_model
+from repro.roofline.analysis import (HW, model_flops, parse_collective_bytes,
+                                     roofline_report)
+from repro.roofline.analytic import analytic_bytes, analytic_flops
+from repro.roofline.hlo import parse_collectives_hierarchical
+from repro.train import OptConfig, TrainConfig, make_train_state_specs, \
+    make_train_step, pick_optimizer
+
+
+def _batch_shardings(axes_map, specs, ctx):
+    return {k: NamedSharding(ctx.mesh, spec_for(specs[k].shape, axes_map[k],
+                                                ctx.act_rules, ctx.mesh))
+            for k in specs}
+
+
+def lower_cell(arch_id: str, shape_id: str, multi_pod: bool,
+               overrides: dict | None = None,
+               profile: str = "baseline") -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_id]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_id,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why, "profile": profile}
+
+    overrides = overrides or {}
+    a_rules, p_rules, mesh_kind = resolve_profile(profile, cfg, shape.kind,
+                                                  multi_pod)
+    mesh = (make_moe_mesh(multi_pod=multi_pod) if mesh_kind == "moe"
+            else make_production_mesh(multi_pod=multi_pod))
+    n_chips = mesh.devices.size
+    ctx = ShardingContext(mesh, a_rules, p_rules)
+    if "act_rules" in overrides:
+        ctx.act_rules = {**ctx.act_rules, **overrides["act_rules"]}
+    if "param_rules" in overrides:
+        ctx.param_rules = {**ctx.param_rules, **overrides["param_rules"]}
+
+    model = build_model(cfg)
+    t0 = time.time()
+
+    with use_sharding(ctx), mesh:
+        if shape.kind == "train":
+            n_params = cfg.n_params()
+            opt_name = pick_optimizer(n_params)
+            param_dtype = jnp.bfloat16 if n_params > 100e9 else jnp.float32
+            tcfg = TrainConfig(
+                opt=OptConfig(name=opt_name),
+                remat_policy=overrides.get("remat_policy", "full"))
+            step_fn = make_train_step(model, tcfg)
+
+            # state abstract + shardings (param dtype override)
+            abstract, shardings = make_train_state_specs(model, tcfg, ctx)
+            if param_dtype != jnp.float32:
+                abstract["params"] = jax.tree_util.tree_map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, param_dtype),
+                    abstract["params"])
+            batch_abs, batch_axes = model.input_specs(shape)
+            batch_sh = _batch_shardings(batch_axes, batch_abs, ctx)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(shardings, batch_sh),
+                out_shardings=(shardings, None),
+                donate_argnums=(0,),
+            ).lower(abstract, batch_abs)
+            extra = {"optimizer": opt_name,
+                     "param_dtype": str(param_dtype.__name__)}
+            tokens = shape.global_batch * shape.seq_len
+
+        elif shape.kind == "prefill":
+            ap = model.abstract_params(jnp.bfloat16)
+            axes = model.param_axes()
+            p_specs = param_specs_tree(axes, ap, mesh, ctx.param_rules)
+            p_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), p_specs)
+            batch_abs, batch_axes = model.input_specs(shape)
+            batch_sh = _batch_shardings(batch_axes, batch_abs, ctx)
+            # pin the output cache's sharding (batch x cache_seq), else the
+            # propagated layout can leave it 16x under-sharded
+            cache_abs, cache_axes = model.cache_spec(shape.global_batch,
+                                                     shape.seq_len)
+            is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+                a is None or isinstance(a, str) for a in x)
+            cache_sh = jax.tree_util.tree_map(
+                lambda a, s: NamedSharding(
+                    mesh, spec_for(s.shape, a, ctx.act_rules, mesh)),
+                cache_axes, cache_abs, is_leaf=is_axes)
+            logit_sh = NamedSharding(
+                mesh, spec_for((shape.global_batch, 1, cfg.padded_vocab),
+                               ("batch", "seq", "vocab"), ctx.act_rules,
+                               mesh))
+            lowered = jax.jit(
+                model.prefill,
+                in_shardings=(p_sh, batch_sh),
+                out_shardings=(logit_sh, cache_sh),
+            ).lower(ap, batch_abs)
+            extra = {}
+            tokens = shape.global_batch * shape.seq_len
+
+        else:  # decode
+            ap = model.abstract_params(jnp.bfloat16)
+            axes = model.param_axes()
+            p_specs = param_specs_tree(axes, ap, mesh, ctx.param_rules)
+            p_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), p_specs)
+            cache_abs, cache_axes = model.cache_spec(shape.global_batch,
+                                                     shape.seq_len)
+            is_axes = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+                a is None or isinstance(a, str) for a in x)
+            cache_sh = jax.tree_util.tree_map(
+                lambda a, s: NamedSharding(
+                    mesh, spec_for(s.shape, a, ctx.act_rules, mesh)),
+                cache_axes, cache_abs, is_leaf=is_axes)
+            batch_abs, batch_axes = model.input_specs(shape)
+            batch_sh = _batch_shardings(batch_axes, batch_abs, ctx)
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(p_sh, cache_sh, batch_sh["tokens"],
+                              batch_sh["pos"]),
+                out_shardings=(NamedSharding(mesh, PartitionSpec()),
+                               cache_sh),
+                donate_argnums=(1,),
+            ).lower(ap, cache_abs, batch_abs["tokens"], batch_abs["pos"])
+            extra = {}
+            tokens = shape.global_batch  # one new token per sequence
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-corrected collectives (XLA prints scan bodies once; a collective
+    # inside the layer scan fires n_layers times per step)
+    coll = parse_collectives_hierarchical(hlo, default_trip=cfg.n_layers)
+    coll_flat = parse_collective_bytes(hlo)
+
+    # analytic compute/memory terms (HLO cost_analysis counts loop bodies
+    # once -> unusable directly for scanned stacks; see roofline/analytic)
+    af = analytic_flops(cfg, shape,
+                        overrides.get("remat_policy", "full")
+                        if shape.kind == "train" else None)
+    ab = analytic_bytes(cfg, shape)
+    report = roofline_report(
+        flops_per_dev=af["compiled"] / n_chips,
+        bytes_per_dev=ab["traffic"] / n_chips,
+        coll=coll, n_chips=n_chips, model_flops_total=af["model_flops"])
+    report["collective_bytes_flat_hlo"] = coll_flat.total_bytes
+    report["analytic"] = {**af, **ab}
+    if shape.kind == "decode":
+        # decode is memory-bound by physics: report how close the step's
+        # lower bound sits to the irreducible floor of reading the weights
+        # + the KV/SSM state once per token.
+        floor = (ab["param_store"] + ab["cache_bytes"]) / n_chips \
+            / HW["hbm_bw"]
+        report["irreducible_bytes_floor_s"] = floor
+        report["decode_bw_fraction"] = (
+            floor / report["step_lower_bound_s"]
+            if report["step_lower_bound_s"] else 0.0)
+
+    return {
+        "arch": arch_id, "shape": shape_id,
+        "mesh": "multi" if multi_pod else "single",
+        "profile": profile,
+        "status": "ok",
+        "n_chips": n_chips,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+        "tokens_per_step": tokens,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_dev": ma.argument_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "peak_bytes_per_dev": ma.peak_memory_in_bytes,
+            "alias_bytes_per_dev": ma.alias_size_in_bytes,
+            "fits_16GB": bool(
+                ma.peak_memory_in_bytes + ma.argument_size_in_bytes
+                - ma.alias_size_in_bytes < 16e9),
+        },
+        "cost": {k: v for k, v in ca.items()
+                 if "flops" in k or k == "bytes accessed"},
+        "roofline": report,
+        **extra,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--profile", default="baseline",
+                    choices=["baseline", "opt"])
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    cells = []
+    if args.all:
+        from repro.configs import ARCH_IDS
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    overrides = {}
+    if args.remat:
+        overrides["remat_policy"] = args.remat
+
+    rc = 0
+    for arch_id, shape_id in cells:
+        for mp in meshes:
+            tag = f"{arch_id}__{shape_id}__{'multi' if mp else 'single'}"
+            path = outdir / f"{tag}.json"
+            try:
+                res = lower_cell(arch_id, shape_id, mp, overrides,
+                                 profile=args.profile)
+            except Exception as e:  # noqa: BLE001
+                res = {"arch": arch_id, "shape": shape_id,
+                       "mesh": "multi" if mp else "single",
+                       "status": "error", "error": f"{type(e).__name__}: "
+                                                   f"{e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                rc = 1
+            path.write_text(json.dumps(res, indent=2, default=str))
+            status = res["status"]
+            peak = res.get("memory", {}).get("peak_bytes_per_dev", 0)
+            dom = res.get("roofline", {}).get("dominant", "-")
+            frac = res.get("roofline", {}).get("roofline_fraction", 0)
+            print(f"[{status:7s}] {tag}  peak={peak/1e9:.2f}GB  "
+                  f"dominant={dom}  roofline_frac={frac:.3f}",
+                  flush=True)
+            if status == "ok":
+                print("  memory_analysis:", res["memory"], flush=True)
+                print("  cost_analysis:", res["cost"], flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,52 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (required by the dry-run contract).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e-256-like).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(devices)}; the dry-run entry "
+            "point must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before importing jax")
+    dev_array = np.asarray(devices).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_moe_mesh(*, multi_pod: bool = False):
+    """Refactored pod for hybrid expert x tensor parallelism (perf it.3):
+    same 256/512 chips as the canonical mesh, viewed as
+    (data=16, expert=8, tp=2)."""
+    shape = (2, 16, 8, 2) if multi_pod else (16, 8, 2)
+    axes = (("pod", "data", "expert", "tp") if multi_pod
+            else ("data", "expert", "tp"))
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_local_mesh(data: int = 2, model: int = 4, *, pod: int = 0):
+    """Small mesh for tests (requires xla_force_host_platform_device_count
+    >= data*model*max(pod,1) in the test process)."""
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)

@@ -1,0 +1,80 @@
+"""Full dry-run sweep driver: every (arch x shape x mesh) cell in its own
+subprocess (compile isolation + resumability).  Cells with an existing
+result JSON are skipped, so the sweep can be re-run incrementally.
+
+  PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+# rough cost ordering: small archs first so results accumulate early
+_SIZE_ORDER = [
+    "internlm2-1.8b", "gemma2-2b", "mamba2-2.7b", "phi4-mini-3.8b",
+    "zamba2-7b", "phi3-medium-14b", "whisper-large-v3",
+    "phi3.5-moe-42b-a6.6b", "qwen2-vl-72b", "grok-1-314b",
+]
+_SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--timeout", type=float, default=3600.0)
+    ap.add_argument("--profile", default="baseline")
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+
+    cells = [(a, s, m) for m in meshes for a in _SIZE_ORDER
+             for s in _SHAPE_ORDER]
+    t_start = time.time()
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, mesh in cells:
+        tag = f"{arch}__{shape}__{mesh}"
+        path = outdir / f"{tag}.json"
+        if path.exists():
+            try:
+                status = json.loads(path.read_text()).get("status")
+            except Exception:  # noqa: BLE001
+                status = None
+            if status in ("ok", "skipped"):
+                n_skip += 1
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", str(outdir), "--profile", args.profile]
+        t0 = time.time()
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            out_tail = (p.stdout or "")[-2000:]
+            ok = "[ok " in out_tail or "[skipped" in out_tail
+        except subprocess.TimeoutExpired:
+            ok = False
+            path.write_text(json.dumps(
+                {"arch": arch, "shape": shape, "mesh": mesh,
+                 "status": "error", "error": "compile timeout"}, indent=2))
+        n_ok += ok
+        n_fail += (not ok)
+        print(f"[sweep {time.time()-t_start:7.0f}s] {tag}: "
+              f"{'ok' if ok else 'FAIL'} ({time.time()-t0:.0f}s)",
+              flush=True)
+    print(f"[sweep done] ok={n_ok} fail={n_fail} skipped={n_skip} "
+          f"total={time.time()-t_start:.0f}s", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

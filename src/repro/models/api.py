@@ -1,0 +1,187 @@
+"""Model facade: one object per architecture exposing init / loss /
+prefill / decode_step / cache and input specs — everything the launcher,
+dry-run, trainer, and serving engine need."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import layers as ll
+from repro.models import ssm, transformer, whisper
+
+__all__ = ["Model", "build_model"]
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    compute_dtype: Any = jnp.bfloat16
+
+    # ---------------- parameters -----------------------------------------
+    def _defs(self, mk):
+        if self.cfg.is_encdec:
+            return whisper.whisper_param_defs(self.cfg, mk)
+        return transformer.lm_param_defs(self.cfg, mk)
+
+    def init_params(self, key, param_dtype=jnp.float32):
+        return self._defs(ll.init_creator(key, param_dtype))
+
+    def abstract_params(self, param_dtype=jnp.float32):
+        return self._defs(ll.abstract_creator(param_dtype))
+
+    def param_axes(self):
+        return self._defs(ll.axes_creator())
+
+    # ---------------- training -------------------------------------------
+    def loss(self, params, batch, *, remat_policy=None):
+        if self.cfg.is_encdec:
+            return whisper.whisper_loss(
+                params, self.cfg, batch, compute_dtype=self.compute_dtype,
+                remat_policy=remat_policy)
+        return transformer.lm_loss(
+            params, self.cfg, batch, compute_dtype=self.compute_dtype,
+            remat_policy=remat_policy)
+
+    # ---------------- serving ---------------------------------------------
+    def prefill(self, params, batch):
+        """Full-sequence pass; returns (last_logits (B,1,V), cache)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc = whisper.whisper_encode(params, cfg, batch["frames"],
+                                         self.compute_dtype)
+            logits, cache = whisper.whisper_forward(
+                params, cfg, tokens=batch["tokens"], enc_out=enc,
+                mode="prefill", compute_dtype=self.compute_dtype,
+                logits_mode="last")
+            return logits, cache
+        logits, cache, _ = transformer.lm_forward(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), mode="prefill",
+            compute_dtype=self.compute_dtype, logits_mode="last")
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: (B,) int32; pos: (B,) int32 — write
+        offset into the cache. Returns (next_tokens, new_cache)."""
+        cfg = self.cfg
+        tok2 = tokens[:, None]
+        if cfg.is_encdec:
+            logits, new_cache = whisper.whisper_forward(
+                params, cfg, tokens=tok2, cache=cache, pos_offset=pos,
+                mode="decode", compute_dtype=self.compute_dtype,
+                logits_mode="last")
+        else:
+            logits, new_cache, _ = transformer.lm_forward(
+                params, cfg, tokens=tok2, cache=cache, pos_offset=pos,
+                mode="decode", compute_dtype=self.compute_dtype,
+                logits_mode="last")
+        next_tokens = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    # ---------------- caches -----------------------------------------------
+    def cache_spec(self, batch: int, max_seq: int):
+        """Abstract cache (ShapeDtypeStructs) + logical axes tree."""
+        cfg = self.cfg
+        cdt = self.compute_dtype
+        L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        kv_axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        if cfg.is_encdec:
+            spec = {
+                "k": _spec((L, batch, max_seq, K, hd), cdt),
+                "v": _spec((L, batch, max_seq, K, hd), cdt),
+                "ck": _spec((L, batch, cfg.encoder_seq, K, hd), cdt),
+                "cv": _spec((L, batch, cfg.encoder_seq, K, hd), cdt),
+            }
+            axes = {"k": kv_axes, "v": kv_axes,
+                    "ck": ("layers", "batch", "enc_seq", "kv_heads",
+                           "head_dim"),
+                    "cv": ("layers", "batch", "enc_seq", "kv_heads",
+                           "head_dim")}
+            return spec, axes
+        if cfg.family == "ssm":
+            spec = ssm.init_ssm_cache_spec(cfg, batch, L, conv_dtype=cdt)
+            axes = {"conv": ("layers", "batch", "conv", "ssm_inner"),
+                    "ssm": ("layers", "batch", "ssm_heads", "ssm_headdim",
+                            "ssm_state")}
+            return spec, axes
+        if cfg.family == "hybrid":
+            G = cfg.n_layers // (cfg.hybrid_group + 1)
+            per = cfg.hybrid_group
+            base = ssm.init_ssm_cache_spec(cfg, batch, G * per,
+                                           conv_dtype=cdt)
+            regroup = lambda s: _spec((G, per) + s.shape[1:], s.dtype)  # noqa
+            spec = {
+                "conv": regroup(base["conv"]),
+                "ssm": regroup(base["ssm"]),
+                "k": _spec((G, batch, max_seq, K, hd), cdt),
+                "v": _spec((G, batch, max_seq, K, hd), cdt),
+            }
+            axes = {
+                "conv": ("layers", "layers", "batch", "conv", "ssm_inner"),
+                "ssm": ("layers", "layers", "batch", "ssm_heads",
+                        "ssm_headdim", "ssm_state"),
+                "k": kv_axes, "v": kv_axes,
+            }
+            return spec, axes
+        spec = {"k": _spec((L, batch, max_seq, K, hd), cdt),
+                "v": _spec((L, batch, max_seq, K, hd), cdt)}
+        return spec, {"k": kv_axes, "v": kv_axes}
+
+    def init_cache(self, batch: int, max_seq: int):
+        spec, _ = self.cache_spec(batch, max_seq)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+    # ---------------- input specs -------------------------------------------
+    def input_specs(self, shape: ShapeConfig):
+        """Abstract inputs + logical axes for a given assigned shape."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = ("batch", "seq")
+        if shape.kind == "train":
+            if cfg.input_kind == "embeds":
+                batch = {"embeds": _spec((B, S, cfg.d_model), jnp.bfloat16),
+                         "targets": _spec((B, S), jnp.int32)}
+                axes = {"embeds": ("batch", "seq", "d_model"),
+                        "targets": tok}
+            elif cfg.input_kind == "frames+tokens":
+                batch = {"frames": _spec((B, cfg.encoder_seq, cfg.d_model),
+                                         jnp.bfloat16),
+                         "tokens": _spec((B, S), jnp.int32),
+                         "targets": _spec((B, S), jnp.int32)}
+                axes = {"frames": ("batch", "enc_seq", "d_model"),
+                        "tokens": tok, "targets": tok}
+            else:
+                batch = {"tokens": _spec((B, S), jnp.int32),
+                         "targets": _spec((B, S), jnp.int32)}
+                axes = {"tokens": tok, "targets": tok}
+            return batch, axes
+        if shape.kind == "prefill":
+            if cfg.input_kind == "embeds":
+                return ({"embeds": _spec((B, S, cfg.d_model), jnp.bfloat16)},
+                        {"embeds": ("batch", "seq", "d_model")})
+            if cfg.input_kind == "frames+tokens":
+                return ({"frames": _spec((B, cfg.encoder_seq, cfg.d_model),
+                                         jnp.bfloat16),
+                         "tokens": _spec((B, S), jnp.int32)},
+                        {"frames": ("batch", "enc_seq", "d_model"),
+                         "tokens": tok})
+            return ({"tokens": _spec((B, S), jnp.int32)}, {"tokens": tok})
+        # decode: one new token against a max_seq-deep cache
+        return ({"tokens": _spec((B,), jnp.int32),
+                 "pos": _spec((B,), jnp.int32)},
+                {"tokens": ("batch",), "pos": ("batch",)})
+
+
+def build_model(cfg: ArchConfig, compute_dtype=jnp.bfloat16) -> Model:
+    return Model(cfg=cfg, compute_dtype=compute_dtype)

@@ -1,0 +1,238 @@
+"""GQA attention with KV cache, sliding-window masks, and logit softcaps.
+
+Head layout is explicit — q: (B, S, H, hd); k/v: (B, T, K, hd) with
+G = H // K query heads per KV head — so the sharding engine can put either
+the head axis or the head_dim axis on the 'model' mesh axis depending on
+divisibility (DESIGN.md section 5).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+from repro.models.layers import mrope_apply, rope_apply, softcap
+
+__all__ = ["AttnParams", "attn_param_defs", "attention", "KVCache",
+           "init_cache_spec"]
+
+NEG_INF = -2.0e38
+
+
+def attn_param_defs(mk, prefix: str, cfg: ArchConfig, *, layers: int = 0):
+    """Attention parameter tree; optionally stacked over a leading layer
+    axis (layers > 0) for scan-over-layers."""
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": mk(f"{prefix}.wq", L + (d, h, hd), lax_ + ("d_model", "heads",
+                                                         "head_dim"), d),
+        "wk": mk(f"{prefix}.wk", L + (d, k, hd), lax_ + ("d_model",
+                                                         "kv_heads",
+                                                         "head_dim"), d),
+        "wv": mk(f"{prefix}.wv", L + (d, k, hd), lax_ + ("d_model",
+                                                         "kv_heads",
+                                                         "head_dim"), d),
+        "wo": mk(f"{prefix}.wo", L + (h, hd, d), lax_ + ("heads", "head_dim",
+                                                         "d_model"),
+                 h * hd),
+    }
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache for one attention stack. k/v: (L, B, S_max, K, hd).
+    For cross attention (whisper) the cache holds the encoder K/V and is
+    never updated during decode."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def init_cache_spec(cfg: ArchConfig, batch: int, max_seq: int,
+                    dtype=jnp.bfloat16, *, layers: Optional[int] = None,
+                    kv_heads: Optional[int] = None):
+    L = layers if layers is not None else cfg.n_layers
+    K = kv_heads if kv_heads is not None else cfg.n_kv_heads
+    shape = (L, batch, max_seq, K, cfg.head_dim)
+    return KVCache(k=jax.ShapeDtypeStruct(shape, dtype),
+                   v=jax.ShapeDtypeStruct(shape, dtype))
+
+
+def _update_cache(ck, cv, k_new, v_new, pos):
+    """Write (B, S_new, K, hd) at per-batch offsets pos (B,) int32.
+
+    Under SPMD a vmap'd dynamic_update_slice into a sequence-sharded cache
+    makes XLA gather the shard group per layer (measured 27.5 GB/step on
+    qwen decode — perf it.7); a masked one-hot write is a local elementwise
+    op whose cost is one cache touch, which decode attention pays anyway.
+    """
+    from repro.dist.api import active_context
+    if active_context() is not None and k_new.shape[1] == 1:
+        S = ck.shape[1]
+        hit = (jnp.arange(S, dtype=jnp.int32)[None, :]
+               == pos[:, None])[..., None, None]       # (B, S, 1, 1)
+        ck = jnp.where(hit, k_new.astype(ck.dtype), ck)
+        cv = jnp.where(hit, v_new.astype(cv.dtype), cv)
+        return ck, cv
+
+    def upd(c, kv, p):
+        return jax.lax.dynamic_update_slice(c, kv.astype(c.dtype),
+                                            (p, 0, 0))
+    ck = jax.vmap(upd)(ck, k_new, pos)
+    cv = jax.vmap(upd)(cv, v_new, pos)
+    return ck, cv
+
+
+def _chunked_attention(qg, k, v, cfg: ArchConfig, *, is_local, causal,
+                       scale, compute_dtype, block: int = 1024):
+    """Online-softmax attention over KV blocks (lax.scan) — the S x T score
+    matrix never materializes.  Mirrors kernels/attention (the Pallas flash
+    kernel is the TPU-native form; this is the XLA-lowered form the 32k
+    prefill dry-run needs to fit HBM — EXPERIMENTS.md section Perf it.3)."""
+    B, S, K, G, hd = qg.shape
+    T = k.shape[1]
+    block = min(block, T)
+    while T % block:
+        block //= 2
+    nb = T // block
+    kb = jnp.moveaxis(k.reshape(B, nb, block, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, block, K, hd), 1, 0)
+    q_idx = jnp.arange(S)[:, None]
+
+    def body(carry, inp):
+        acc, m, l = carry
+        j, kj, vj = inp
+        s = jnp.einsum("bskgh,btkh->bkgst", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if cfg.attn_logit_softcap:
+            s = softcap(s, cfg.attn_logit_softcap)
+        t_abs = j * block + jnp.arange(block)[None, :]
+        mask = (t_abs <= q_idx) if causal else jnp.ones((S, block), bool)
+        if cfg.sliding_window and is_local is not None:
+            local = t_abs > (q_idx - cfg.sliding_window)
+            mask = mask & jnp.where(is_local, local, True)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(compute_dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, K, G, S, hd), jnp.float32)
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(nb), kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # (B,K,G,S,hd) -> (B,S,K,G,hd)
+    return jnp.moveaxis(out, 3, 1).astype(compute_dtype)
+
+
+def attention(p, x, positions, cfg: ArchConfig, *,
+              is_local=None, cache_k=None, cache_v=None, pos_offset=None,
+              kv_x=None, causal: bool = True, compute_dtype=jnp.bfloat16,
+              return_kv: bool = False, chunked_threshold: int = 16_384):
+    """Unified attention:
+
+    * train / prefill:  cache_* None; k/v from x (or kv_x for cross-attn)
+    * decode:           cache_k/v (B, S_max, K, hd) + pos_offset (B,)
+    * cross-attn decode: kv precomputed -> pass cache_* with pos_offset=None
+
+    positions: (B, S) int32 for rope; (3, B, S) for mrope.
+    is_local:  scalar bool (traced ok) selecting sliding-window masking.
+    Returns (out, (new_cache_k, new_cache_v)).
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // K
+    scale = cfg.qk_scale if cfg.qk_scale else hd ** -0.5
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+
+    if cfg.rope_mode == "rope":
+        q_pos = positions if positions.ndim == 2 else positions[0]
+        q = rope_apply(q, q_pos, cfg.rope_theta)
+        if kv_x is None:
+            k = rope_apply(k, q_pos, cfg.rope_theta)
+    elif cfg.rope_mode == "mrope":
+        q = mrope_apply(q, positions, cfg.rope_theta)
+        if kv_x is None:
+            k = mrope_apply(k, positions, cfg.rope_theta)
+
+    new_cache = (None, None)
+    if cache_k is not None and pos_offset is not None:
+        cache_k, cache_v = _update_cache(cache_k, cache_v, k, v, pos_offset)
+        new_cache = (cache_k, cache_v)
+        k, v = cache_k.astype(compute_dtype), cache_v.astype(compute_dtype)
+    elif cache_k is not None:     # static (cross-attn) cache
+        k, v = cache_k.astype(compute_dtype), cache_v.astype(compute_dtype)
+        new_cache = (cache_k, cache_v)
+    elif return_kv:               # prefill: the fresh k/v become the cache
+        new_cache = (k.astype(compute_dtype), v.astype(compute_dtype))
+
+    # NOTE(perf it.2, refuted): forcing a 'project-then-gather' constraint
+    # on k/v here ADDED ~35% all-gather bytes — XLA already CSEs one gather
+    # of x for both k and v, and the extra constraint broke that reuse.
+    T = k.shape[1]
+    qg = q.reshape(B, S, K, G, hd)
+    qg = constrain(qg, ("batch", "q_seq", "kv_heads", "q_per_kv",
+                        "head_dim"))
+
+    if (cache_k is None or pos_offset is None) and S > 1 \
+            and S * T >= chunked_threshold ** 2:
+        out = _chunked_attention(qg, k, v, cfg, is_local=is_local,
+                                 causal=causal, scale=scale,
+                                 compute_dtype=compute_dtype)
+        out = out.reshape(B, S, H, hd)
+        out = jnp.einsum("bshk,hkd->bsd", out,
+                         p["wo"].astype(compute_dtype),
+                         preferred_element_type=compute_dtype)
+        return out, new_cache
+
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = constrain(scores, ("batch", "kv_heads", "q_per_kv", "q_seq",
+                                "kv_seq"))
+    if cfg.attn_logit_softcap:
+        scores = softcap(scores, cfg.attn_logit_softcap)
+
+    # ---- masking ----------------------------------------------------------
+    t_idx = jnp.arange(T)[None, :]                      # (1, T)
+    if pos_offset is not None:                          # decode over cache
+        q_abs = pos_offset[:, None] + jnp.arange(S)[None, :]   # (B, S)
+        mask = t_idx[:, None, :] <= q_abs[..., None]           # (B, S, T)
+    elif causal and kv_x is None:
+        q_idx = jnp.arange(S)[:, None]
+        mask = (t_idx <= q_idx)[None]                          # (1, S, T)
+    else:
+        mask = jnp.ones((1, S, T), bool)
+    if cfg.sliding_window and is_local is not None:
+        if pos_offset is not None:
+            local = t_idx[:, None, :] > (q_abs[..., None]
+                                         - cfg.sliding_window)
+        else:
+            local = t_idx > (jnp.arange(S)[:, None] - cfg.sliding_window)
+            local = local[None]
+        mask = mask & jnp.where(is_local, local, True)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+
+    w = jax.nn.softmax(scores, axis=-1).astype(compute_dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v,
+                     preferred_element_type=compute_dtype)
+    out = out.reshape(B, S, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(compute_dtype),
+                     preferred_element_type=compute_dtype)
+    return out, new_cache

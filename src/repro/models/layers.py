@@ -1,0 +1,162 @@
+"""Shared layer primitives + the parameter-definition factory.
+
+One source of truth for every parameter: model code builds its parameter
+tree through a ``creator`` callback, so the same definition yields
+(a) initialized arrays, (b) ShapeDtypeStructs for the dry-run
+(no allocation), and (c) logical-axis tuples for the sharding rule engine.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Creator", "init_creator", "abstract_creator", "axes_creator",
+    "rmsnorm", "layernorm", "softcap", "gelu_mlp", "glu_mlp",
+    "rope_apply", "mrope_apply", "take_embedding",
+]
+
+# creator(path, shape, axes, fan_in) -> leaf
+Creator = Callable
+
+
+def _path_seed(path: str) -> int:
+    return int.from_bytes(hashlib.md5(path.encode()).digest()[:4], "little")
+
+
+def init_creator(key, param_dtype=jnp.float32) -> Creator:
+    """Initialize with truncated-normal(0, 1/sqrt(fan_in)); norms at one."""
+    def create(path, shape, axes, fan_in=None, kind="normal"):
+        del axes
+        if kind == "ones":
+            return jnp.ones(shape, param_dtype)
+        if kind == "zeros":
+            return jnp.zeros(shape, param_dtype)
+        sub = jax.random.fold_in(key, _path_seed(path))
+        scale = 1.0 / (fan_in or shape[-1]) ** 0.5
+        return (jax.random.truncated_normal(sub, -3.0, 3.0, shape,
+                                            param_dtype) * scale)
+    return create
+
+
+def abstract_creator(param_dtype=jnp.float32) -> Creator:
+    def create(path, shape, axes, fan_in=None, kind="normal"):
+        del path, axes, fan_in, kind
+        return jax.ShapeDtypeStruct(shape, param_dtype)
+    return create
+
+
+def axes_creator() -> Creator:
+    """Yields the logical-axis tuple per leaf (for the sharding engine)."""
+    def create(path, shape, axes, fan_in=None, kind="normal"):
+        del path, fan_in, kind
+        assert len(axes) == len(shape), f"{path}: {axes} vs {shape}"
+        return tuple(axes)
+    return create
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x, cap: float):
+    """Gemma-2/grok-style logit soft capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def gelu_mlp(x, p, compute_dtype):
+    h = jnp.einsum("...d,df->...f", x, p["w_up"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+    h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(compute_dtype),
+                      preferred_element_type=compute_dtype)
+
+
+def glu_mlp(x, p, act: str, compute_dtype):
+    """SwiGLU / GeGLU gated MLP."""
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+    g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+    return jnp.einsum("...f,fd->...d", g * u,
+                      p["w_down"].astype(compute_dtype),
+                      preferred_element_type=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (..., S) int32 -> (..., S, head_dim//2) angles fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def _rotate(x, angles):
+    """x (..., S, H, hd); angles (..., S, hd//2) -> rotated x."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    c = jnp.cos(angles)[..., None, :]   # (..., S, 1, hd//2) over heads
+    s = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(dt)
+
+
+def rope_apply(x, positions, theta: float):
+    """Standard RoPE. x: (B, S, H, hd); positions: (B, S) int32."""
+    angles = _rope_angles(positions, x.shape[-1], theta)   # (B,S,hd/2)
+    return _rotate(x, angles)
+
+
+def mrope_apply(x, positions3, theta: float, sections=(2, 3, 3)):
+    """Qwen2-VL M-RoPE: the hd/2 frequency slots are split into
+    (t, h, w) sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions3: (3, B, S) int32.  ``sections`` are
+    relative weights scaled to hd//2 (Qwen2-VL uses [16, 24, 24] of 64).
+    """
+    half = x.shape[-1] // 2
+    total = sum(sections)
+    sizes = [s * half // total for s in sections]
+    sizes[-1] = half - sum(sizes[:-1])
+    angles_full = _rope_angles(positions3, x.shape[-1], theta)  # (3,B,S,half)
+    pieces, off = [], 0
+    for i, sz in enumerate(sizes):
+        pieces.append(angles_full[i, ..., off:off + sz])
+        off += sz
+    angles = jnp.concatenate(pieces, axis=-1)                   # (B,S,half)
+    return _rotate(x, angles)
+
+
+def take_embedding(embed, tokens, scale: bool, compute_dtype):
+    x = jnp.take(embed, tokens, axis=0).astype(compute_dtype)
+    if scale:
+        x = x * jnp.asarray(embed.shape[-1] ** 0.5, compute_dtype)
+    return x

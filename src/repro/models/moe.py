@@ -1,0 +1,226 @@
+"""Top-k MoE with sort-based token dispatch (GShard capacity semantics,
+MegaBlocks-style compaction, no T x E one-hot blow-up).
+
+Dispatch is performed *per batch row* so every intermediate keeps the batch
+axis — which stays sharded over ('pod','data') — and the expert axis shards
+over 'model' when E divides it (EP; phi3.5-moe) or falls back to in-expert
+tensor parallelism on d_ff (grok-1, 8 experts). See DESIGN.md section 5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+
+__all__ = ["moe_param_defs", "moe_block", "router_aux_loss"]
+
+
+def moe_param_defs(mk, prefix: str, cfg: ArchConfig, *, layers: int = 0):
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": mk(f"{prefix}.router", L + (d, e),
+                     lax_ + ("d_model", "experts_router"), d),
+        "w_up": mk(f"{prefix}.w_up", L + (e, d, f),
+                   lax_ + ("experts", "d_model", "d_ff"), d),
+        "w_down": mk(f"{prefix}.w_down", L + (e, f, d),
+                     lax_ + ("experts", "d_ff", "d_model"), f),
+    }
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p["w_gate"] = mk(f"{prefix}.w_gate", L + (e, d, f),
+                         lax_ + ("experts", "d_model", "d_ff"), d)
+    return p
+
+
+def _capacity(cfg: ArchConfig, tokens_per_row: int) -> int:
+    cap = int(tokens_per_row * cfg.n_experts_active
+              * cfg.capacity_factor / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)      # pad to 8 for TPU tiling
+
+
+def moe_block(x, p, cfg: ArchConfig, compute_dtype=jnp.bfloat16):
+    """x: (B, S, D) -> (B, S, D), top-k routed expert MLP.
+
+    Per row: sort the S*k (token, expert) slots by expert id, compute each
+    slot's position within its expert, drop beyond-capacity slots, scatter
+    into a dense (E, C, D) buffer, run all experts as one batched einsum,
+    and combine back with the router gates.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    C = _capacity(cfg, S)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(compute_dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                    # (B,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    eflat = eidx.reshape(B, S * k)                            # expert / slot
+    order = jnp.argsort(eflat, axis=-1, stable=True)          # (B, S*k)
+    sorted_e = jnp.take_along_axis(eflat, order, axis=-1)
+    tok = order // k                                          # token / slot
+
+    # position of each sorted slot within its expert
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(sorted_e)
+    starts = jnp.cumsum(counts, axis=-1) - counts             # (B, E)
+    pos = (jnp.arange(S * k)[None, :]
+           - jnp.take_along_axis(starts, sorted_e, axis=-1))  # (B, S*k)
+    keep = pos < C
+    slot = jnp.where(keep, sorted_e * C + pos, E * C)         # E*C = dump
+
+    xs = jnp.take_along_axis(x, tok[..., None], axis=1)       # (B, S*k, D)
+    buf = jnp.zeros((B, E * C + 1, D), compute_dtype)
+    buf = buf.at[jnp.arange(B)[:, None], slot].set(
+        xs.astype(compute_dtype))
+    buf = buf[:, :-1].reshape(B, E, C, D)
+    buf = constrain(buf, ("batch", "experts", "cap", "d_model"))
+
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        g = jnp.einsum("becd,edf->becf", buf,
+                       p["w_gate"].astype(compute_dtype),
+                       preferred_element_type=compute_dtype)
+        u = jnp.einsum("becd,edf->becf", buf,
+                       p["w_up"].astype(compute_dtype),
+                       preferred_element_type=compute_dtype)
+        g = jax.nn.silu(g) if cfg.mlp_act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf,
+                                   p["w_up"].astype(compute_dtype),
+                                   preferred_element_type=compute_dtype))
+    h = constrain(h, ("batch", "experts", "cap", "d_ff"))
+    y_e = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(compute_dtype),
+                     preferred_element_type=compute_dtype)
+
+    # combine: read each kept slot back, weight by its gate, scatter-add
+    y_flat = jnp.concatenate(
+        [y_e.reshape(B, E * C, D),
+         jnp.zeros((B, 1, D), compute_dtype)], axis=1)
+    y_slots = jnp.take_along_axis(y_flat, slot[..., None], axis=1)
+    gate_sorted = jnp.take_along_axis(gates.reshape(B, S * k), order,
+                                      axis=-1)
+    y_slots = y_slots * gate_sorted[..., None].astype(compute_dtype)
+    y = jnp.zeros((B, S, D), compute_dtype)
+    y = y.at[jnp.arange(B)[:, None], tok].add(y_slots)
+    return y, probs
+
+
+def moe_block_ep(x, p, cfg: ArchConfig, mesh,
+                 compute_dtype=jnp.bfloat16, decode: bool = False):
+    """Expert-parallel MoE via shard_map (perf it.5).
+
+    Auto-SPMD cannot partition the sort/scatter dispatch across an
+    expert-sharded buffer (it replicates — measured 54 TB of all-reduce on
+    grok, EXPERIMENTS.md section Perf).  shard_map makes dispatch/combine
+    *local by construction*: each (expert, tp) shard compacts the tokens
+    routed to ITS expert, runs its local expert slice, scatter-adds into a
+    local (B, S, D) buffer, and a single psum over ('expert', 'tp')
+    combines contributions.  Wire cost per layer ~ 2 x activation bytes —
+    the a2a-equivalent optimum.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    C = _capacity(cfg, S)
+    ep = mesh.shape["expert"]
+    E_local = E // ep
+    glu = cfg.mlp_act in ("swiglu", "geglu")
+
+    def body(xl, wr, wg, wu, wd, eids):
+        # xl (B_l, S, D) replicated over expert/tp; w* local expert slices
+        if not decode:
+            # train/prefill: weights FSDP'd over 'data' at rest ->
+            # explicit per-layer gather (ZeRO-3 style)
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        xl = xl.astype(compute_dtype)
+        Bl = xl.shape[0]                    # local batch (B / data-axis)
+        logits = jnp.einsum("bsd,de->bse", xl, wr.astype(compute_dtype),
+                            preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, eidx = jax.lax.top_k(probs, k)               # (B,S,k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+        y = jnp.zeros_like(xl)
+        for j in range(E_local):
+            e_id = eids[j]                                   # global id
+            sel = (eidx == e_id)                             # (B,S,k)
+            gate_e = jnp.where(sel, gates, 0.0).sum(-1)      # (B,S)
+            hit = gate_e > 0
+            # compact this expert's tokens to capacity C (local argsort)
+            order = jnp.argsort(~hit, axis=-1, stable=True)  # hits first
+            tok = order[:, :C]                               # (B,C)
+            keep = jnp.take_along_axis(hit, tok, axis=-1)    # (B,C)
+            xe = jnp.take_along_axis(xl, tok[..., None], axis=1)
+            xe = xe * keep[..., None].astype(compute_dtype)
+            if glu:
+                g = jnp.einsum("bcd,df->bcf", xe,
+                               wg[j].astype(compute_dtype),
+                               preferred_element_type=compute_dtype)
+                u = jnp.einsum("bcd,df->bcf", xe,
+                               wu[j].astype(compute_dtype),
+                               preferred_element_type=compute_dtype)
+                g = (jax.nn.silu(g) if cfg.mlp_act == "swiglu"
+                     else jax.nn.gelu(g))
+                h = g * u
+            else:
+                h = jax.nn.gelu(jnp.einsum(
+                    "bcd,df->bcf", xe, wu[j].astype(compute_dtype),
+                    preferred_element_type=compute_dtype))
+            ye = jnp.einsum("bcf,fd->bcd", h, wd[j].astype(compute_dtype),
+                            preferred_element_type=compute_dtype)
+            gate_c = jnp.take_along_axis(gate_e, tok, axis=-1)
+            ye = ye * gate_c[..., None].astype(compute_dtype)
+            y = y.at[jnp.arange(Bl)[:, None], tok].add(
+                jnp.where(keep[..., None], ye, 0))
+        # tp shards hold partial d_ff contributions; experts are disjoint
+        y = jax.lax.psum(y, ("expert", "tp") if not decode
+                         else ("expert", "tp", "data"))
+        return y, probs
+
+    eids = jnp.arange(E, dtype=jnp.int32)
+    if decode:
+        # stationary weights: never gather per token-step. d_ff shards over
+        # (tp, data) = 32-way so even grok's experts stay resident; the
+        # (tiny) per-token partial sums psum over all three axes.
+        specs = dict(
+            x=P(None, None, None),
+            wr=P(None, None),
+            w2=P("expert", None, ("tp", "data")),
+            w3=P("expert", ("tp", "data"), None),
+            eids=P("expert"),
+        )
+    else:
+        specs = dict(
+            x=P("data", None, None),
+            wr=P(None, None),
+            w2=P("expert", "data", "tp"),      # (E, D, F) FSDP x EP x TP
+            w3=P("expert", "tp", "data"),      # (E, F, D)
+            eids=P("expert"),
+        )
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(specs["x"], specs["wr"], specs["w2"], specs["w2"],
+                  specs["w3"], specs["eids"]),
+        out_specs=(specs["x"], P("data", None, None)),
+        check_rep=False)
+    wg = p.get("w_gate", p["w_up"])
+    y, probs = fn(x, p["router"], wg, p["w_up"], p["w_down"], eids)
+    return y, probs
+
+
+def router_aux_loss(probs, eidx_onehot_mean=None):
+    """Switch-style load-balance loss: E * sum(f_e * P_e)."""
+    E = probs.shape[-1]
+    pe = probs.mean(axis=(0, 1))
+    top1 = jnp.argmax(probs, axis=-1)
+    fe = jnp.mean(jax.nn.one_hot(top1, E, dtype=probs.dtype), axis=(0, 1))
+    return E * jnp.sum(fe * pe)

@@ -1,0 +1,272 @@
+"""Mamba2 / SSD (state-space duality) block, chunked for the MXU.
+
+Training/prefill use the chunked SSD form: within-chunk computation is a
+masked (Q x Q) matmul pair — MXU-friendly — and chunks exchange a
+(H, N, P) state through a short ``lax.scan``.  Decode is the O(1) recurrent
+update.  The chunk kernel has a Pallas implementation in
+``repro.kernels.ssd`` validated against ``ssd_reference`` below.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["mamba_param_defs", "mamba_block", "mamba_decode_step",
+           "ssd_chunked", "ssd_reference", "causal_conv1d",
+           "conv_decode_step", "init_ssm_cache_spec"]
+
+
+def mamba_param_defs(mk, prefix: str, cfg: ArchConfig, *, layers: int = 0):
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    d, di = cfg.d_model, cfg.d_inner
+    n, h, kc = cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    return {
+        "w_x": mk(f"{prefix}.w_x", L + (d, di), lax_ + ("d_model",
+                                                        "ssm_inner"), d),
+        "w_z": mk(f"{prefix}.w_z", L + (d, di), lax_ + ("d_model",
+                                                        "ssm_inner"), d),
+        "w_B": mk(f"{prefix}.w_B", L + (d, n), lax_ + ("d_model",
+                                                       "ssm_state"), d),
+        "w_C": mk(f"{prefix}.w_C", L + (d, n), lax_ + ("d_model",
+                                                       "ssm_state"), d),
+        "w_dt": mk(f"{prefix}.w_dt", L + (d, h), lax_ + ("d_model",
+                                                         "ssm_heads"), d),
+        "dt_bias": mk(f"{prefix}.dt_bias", L + (h,), lax_ + ("ssm_heads",),
+                      kind="zeros"),
+        "A_log": mk(f"{prefix}.A_log", L + (h,), lax_ + ("ssm_heads",),
+                    kind="zeros"),
+        "D_skip": mk(f"{prefix}.D_skip", L + (h,), lax_ + ("ssm_heads",),
+                     kind="ones"),
+        "conv_x": mk(f"{prefix}.conv_x", L + (kc, di), lax_ + ("conv",
+                                                               "ssm_inner"),
+                     kc),
+        "conv_B": mk(f"{prefix}.conv_B", L + (kc, n), lax_ + ("conv",
+                                                              "ssm_state"),
+                     kc),
+        "conv_C": mk(f"{prefix}.conv_C", L + (kc, n), lax_ + ("conv",
+                                                              "ssm_state"),
+                     kc),
+        "gnorm": mk(f"{prefix}.gnorm", L + (di,), lax_ + ("ssm_inner",),
+                    kind="zeros"),
+        "w_out": mk(f"{prefix}.w_out", L + (di, d), lax_ + ("ssm_inner",
+                                                            "d_model"), di),
+    }
+
+
+def causal_conv1d(x, w):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(K):
+        acc = acc + pad[:, i:i + x.shape[1]] * w[i]
+    return acc
+
+
+def conv_decode_step(x_t, conv_state, w):
+    """One-token causal conv. x_t: (B, C); conv_state: (B, K-1, C)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:]
+
+
+def ssd_reference(x, dt, A, Bm, Cm):
+    """Sequential SSD oracle (pure scan over time).
+
+    x: (B,S,H,P) dt: (B,S,H) A: (H,)<=0 exponent coeff  Bm/Cm: (B,S,N).
+    h_t = h_{t-1} * exp(dt_t A) + dt_t * B_t (x) x_t ;  y_t = C_t . h_t
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp         # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dtt * A)      # (B,H)
+        upd = jnp.einsum("bn,bhp,bh->bhpn", bt, xt, dtt)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bm, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Cm, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h    # (B,S,H,P), final state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD (Mamba-2 paper section 6): MXU matmuls within chunks +
+    a chunk-granular state scan. Returns (y, final_state)."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # zero-pad: dt=0 at padded steps => decay 1, zero state update, so
+        # the padded tail is exactly inert.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    c = S // Q
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, c, Q, H, P).astype(f32)
+    dtc = dt.reshape(Bsz, c, Q, H).astype(f32)
+    Bc = Bm.reshape(Bsz, c, Q, N).astype(f32)
+    Cc = Cm.reshape(Bsz, c, Q, N).astype(f32)
+
+    a = dtc * A                                   # (B,c,Q,H) log-decays
+    acum = jnp.cumsum(a, axis=2)                  # inclusive within chunk
+
+    # ---- intra-chunk: masked (Q x Q) attention-like matmul ----------------
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)    # (B,c,Q,Q)
+    diff = acum[..., :, None, :] - acum[..., None, :, :]   # (B,c,Q,Q,H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None,
+                                                              ..., None]
+    L = jnp.where(mask, jnp.exp(diff), 0.0)       # (B,c,Q,Q,H)
+    M = CB[..., None] * L * dtc[:, :, None, :, :]  # source dt_s
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", M, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    dte = jnp.exp(acum[:, :, -1:, :] - acum)      # decay from t to chunk end
+    sstate = jnp.einsum("bcqn,bcqhp->bchpn", Bc, xc * (dtc * dte)[..., None])
+    chunk_decay = jnp.exp(acum[:, :, -1, :])      # (B,c,H)
+
+    def scan_fn(h_prev, inp):
+        s_c, dec = inp                            # (B,H,P,N), (B,H)
+        h = h_prev * dec[..., None, None] + s_c
+        return h, h_prev
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+    hT, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(sstate, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)         # (B,c,H,P,N)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(acum),
+                         h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y[:, :S_orig], hT
+
+
+def mamba_block(x, p, cfg: ArchConfig, compute_dtype=jnp.bfloat16,
+                conv_state=None, ssm_state=None):
+    """Full Mamba2 block (train/prefill when states are None; decode-with-
+    state otherwise handled by ``mamba_decode_step``).
+
+    x: (B, S, D) -> (B, S, D).  Returns (out, (conv_state, ssm_state)).
+    """
+    B, S, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+
+    xin = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(compute_dtype),
+                     preferred_element_type=compute_dtype)
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(compute_dtype),
+                   preferred_element_type=compute_dtype)
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(compute_dtype),
+                    preferred_element_type=compute_dtype)
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(compute_dtype),
+                    preferred_element_type=compute_dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(compute_dtype),
+                    preferred_element_type=jnp.float32)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]],
+                             axis=-1).astype(compute_dtype)
+    new_conv_state = conv_in[:, -(cfg.ssm_conv - 1):, :]
+    if conv_state is not None:
+        ext = jnp.concatenate([conv_state.astype(compute_dtype), conv_in],
+                              axis=1)
+        conv_out = causal_conv1d(ext, conv_w)[:, cfg.ssm_conv - 1:]
+    else:
+        conv_out = causal_conv1d(conv_in, conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + n],
+                   conv_out[..., di + n:])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(B, S, H, P)
+    y, hT = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, h0=ssm_state)
+    y = y + xh.astype(jnp.float32) * p["D_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(B, S, di).astype(compute_dtype)
+
+    # gated RMSNorm (mamba2: norm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    y = (y * (1.0 + p["gnorm"].astype(jnp.float32))).astype(compute_dtype)
+
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(compute_dtype),
+                     preferred_element_type=compute_dtype)
+    return out, (new_conv_state.astype(compute_dtype), hT)
+
+
+def mamba_decode_step(x, p, cfg: ArchConfig, conv_state, ssm_state,
+                      compute_dtype=jnp.bfloat16):
+    """One-token recurrent update. x: (B, 1, D); states carried."""
+    B, _, D = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.ssm_nheads, cfg.ssm_headdim
+    xt = x[:, 0]
+
+    xin = xt @ p["w_x"].astype(compute_dtype)
+    z = xt @ p["w_z"].astype(compute_dtype)
+    Bm = xt @ p["w_B"].astype(compute_dtype)
+    Cm = xt @ p["w_C"].astype(compute_dtype)
+    dt = (xt @ p["w_dt"].astype(compute_dtype)).astype(jnp.float32)
+
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]],
+                             axis=-1).astype(compute_dtype)
+    conv_out, new_conv_state = conv_decode_step(
+        conv_in, conv_state.astype(compute_dtype), conv_w)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + n],
+                   conv_out[..., di + n:])
+
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                            # (B,H)
+
+    xh = xin.reshape(B, H, P).astype(jnp.float32)
+    upd = jnp.einsum("bn,bhp,bh->bhpn", Bm.astype(jnp.float32), xh, dt)
+    h = ssm_state * decay[..., None, None] + upd       # (B,H,P,N)
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, di).astype(compute_dtype)
+
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    y = (y * (1.0 + p["gnorm"].astype(jnp.float32))).astype(compute_dtype)
+    out = (y @ p["w_out"].astype(compute_dtype))[:, None, :]
+    return out, (new_conv_state.astype(compute_dtype), h)
+
+
+def init_ssm_cache_spec(cfg: ArchConfig, batch: int, n_layers: int,
+                        state_dtype=jnp.float32, conv_dtype=jnp.bfloat16):
+    di, n = cfg.d_inner, cfg.ssm_state
+    conv_ch = di + 2 * n
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (n_layers, batch, cfg.ssm_conv - 1, conv_ch), conv_dtype),
+        "ssm": jax.ShapeDtypeStruct(
+            (n_layers, batch, cfg.ssm_nheads, cfg.ssm_headdim,
+             cfg.ssm_state), state_dtype),
+    }

@@ -1,0 +1,358 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid, scan-over-layers.
+
+Layers are stacked on a leading 'layers' axis and executed with
+``jax.lax.scan`` — this keeps the HLO size O(1) in depth (critical for the
+40-cell x 2-mesh dry-run compile budget) and gives remat a natural
+boundary.  The KV / SSM caches ride through the same scan as per-layer xs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.api import constrain
+from repro.models import layers as ll
+from repro.models.attention import attention, attn_param_defs
+from repro.models.moe import moe_block, moe_param_defs, router_aux_loss
+from repro.models.ssm import (mamba_block, mamba_decode_step,
+                              mamba_param_defs)
+
+__all__ = ["lm_param_defs", "lm_forward", "lm_loss", "norm_def",
+           "apply_norm", "mlp_param_defs"]
+
+
+def norm_def(mk, name: str, cfg: ArchConfig, *, layers: int = 0):
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    d = {"w": mk(f"{name}.w", L + (cfg.d_model,), lax_ + ("d_model",),
+                 kind="zeros" if cfg.norm == "rmsnorm" else "ones")}
+    if cfg.norm == "layernorm":
+        d["b"] = mk(f"{name}.b", L + (cfg.d_model,), lax_ + ("d_model",),
+                    kind="zeros")
+    return d
+
+
+def apply_norm(x, p, cfg: ArchConfig):
+    if cfg.norm == "rmsnorm":
+        return ll.rmsnorm(x, p["w"])
+    return ll.layernorm(x, p["w"], p["b"])
+
+
+def mlp_param_defs(mk, prefix: str, cfg: ArchConfig, *, layers: int = 0):
+    L = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": mk(f"{prefix}.w_gate", L + (d, f),
+                         lax_ + ("d_model", "d_ff"), d),
+            "w_up": mk(f"{prefix}.w_up", L + (d, f),
+                       lax_ + ("d_model", "d_ff"), d),
+            "w_down": mk(f"{prefix}.w_down", L + (f, d),
+                         lax_ + ("d_ff", "d_model"), f),
+        }
+    return {
+        "w_up": mk(f"{prefix}.w_up", L + (d, f), lax_ + ("d_model", "d_ff"),
+                   d),
+        "w_down": mk(f"{prefix}.w_down", L + (f, d),
+                     lax_ + ("d_ff", "d_model"), f),
+    }
+
+
+def _attn_mlp_block_defs(mk, prefix: str, cfg: ArchConfig, *,
+                         layers: int = 0):
+    p = {
+        "ln1": norm_def(mk, f"{prefix}.ln1", cfg, layers=layers),
+        "attn": attn_param_defs(mk, f"{prefix}.attn", cfg, layers=layers),
+        "ln2": norm_def(mk, f"{prefix}.ln2", cfg, layers=layers),
+    }
+    if cfg.post_block_norm:
+        p["ln1_post"] = norm_def(mk, f"{prefix}.ln1_post", cfg,
+                                 layers=layers)
+        p["ln2_post"] = norm_def(mk, f"{prefix}.ln2_post", cfg,
+                                 layers=layers)
+    if cfg.is_moe:
+        p["moe"] = moe_param_defs(mk, f"{prefix}.moe", cfg, layers=layers)
+    else:
+        p["mlp"] = mlp_param_defs(mk, f"{prefix}.mlp", cfg, layers=layers)
+    return p
+
+
+def _mamba_defs_with_ln(mk, prefix: str, cfg: ArchConfig, *, layers: int):
+    p = mamba_param_defs(mk, prefix, cfg, layers=layers)
+    p["ln"] = norm_def(mk, f"{prefix}.ln", cfg, layers=layers)
+    return p
+
+
+def lm_param_defs(cfg: ArchConfig, mk):
+    V, D = cfg.padded_vocab, cfg.d_model
+    p: dict[str, Any] = {
+        "embed": mk("embed", (V, D), ("vocab", "d_model"), D),
+        "final_norm": norm_def(mk, "final_norm", cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = mk("unembed", (D, V), ("d_model", "vocab"), D)
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["blocks"] = _attn_mlp_block_defs(mk, "blocks", cfg,
+                                           layers=cfg.n_layers)
+    elif cfg.family == "ssm":
+        p["blocks"] = _mamba_defs_with_ln(mk, "blocks", cfg,
+                                          layers=cfg.n_layers)
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // (cfg.hybrid_group + 1)
+        n_mamba = G * cfg.hybrid_group
+        assert G * (cfg.hybrid_group + 1) == cfg.n_layers, cfg.name
+        p["mamba"] = _mamba_defs_with_ln(mk, "mamba", cfg, layers=n_mamba)
+        p["shared"] = _attn_mlp_block_defs(mk, "shared", cfg, layers=0)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_layer(cfg: ArchConfig, x, bp, positions, is_local,
+                    cache_k, cache_v, pos_offset, want_cache, compute_dtype):
+    h = apply_norm(x, bp["ln1"], cfg)
+    h = constrain(h, ("batch", "seq", "d_model"))
+    a_out, new_kv = attention(
+        bp["attn"], h, positions, cfg, is_local=is_local,
+        cache_k=cache_k, cache_v=cache_v, pos_offset=pos_offset,
+        compute_dtype=compute_dtype, return_kv=want_cache)
+    if cfg.post_block_norm:
+        a_out = apply_norm(a_out, bp["ln1_post"], cfg)
+    x = x + a_out
+    h = apply_norm(x, bp["ln2"], cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in bp:
+        from repro.dist.api import active_context
+        from repro.models.moe import moe_block_ep
+        ctx = active_context()
+        if ctx is not None and "expert" in ctx.mesh.shape:
+            m_out, probs = moe_block_ep(h, bp["moe"], cfg, ctx.mesh,
+                                        compute_dtype=compute_dtype,
+                                        decode=pos_offset is not None)
+        else:
+            m_out, probs = moe_block(h, bp["moe"], cfg,
+                                     compute_dtype=compute_dtype)
+        aux = router_aux_loss(probs)
+    elif cfg.mlp_act in ("swiglu", "geglu"):
+        m_out = ll.glu_mlp(h, bp["mlp"], cfg.mlp_act, compute_dtype)
+    else:
+        m_out = ll.gelu_mlp(h, bp["mlp"], compute_dtype)
+    if cfg.post_block_norm:
+        m_out = apply_norm(m_out, bp["ln2_post"], cfg)
+    x = x + m_out
+    x = constrain(x, ("batch", "seq", "d_model"))
+    return x, new_kv, aux
+
+
+def _mamba_layer(cfg: ArchConfig, x, bp, conv_state, ssm_state, decode,
+                 compute_dtype):
+    h = apply_norm(x, bp["ln"], cfg)
+    if decode:
+        out, states = mamba_decode_step(h, bp, cfg, conv_state, ssm_state,
+                                        compute_dtype)
+    else:
+        out, states = mamba_block(h, bp, cfg, compute_dtype,
+                                  conv_state=conv_state,
+                                  ssm_state=ssm_state)
+    return x + out, states
+
+
+def _maybe_remat(fn, policy: Optional[str]):
+    if policy is None:
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _run_attn_stack(params, cfg, x, positions, cache, pos_offset, mode,
+                    compute_dtype, remat_policy):
+    L = cfg.n_layers
+    if cfg.local_global_alternate:
+        is_local = (jnp.arange(L) % 2) == 0
+    elif cfg.sliding_window:
+        is_local = jnp.ones((L,), bool)
+    else:
+        is_local = jnp.zeros((L,), bool)
+    want_cache = mode in ("prefill", "decode")
+
+    def body(x, xs):
+        bp, il, ck, cv = xs
+        return_x, new_kv, aux = _attn_mlp_layer(
+            cfg, x, bp, positions, il, ck, cv, pos_offset, want_cache,
+            compute_dtype)
+        return return_x, (new_kv, aux)
+
+    body = _maybe_remat(body, remat_policy if mode == "train" else None)
+    if cache is None:
+        ck = cv = None
+        xs = (params["blocks"], is_local, None, None)
+    else:
+        xs = (params["blocks"], is_local, cache["k"], cache["v"])
+    x, (new_kv, aux) = jax.lax.scan(body, x, xs)
+    new_cache = None
+    if want_cache:
+        new_cache = {"k": new_kv[0], "v": new_kv[1]}
+    return x, new_cache, jnp.sum(aux)
+
+
+def _run_ssm_stack(params, cfg, x, cache, mode, compute_dtype,
+                   remat_policy):
+    decode = mode == "decode"
+
+    def body(x, xs):
+        bp, conv_s, ssm_s = xs
+        x, states = _mamba_layer(cfg, x, bp, conv_s, ssm_s, decode,
+                                 compute_dtype)
+        return x, states
+
+    body = _maybe_remat(body, remat_policy if mode == "train" else None)
+    if cache is None:
+        xs = (params["blocks"], None, None)
+    else:
+        xs = (params["blocks"], cache["conv"], cache["ssm"])
+    x, (conv_new, ssm_new) = jax.lax.scan(body, x, xs)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": conv_new, "ssm": ssm_new}
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _run_hybrid_stack(params, cfg, x, positions, cache, pos_offset, mode,
+                      compute_dtype, remat_policy):
+    G = cfg.n_layers // (cfg.hybrid_group + 1)
+    per = cfg.hybrid_group
+    decode = mode == "decode"
+    want_cache = mode in ("prefill", "decode")
+    shared = params["shared"]
+
+    mamba_grouped = jax.tree_util.tree_map(
+        lambda a: a.reshape((G, per) + a.shape[1:]), params["mamba"])
+
+    def group_body(x, xs):
+        mp, conv_s, ssm_s, ck, cv = xs
+
+        def inner(x, ixs):
+            bp, cs, ss = ixs
+            x, states = _mamba_layer(cfg, x, bp, cs, ss, decode,
+                                     compute_dtype)
+            return x, states
+
+        x, (conv_new, ssm_new) = jax.lax.scan(
+            inner, x, (mp, conv_s, ssm_s))
+        x, new_kv, aux = _attn_mlp_layer(
+            cfg, x, shared, positions, None, ck, cv, pos_offset,
+            want_cache, compute_dtype)
+        return x, (conv_new, ssm_new, new_kv, aux)
+
+    group_body = _maybe_remat(group_body,
+                              remat_policy if mode == "train" else None)
+    if cache is None:
+        xs = (mamba_grouped, None, None, None, None)
+    else:
+        xs = (mamba_grouped, cache["conv"], cache["ssm"],
+              cache["k"], cache["v"])
+    x, (conv_new, ssm_new, new_kv, aux) = jax.lax.scan(group_body, x, xs)
+    new_cache = None
+    if want_cache:
+        new_cache = {"conv": conv_new, "ssm": ssm_new,
+                     "k": new_kv[0], "v": new_kv[1]}
+    return x, new_cache, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+def _positions_for(cfg: ArchConfig, B: int, S: int, pos_offset):
+    if pos_offset is None:
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                               (B, S))
+    else:
+        pos = pos_offset[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
+    if cfg.rope_mode == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))   # text: t=h=w
+    return pos
+
+
+def lm_forward(params, cfg: ArchConfig, *, tokens=None, embeds=None,
+               cache=None, pos_offset=None, mode: str = "train",
+               compute_dtype=jnp.bfloat16, remat_policy=None,
+               logits_mode: str = "full"):
+    """Run the LM. Returns (logits, new_cache, aux_loss).
+
+    logits_mode: 'full' (B,S,V) | 'last' (B,1,V) | 'none' (hidden only).
+    """
+    if embeds is not None:
+        x = embeds.astype(compute_dtype)
+    else:
+        x = ll.take_embedding(params["embed"], tokens, cfg.embed_scale,
+                              compute_dtype)
+    B, S = x.shape[:2]
+    x = constrain(x, ("batch", "seq", "d_model"))
+    positions = _positions_for(cfg, B, S, pos_offset)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, new_cache, aux = _run_attn_stack(
+            params, cfg, x, positions, cache, pos_offset, mode,
+            compute_dtype, remat_policy)
+    elif cfg.family == "ssm":
+        x, new_cache, aux = _run_ssm_stack(
+            params, cfg, x, cache, mode, compute_dtype, remat_policy)
+    elif cfg.family == "hybrid":
+        x, new_cache, aux = _run_hybrid_stack(
+            params, cfg, x, positions, cache, pos_offset, mode,
+            compute_dtype, remat_policy)
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(x, params["final_norm"], cfg)
+    if logits_mode == "none":
+        return x, new_cache, aux
+    if logits_mode == "last":
+        x = x[:, -1:]
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(compute_dtype),
+                        preferred_element_type=compute_dtype)
+    logits = ll.softcap(logits.astype(jnp.float32),
+                        cfg.final_logit_softcap)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, new_cache, aux
+
+
+def lm_loss(params, cfg: ArchConfig, batch, *, compute_dtype=jnp.bfloat16,
+            remat_policy=None, aux_weight: float = 0.01):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    logits, _, aux = lm_forward(
+        params, cfg, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+        mode="train", compute_dtype=compute_dtype,
+        remat_policy=remat_policy, logits_mode="full")
+    targets = batch["targets"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32),
+                              axis=-1)[..., 0]
+    ce = jnp.mean(lse - tgt)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}

@@ -1,0 +1,122 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Three terms (seconds, per step), all per-chip:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = link_bytes_per_device / link_bw
+
+``cost_analysis()`` on the SPMD-partitioned module reports per-device flops
+and bytes.  Collective bytes are parsed from the post-optimization HLO: for
+each collective instruction we take the shard-shaped operand/result sizes
+and apply the ring-algorithm wire multiplier (all-reduce moves ~2x its
+operand bytes; all-gather moves ~the gathered result; reduce-scatter and
+all-to-all move ~their operand).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HW", "CollectiveStats", "parse_collective_bytes",
+           "roofline_report", "model_flops"]
+
+# TPU v5e-like hardware constants (per assignment).
+HW = {
+    "peak_flops_bf16": 197e12,   # FLOP/s per chip
+    "hbm_bw": 819e9,             # B/s per chip
+    "link_bw": 50e9,             # B/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+[a-z0-9]*|pred)\[([0-9,]*)\]")
+
+# wire-bytes multiplier per op (ring algorithms, large-n limit)
+_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: dict
+    count_by_op: dict
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_op.values()))
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: dict[str, float] = {}
+    count_by_op: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done" in line.split("=")[-1][:40]:
+            continue
+        op = m.group(1)
+        # operand shapes: everything after the op token
+        tail = line[m.end():]
+        op_bytes = sum(_shape_bytes(d, s) for d, s in
+                       _SHAPE_RE.findall(tail))
+        if op_bytes == 0:   # fall back to result shapes (lhs of '=')
+            head = line[:m.start()]
+            op_bytes = sum(_shape_bytes(d, s) for d, s in
+                           _SHAPE_RE.findall(head))
+        bytes_by_op[op] = bytes_by_op.get(op, 0.0) + _MULT[op] * op_bytes
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+def model_flops(n_active_params: int, tokens: int, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D forward-only."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens
+
+
+def roofline_report(*, flops_per_dev: float, bytes_per_dev: float,
+                    coll: CollectiveStats, n_chips: int,
+                    model_flops_total: float,
+                    hw: Optional[dict] = None) -> dict:
+    hw = hw or HW
+    t_compute = flops_per_dev / hw["peak_flops_bf16"]
+    t_memory = bytes_per_dev / hw["hbm_bw"]
+    t_coll = coll.total_bytes / hw["link_bw"]
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    useful = model_flops_total / n_chips / hw["peak_flops_bf16"]
+    return {
+        "irreducible_bytes_floor_s": None,   # set by caller for decode
+
+        **terms,
+        "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "roofline_fraction": useful / bound if bound > 0 else 0.0,
+        "model_flops_total": model_flops_total,
+        "hlo_flops_per_dev": flops_per_dev,
+        "useful_flops_ratio": (model_flops_total / n_chips
+                               / flops_per_dev) if flops_per_dev else 0.0,
+        "collective_bytes_by_op": coll.bytes_by_op,
+        "collective_count_by_op": coll.count_by_op,
+    }

@@ -1,0 +1,130 @@
+"""Loop-aware HLO collective accounting.
+
+XLA prints each computation once; a collective inside a scanned layer body
+executes trip-count times per step.  We split the HLO text into
+computations, find ``while`` instructions, recover each loop's trip count
+from the largest integer constant in its condition computation (fallback:
+caller-provided default), and accumulate collective bytes recursively:
+
+    eff(comp) = own_collectives + sum_while trip * eff(body)
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from repro.roofline.analysis import CollectiveStats, _COLL_RE, _SHAPE_RE, \
+    _shape_bytes, _MULT
+
+__all__ = ["parse_collectives_hierarchical"]
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"=\s*[^=]*while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+)
+_WHILE_RE2 = re.compile(
+    r"=\s*[^=]*while\(.*?body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)",
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Computation headers are column-0 lines '<name> (params) -> ty {'."""
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        is_hdr = (line and not line[0].isspace() and "->" in line
+                  and line.rstrip().endswith("{"))
+        if is_hdr:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _line_coll_bytes(line: str):
+    m = _COLL_RE.search(line)
+    if not m or "-done" in line.split("=")[-1][:40]:
+        return None
+    op = m.group(1)
+    tail = line[m.end():]
+    b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(tail))
+    if b == 0:
+        head = line[:m.start()]
+        b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+    return op, _MULT[op] * b
+
+
+def parse_collectives_hierarchical(hlo_text: str,
+                                   default_trip: int = 1
+                                   ) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+
+    def trip_of(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        best = 0
+        for ln in lines:
+            for c in _CONST_RE.findall(ln):
+                best = max(best, int(c))
+        return best if best > 0 else default_trip
+
+    memo: dict[str, tuple[dict, dict]] = {}
+
+    def eff(name: str, depth: int = 0) -> tuple[dict, dict]:
+        if name in memo:
+            return memo[name]
+        if depth > 16 or name not in comps:
+            return {}, {}
+        by_op: dict[str, float] = {}
+        cnt: dict[str, int] = {}
+        memo[name] = (by_op, cnt)     # break cycles
+        for line in comps[name]:
+            got = _line_coll_bytes(line)
+            if got:
+                op, b = got
+                by_op[op] = by_op.get(op, 0.0) + b
+                cnt[op] = cnt.get(op, 0) + 1
+                continue
+            wm = _WHILE_RE.search(line) or _WHILE_RE2.search(line)
+            if wm and "while(" in line:
+                g = wm.groups()
+                cond, body = (g[0], g[1]) if _WHILE_RE.search(line) \
+                    else (g[1], g[0])
+                t = trip_of(cond)
+                sub_b, sub_c = eff(body, depth + 1)
+                for op, b in sub_b.items():
+                    by_op[op] = by_op.get(op, 0.0) + t * b
+                for op, c in sub_c.items():
+                    cnt[op] = cnt.get(op, 0) + t * c
+            elif "to_apply=" in line and ("call(" in line
+                                          or "conditional(" in line):
+                cm = _CALL_RE.search(line)
+                if cm:
+                    sub_b, sub_c = eff(cm.group(1), depth + 1)
+                    for op, b in sub_b.items():
+                        by_op[op] = by_op.get(op, 0.0) + b
+                    for op, c in sub_c.items():
+                        cnt[op] = cnt.get(op, 0) + c
+        return by_op, cnt
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: flat parse
+        from repro.roofline.analysis import parse_collective_bytes
+        return parse_collective_bytes(hlo_text)
+    by_op, cnt = eff(entry)
+    return CollectiveStats(by_op, cnt)

@@ -1,0 +1,3 @@
+from repro.serve.engine import Request, ServeConfig, Engine
+
+__all__ = ["Request", "ServeConfig", "Engine"]

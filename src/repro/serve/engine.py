@@ -1,0 +1,148 @@
+"""Serving engine: batched prefill + decode with an instrumented request
+queue and monitor-driven admission.
+
+The request queue is a paper-instrumented stream: the monitor's converged
+non-blocking service rate (tokens/s the engine can sustain) drives
+admission control and batch sizing — queueing-model-based, not reactive.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.monitor import MonitorConfig
+from repro.core.queueing import optimal_buffer_size
+from repro.models.api import Model
+from repro.streams import InstrumentedQueue, MonitorThread, QueueMonitor
+
+__all__ = ["Request", "ServeConfig", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray           # prompt token ids
+    max_new: int = 16
+    out: Optional[np.ndarray] = None
+    done: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 8
+    max_seq: int = 256
+    queue_capacity: int = 64
+
+
+class Engine:
+    """Continuous-batching engine (static batch per generation round)."""
+
+    def __init__(self, model: Model, params, scfg: ServeConfig,
+                 monitor_cfg: Optional[MonitorConfig] = None):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.queue = InstrumentedQueue(scfg.queue_capacity, item_bytes=1,
+                                       name="requests")
+        self.qmon = QueueMonitor(self.queue,
+                                 monitor_cfg or MonitorConfig(
+                                     window=16, min_q_samples=16),
+                                 base_period_s=10e-3)
+        self.monitor_thread = MonitorThread([self.qmon])
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.served = 0
+
+    # ---------------- client API --------------------------------------------
+    def submit(self, req: Request, timeout: float = 10.0) -> bool:
+        return self.queue.push(req, timeout=timeout)
+
+    def start(self):
+        self.monitor_thread.start()
+        self._worker.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self._worker.join(timeout=30)
+        self.monitor_thread.stop()
+
+    # ---------------- engine loop --------------------------------------------
+    def _take_batch(self) -> list[Request]:
+        batch: list[Request] = []
+        deadline = time.monotonic() + 20e-3
+        while (len(batch) < self.scfg.batch_size
+               and time.monotonic() < deadline):
+            r = self.queue.try_pop()
+            if r is None:
+                if batch:
+                    break
+                time.sleep(1e-3)
+                deadline = time.monotonic() + 20e-3
+                continue
+            batch.append(r)
+        return batch
+
+    def _loop(self):
+        cfg = self.model.cfg
+        B, S = self.scfg.batch_size, self.scfg.max_seq
+        while not self._stop.is_set():
+            batch = self._take_batch()
+            if not batch:
+                continue
+            # right-pad the round to B with copies (masked out on return)
+            live = len(batch)
+            while len(batch) < B:
+                batch.append(batch[-1])
+            plens = np.array([min(len(r.tokens), S - r.max_new)
+                              for r in batch], np.int32)
+            L = int(plens.max())
+            toks = np.zeros((B, L), np.int32)
+            for i, r in enumerate(batch):
+                toks[i, :plens[i]] = r.tokens[:plens[i]]
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)})
+            # pad cache seq dim to S for decoding
+            def pad_seq(v):
+                if v.ndim >= 3 and v.shape[2] == L:
+                    pw = [(0, 0)] * v.ndim
+                    pw[2] = (0, S - L)
+                    return jnp.pad(v, pw)
+                return v
+            cache = jax.tree_util.tree_map(pad_seq, cache)
+            next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            pos = jnp.asarray(plens)
+            outs = [[] for _ in range(B)]
+            max_new = max(r.max_new for r in batch[:live])
+            for _ in range(max_new):
+                for i in range(live):
+                    outs[i].append(int(next_tok[i]))
+                next_tok, cache = self._decode(self.params, cache,
+                                               next_tok, pos)
+                pos = pos + 1
+            for i in range(live):
+                r = batch[i]
+                r.out = np.array(outs[i][:r.max_new], np.int32)
+                r.done.set()
+                self.served += 1
+
+    # ---------------- monitor-driven tuning ---------------------------------
+    def recommended_queue_capacity(self) -> int:
+        lam = self.qmon.arrival_rate()
+        mu = self.qmon.service_rate()
+        if lam <= 0 or mu <= 0:
+            return self.queue.capacity
+        return optimal_buffer_size(lam, mu, target_frac=0.99)
+
+    def service_rate(self) -> float:
+        return self.qmon.service_rate()

@@ -1,0 +1,6 @@
+from repro.streams.queue import InstrumentedQueue, EndStats
+from repro.streams.monitor_thread import QueueMonitor, MonitorThread
+from repro.streams.pipeline import Stage, Pipeline, STOP
+
+__all__ = ["InstrumentedQueue", "EndStats", "QueueMonitor", "MonitorThread",
+           "Stage", "Pipeline", "STOP"]

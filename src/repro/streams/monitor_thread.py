@@ -1,0 +1,94 @@
+"""The paper's monitor thread ("the eye", Fig. 5).
+
+One thread instruments a set of queues: every period T it copies-and-zeros
+each queue end's ``tc`` and ``blocked`` flag and feeds the per-end
+``HostMonitor`` (Algorithm 1).  T adapts per queue via the paper's
+sampling-period controller (§IV-A).  Converged estimates are pushed to the
+run-time controllers (buffer autotuner / parallelism / straggler).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+from repro.core.monitor import (HostMonitor, MonitorConfig,
+                                SamplingPeriodController)
+from repro.streams.queue import InstrumentedQueue
+
+__all__ = ["QueueMonitor", "MonitorThread"]
+
+
+class QueueMonitor:
+    """Per-queue instrumentation state: head (departure/service-rate of the
+    consumer) + tail (arrival-rate of the producer) monitors and a shared
+    sampling-period controller."""
+
+    def __init__(self, queue: InstrumentedQueue,
+                 cfg: Optional[MonitorConfig] = None,
+                 base_period_s: float = 1e-3):
+        self.queue = queue
+        self.cfg = cfg or MonitorConfig()
+        self.period = SamplingPeriodController(
+            base_latency_s=base_period_s, max_period_s=base_period_s * 64)
+        self.head = HostMonitor(self.cfg, period_s=self.period.period_s,
+                                item_bytes=queue.item_bytes)
+        self.tail = HostMonitor(self.cfg, period_s=self.period.period_s,
+                                item_bytes=queue.item_bytes)
+        self._last_t = time.monotonic()
+
+    def sample(self) -> None:
+        now = time.monotonic()
+        realized = now - self._last_t
+        self._last_t = now
+        h_tc, h_blk, _ = self.queue.head.sample_and_reset()
+        t_tc, t_blk, _ = self.queue.tail.sample_and_reset()
+        # scale counts to the nominal period so T drift does not alias rate
+        scale = (self.period.period_s / realized) if realized > 0 else 1.0
+        self.head.update(h_tc * scale, h_blk)
+        self.tail.update(t_tc * scale, t_blk)
+        new_T = self.period.observe(realized, h_blk or t_blk)
+        self.head.period_s = new_T
+        self.tail.period_s = new_T
+
+    # readouts -----------------------------------------------------------
+    def service_rate(self) -> float:
+        """Consumer's non-blocking service rate, items/s."""
+        return self.head.rate_items_per_s()
+
+    def arrival_rate(self) -> float:
+        return self.tail.rate_items_per_s()
+
+
+class MonitorThread(threading.Thread):
+    """One instrumentation thread for a whole pipeline (TPU adaptation of
+    the paper's thread-per-queue design — see DESIGN.md section 3)."""
+
+    def __init__(self, monitors: list[QueueMonitor],
+                 on_converged: Optional[Callable] = None,
+                 min_sleep_s: float = 2e-4):
+        super().__init__(daemon=True, name="repro-monitor")
+        self.monitors = monitors
+        self.on_converged = on_converged
+        self.min_sleep_s = min_sleep_s
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        while not self._stop.is_set():
+            next_wake = time.monotonic() + 1.0
+            for qm in self.monitors:
+                due = qm._last_t + qm.period.period_s
+                now = time.monotonic()
+                if now >= due:
+                    before = qm.head.epoch
+                    qm.sample()
+                    if self.on_converged and qm.head.epoch > before:
+                        self.on_converged(qm)
+                    due = qm._last_t + qm.period.period_s
+                next_wake = min(next_wake, due)
+            delay = max(next_wake - time.monotonic(), self.min_sleep_s)
+            self._stop.wait(delay)
+
+    def stop(self) -> None:
+        self._stop.set()

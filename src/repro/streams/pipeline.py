@@ -1,0 +1,157 @@
+"""Streaming pipeline graph: RaftLib-style kernels connected by
+InstrumentedQueues, each kernel on its own thread, one monitor thread per
+pipeline, and the run-time controllers closing the loop.
+
+This is the substrate both the paper's applications (matrix multiply,
+Rabin-Karp — examples/streaming_apps.py) and the training data pipeline
+(repro.data) are built on.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Iterable, Optional
+
+from repro.core.controller import BufferAutotuner, ParallelismController
+from repro.core.monitor import MonitorConfig
+from repro.streams.monitor_thread import MonitorThread, QueueMonitor
+from repro.streams.queue import InstrumentedQueue
+
+__all__ = ["Stage", "Pipeline", "STOP"]
+
+STOP = object()   # sentinel flowing through the pipe at end-of-stream
+
+
+class Stage:
+    """A compute kernel: ``fn(item) -> item | None`` (None = filtered).
+    Source stages take ``fn=None`` and an ``source`` iterable."""
+
+    def __init__(self, name: str, fn: Optional[Callable] = None,
+                 source: Optional[Iterable] = None, replicas: int = 1):
+        assert (fn is None) != (source is None)
+        self.name = name
+        self.fn = fn
+        self.source = source
+        self.replicas = replicas
+        self.processed = 0
+        self._stop_left = replicas
+        self._stop_lock = threading.Lock()
+
+
+class _Worker(threading.Thread):
+    def __init__(self, stage: Stage, in_q, out_q, barrier_count=None):
+        super().__init__(daemon=True, name=f"repro-{stage.name}")
+        self.stage, self.in_q, self.out_q = stage, in_q, out_q
+
+    def run(self):
+        st = self.stage
+        if st.source is not None:
+            for item in st.source:
+                self.out_q.push(item)
+            self.out_q.push(STOP)
+            return
+        while True:
+            item = self.in_q.pop()
+            if item is STOP:
+                # countdown: only the LAST replica forwards STOP downstream
+                with st._stop_lock:
+                    st._stop_left -= 1
+                    last = st._stop_left == 0
+                if not last:
+                    self.in_q.push(STOP)   # wake sibling replicas
+                elif self.out_q is not None:
+                    self.out_q.push(STOP)
+                return
+            out = st.fn(item)
+            st.processed += 1
+            if out is not None and self.out_q is not None:
+                self.out_q.push(out)
+
+
+class Pipeline:
+    """Linear pipeline with monitoring + optional autotuning.
+
+    >>> pipe = Pipeline([Stage("src", source=range(1000)),
+    ...                  Stage("work", fn=lambda x: x * 2)],
+    ...                 capacity=64)
+    >>> results = pipe.run_collect()
+    """
+
+    def __init__(self, stages: list[Stage], capacity: int = 64,
+                 item_bytes: int = 8,
+                 monitor_cfg: Optional[MonitorConfig] = None,
+                 base_period_s: float = 1e-3,
+                 autotune: bool = False):
+        self.stages = stages
+        self.queues: list[InstrumentedQueue] = []
+        self.qmonitors: list[QueueMonitor] = []
+        self.autotune = autotune
+        self._tuners: dict[int, BufferAutotuner] = {}
+        self.sink: list[Any] = []
+        self._sink_lock = threading.Lock()
+
+        for i in range(len(stages)):
+            q = InstrumentedQueue(capacity, item_bytes,
+                                  name=f"{stages[i].name}->"
+                                       f"{stages[i+1].name if i+1 < len(stages) else 'sink'}")
+            self.queues.append(q)
+            self.qmonitors.append(QueueMonitor(
+                q, monitor_cfg, base_period_s=base_period_s))
+            if autotune:
+                self._tuners[i] = BufferAutotuner(current=capacity)
+
+        self.monitor = MonitorThread(self.qmonitors,
+                                     on_converged=self._on_converged)
+        self.parallelism = ParallelismController()
+
+    def _on_converged(self, qm: QueueMonitor):
+        if not self.autotune:
+            return
+        i = self.qmonitors.index(qm)
+        lam = qm.arrival_rate()
+        mu = qm.service_rate()
+        if lam > 0 and mu > 0:
+            _, resized = self._tuners[i].maybe_resize(lam, mu)
+            if resized:
+                qm.queue.resize(self._tuners[i].current)
+
+    def run_collect(self, timeout_s: float = 300.0) -> list:
+        workers: list[_Worker] = []
+        for i, st in enumerate(self.stages):
+            in_q = self.queues[i - 1] if i > 0 else None
+            out_q = self.queues[i]
+            for _ in range(st.replicas):
+                workers.append(_Worker(st, in_q, out_q))
+
+        def drain():
+            q = self.queues[-1]
+            while True:
+                item = q.pop()
+                if item is STOP:
+                    return
+                with self._sink_lock:
+                    self.sink.append(item)
+
+        drainer = threading.Thread(target=drain, daemon=True)
+        self.monitor.start()
+        for w in workers:
+            w.start()
+        drainer.start()
+        drainer.join(timeout_s)
+        self.monitor.stop()
+        return self.sink
+
+    # observability ----------------------------------------------------------
+    def rates(self) -> dict:
+        out = {}
+        for qm in self.qmonitors:
+            out[qm.queue.name] = {
+                "service_rate": qm.service_rate(),
+                "arrival_rate": qm.arrival_rate(),
+                "epochs": qm.head.epoch,
+                "T": qm.period.period_s,
+                "blocking_frac": qm.head.observed_blocking_fraction(),
+                "capacity": qm.queue.capacity,
+            }
+        return out

@@ -1,0 +1,130 @@
+"""Instrumented SPSC ring buffer — the paper's queue mechanism (§III).
+
+The queue keeps exactly the state the paper prescribes and nothing more:
+a non-blocking transaction counter ``tc`` and a ``blocked`` boolean at each
+end (head = consumer/departures, tail = producer/arrivals).  The monitor
+thread copies-and-zeros the counters without locking (single-writer /
+single-reader ints are GIL-atomic in CPython, mirroring the paper's
+non-locking counter contract — including the benign race where a clear
+lands mid-firing, which the heuristic is built to tolerate).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Optional
+
+__all__ = ["InstrumentedQueue", "EndStats"]
+
+
+class EndStats:
+    """One queue end's instrumentation: tc counter + blocked flag."""
+    __slots__ = ("tc", "blocked", "bytes_count")
+
+    def __init__(self):
+        self.tc = 0
+        self.blocked = False
+        self.bytes_count = 0
+
+    def sample_and_reset(self) -> tuple[int, bool, int]:
+        """Monitor-side copy-and-zero (non-locking)."""
+        tc, blocked, nbytes = self.tc, self.blocked, self.bytes_count
+        self.tc = 0
+        self.blocked = False
+        self.bytes_count = 0
+        return tc, blocked, nbytes
+
+
+class InstrumentedQueue:
+    """Bounded SPSC queue with head/tail instrumentation and live resize.
+
+    Producer API: ``try_push`` / ``push`` (blocking with backoff).
+    Consumer API: ``try_pop`` / ``pop``.
+    Monitor API:  ``head``/``tail`` EndStats, ``resize``.
+    """
+
+    def __init__(self, capacity: int = 64, item_bytes: int = 0,
+                 name: str = "q"):
+        self.name = name
+        self.item_bytes = item_bytes
+        self._buf: list[Any] = [None] * capacity
+        self._cap = capacity
+        self._head = 0      # next pop index (monotonic)
+        self._tail = 0      # next push index (monotonic)
+        self.head = EndStats()   # departures (reads by consumer)
+        self.tail = EndStats()   # arrivals (writes by producer)
+        self._resize_lock = threading.Lock()
+
+    # ---------------- producer ----------------------------------------------
+    def try_push(self, item) -> bool:
+        if self._tail - self._head >= self._cap:
+            self.tail.blocked = True
+            return False
+        self._buf[self._tail % self._cap] = item
+        self._tail += 1
+        self.tail.tc += 1
+        if self.item_bytes:
+            self.tail.bytes_count += self.item_bytes
+        return True
+
+    def push(self, item, timeout: Optional[float] = None) -> bool:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        backoff = 1e-6
+        while not self.try_push(item):
+            if deadline is not None and time.monotonic() > deadline:
+                return False
+            time.sleep(backoff)
+            backoff = min(backoff * 2, 1e-3)
+        return True
+
+    # ---------------- consumer ----------------------------------------------
+    def try_pop(self):
+        if self._head >= self._tail:
+            self.head.blocked = True
+            return None
+        with self._resize_lock:
+            item = self._buf[self._head % self._cap]
+            self._buf[self._head % self._cap] = None
+            self._head += 1
+        self.head.tc += 1
+        if self.item_bytes:
+            self.head.bytes_count += self.item_bytes
+        return item
+
+    def pop(self, timeout: Optional[float] = None):
+        deadline = None if timeout is None else time.monotonic() + timeout
+        backoff = 1e-6
+        while True:
+            item = self.try_pop()
+            if item is not None:
+                return item
+            if deadline is not None and time.monotonic() > deadline:
+                return None
+            time.sleep(backoff)
+            backoff = min(backoff * 2, 1e-3)
+
+    # ---------------- monitor / controller ----------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def __len__(self) -> int:
+        return self._tail - self._head
+
+    def resize(self, new_capacity: int) -> None:
+        """Controller-driven re-allocation (the paper resizes out-bound
+        queues both to tune and to create observation windows)."""
+        if new_capacity < 1:
+            return
+        with self._resize_lock:
+            items = [self._buf[i % self._cap]
+                     for i in range(self._head, self._tail)]
+            if len(items) > new_capacity:
+                return  # never drop
+            self._buf = items + [None] * (new_capacity - len(items))
+            self._cap = new_capacity
+            self._tail = self._tail - self._head
+            self._head = 0
+            # re-pack indices (buffer re-based)
+            self._buf = (self._buf + [None] * 0)

@@ -1,0 +1,198 @@
+"""Optimizers: AdamW (fp32 moments) and AdamW8bit (block-quantized int8
+moments with per-row fp32 scales) — the 8-bit variant is what lets
+grok-1-314b train on a single 256-chip pod (DESIGN.md section 5).
+
+Implemented directly on pytrees (no optax dependency in this environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "lr_schedule", "init_opt_state", "opt_update",
+           "opt_state_axes", "abstract_opt_state", "clip_by_global_norm",
+           "pick_optimizer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adamw8bit
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+
+
+def pick_optimizer(n_params: int) -> str:
+    """fp32 Adam moments don't fit HBM beyond ~100B params on one pod."""
+    return "adamw8bit" if n_params > 100e9 else "adamw"
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(
+        step)
+    warm = cfg.lr_peak * (step + 1.0) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (
+        1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+# ---------------------------------------------------------------------------
+# state construction (real / abstract / axes — mirrors the param factory)
+# ---------------------------------------------------------------------------
+
+def _scale_shape(shape):
+    return shape[:-1] if len(shape) >= 1 else shape
+
+
+def init_opt_state(name: str, params):
+    if name == "adamw":
+        return {
+            "m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+    if name == "adamw8bit":
+        z8 = lambda p: jnp.zeros(p.shape, jnp.int8)          # noqa: E731
+        zs = lambda p: jnp.zeros(_scale_shape(p.shape),      # noqa: E731
+                                 jnp.float32)
+        return {
+            "m_q": jax.tree_util.tree_map(z8, params),
+            "m_s": jax.tree_util.tree_map(zs, params),
+            "v_q": jax.tree_util.tree_map(z8, params),
+            "v_s": jax.tree_util.tree_map(zs, params),
+        }
+    raise ValueError(name)
+
+
+def abstract_opt_state(name: str, abstract_params):
+    sds = jax.ShapeDtypeStruct
+    if name == "adamw":
+        f = lambda p: sds(p.shape, jnp.float32)              # noqa: E731
+        return {"m": jax.tree_util.tree_map(f, abstract_params),
+                "v": jax.tree_util.tree_map(f, abstract_params)}
+    if name == "adamw8bit":
+        q = lambda p: sds(p.shape, jnp.int8)                 # noqa: E731
+        s = lambda p: sds(_scale_shape(p.shape), jnp.float32)  # noqa: E731
+        return {"m_q": jax.tree_util.tree_map(q, abstract_params),
+                "m_s": jax.tree_util.tree_map(s, abstract_params),
+                "v_q": jax.tree_util.tree_map(q, abstract_params),
+                "v_s": jax.tree_util.tree_map(s, abstract_params)}
+    raise ValueError(name)
+
+
+def opt_state_axes(name: str, param_axes):
+    """Logical axes for the optimizer state (for the sharding engine)."""
+    is_axes = lambda x: isinstance(x, tuple)                 # noqa: E731
+    same = lambda a: a                                       # noqa: E731
+    drop_last = lambda a: a[:-1] if len(a) >= 1 else a       # noqa: E731
+    if name == "adamw":
+        return {"m": jax.tree_util.tree_map(same, param_axes,
+                                            is_leaf=is_axes),
+                "v": jax.tree_util.tree_map(same, param_axes,
+                                            is_leaf=is_axes)}
+    if name == "adamw8bit":
+        return {"m_q": jax.tree_util.tree_map(same, param_axes,
+                                              is_leaf=is_axes),
+                "m_s": jax.tree_util.tree_map(drop_last, param_axes,
+                                              is_leaf=is_axes),
+                "v_q": jax.tree_util.tree_map(same, param_axes,
+                                              is_leaf=is_axes),
+                "v_s": jax.tree_util.tree_map(drop_last, param_axes,
+                                              is_leaf=is_axes)}
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# updates
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+def _q8(x):
+    """Per-row (last dim) symmetric int8 quantization."""
+    s = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    safe = jnp.where(s > 0, s, 1.0)[..., None]
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def _dq8(q, s):
+    return q.astype(jnp.float32) * s[..., None]
+
+
+def opt_update(name: str, cfg: OptConfig, params, grads, state, step):
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    if name == "adamw":
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * m + (1.0 - cfg.b1) * g
+            v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * pf)
+            return pf.astype(p.dtype), m, v
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"],
+                                     state["v"])
+        new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                       is_leaf=lambda x: isinstance(x,
+                                                                    tuple))
+        new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                       is_leaf=lambda x: isinstance(x,
+                                                                    tuple))
+        new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                       is_leaf=lambda x: isinstance(x,
+                                                                    tuple))
+        return new_p, {"m": new_m, "v": new_v}
+
+    if name == "adamw8bit":
+        def upd(p, g, mq, ms, vq, vs):
+            g = g.astype(jnp.float32)
+            m = cfg.b1 * _dq8(mq, ms) + (1.0 - cfg.b1) * g
+            # v is stored in sqrt-space: linear int8 cannot represent v's
+            # dynamic range (tiny second moments quantize to 0 and the
+            # update explodes); sqrt halves the range in decades.
+            v_prev = _dq8(vq, vs) ** 2
+            v = cfg.b2 * v_prev + (1.0 - cfg.b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                            + cfg.weight_decay * pf)
+            mq, ms = _q8(m)
+            vq, vs = _q8(jnp.sqrt(v))
+            return pf.astype(p.dtype), mq, ms, vq, vs
+        out = jax.tree_util.tree_map(upd, params, grads, state["m_q"],
+                                     state["m_s"], state["v_q"],
+                                     state["v_s"])
+        pick = lambda i: jax.tree_util.tree_map(                 # noqa: E731
+            lambda o: o[i], out,
+            is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m_q": pick(1), "m_s": pick(2),
+                         "v_q": pick(3), "v_s": pick(4)}
+    raise ValueError(name)

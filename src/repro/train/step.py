@@ -1,0 +1,92 @@
+"""Train-step builder: value_and_grad -> clip -> optimizer, as one jittable
+function over a {params, opt, step} state pytree."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.train.optimizer import (OptConfig, clip_by_global_norm,
+                                   lr_schedule, opt_update)
+
+__all__ = ["TrainConfig", "make_train_step", "make_train_state_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    remat_policy: Optional[str] = "dots"
+    microbatches: int = 1            # grad accumulation
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    ocfg = tcfg.opt
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat_policy=tcfg.remat_policy)
+
+    def train_step(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+
+        if tcfg.microbatches > 1:
+            def micro(carry, mb):
+                (l, mets), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc_l, acc_g = carry
+                acc_g = jax.tree_util.tree_map(jnp.add, acc_g, g)
+                return (acc_l + l, acc_g), mets
+            n = tcfg.microbatches
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), metrics = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero_g), mbs)
+            loss = loss / n
+            grads = jax.tree_util.tree_map(lambda g: g / n, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, ocfg.clip_norm)
+        new_params, new_opt = opt_update(ocfg.name, ocfg, params, grads,
+                                         opt, step)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": step + 1}
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm,
+                       lr=lr_schedule(ocfg, step))
+        return new_state, metrics
+
+    return train_step
+
+
+def make_train_state_specs(model: Model, tcfg: TrainConfig, ctx):
+    """(abstract_state, sharding_tree) for AOT lowering / init."""
+    from repro.dist.sharding import param_specs_tree
+    from repro.train.optimizer import abstract_opt_state, opt_state_axes
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    ap = model.abstract_params(jnp.float32)
+    axes = model.param_axes()
+    opt_abs = abstract_opt_state(tcfg.opt.name, ap)
+    opt_axes = opt_state_axes(tcfg.opt.name, axes)
+
+    abstract = {"params": ap, "opt": opt_abs,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    p_specs = param_specs_tree(axes, ap, ctx.mesh, ctx.param_rules)
+    o_specs = param_specs_tree(opt_axes, opt_abs, ctx.mesh,
+                               ctx.param_rules)
+    to_sh = lambda spec: NamedSharding(ctx.mesh, spec)       # noqa: E731
+    shardings = {
+        "params": jax.tree_util.tree_map(to_sh, p_specs),
+        "opt": jax.tree_util.tree_map(to_sh, o_specs),
+        "step": NamedSharding(ctx.mesh, PartitionSpec()),
+    }
+    return abstract, shardings

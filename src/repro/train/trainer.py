@@ -1,0 +1,91 @@
+"""Trainer: the end-to-end loop wiring together the instrumented data
+pipeline, the train step, checkpointing, and the monitor-driven
+controllers (prefetch sizing, straggler detection)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import CheckpointManager
+from repro.core.controller import BufferAutotuner
+from repro.ft import FaultToleranceManager
+from repro.models.api import Model
+from repro.train.optimizer import init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+__all__ = ["Trainer", "TrainerConfig"]
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    train: TrainConfig = dataclasses.field(default_factory=TrainConfig)
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    log_every: int = 10
+    param_dtype: Any = jnp.float32
+
+
+class Trainer:
+    def __init__(self, model: Model, tcfg: TrainerConfig, seed: int = 0):
+        self.model = model
+        self.tcfg = tcfg
+        key = jax.random.PRNGKey(seed)
+        params = model.init_params(key, tcfg.param_dtype)
+        opt = init_opt_state(tcfg.train.opt.name, params)
+        self.state = {"params": params, "opt": opt,
+                      "step": jnp.zeros((), jnp.int32)}
+        self.step_fn = jax.jit(make_train_step(model, tcfg.train),
+                               donate_argnums=(0,))
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+        self.ft = FaultToleranceManager(n_hosts=1)
+        self.autotuner = BufferAutotuner(current=16)
+        self.history: list[dict] = []
+
+    def maybe_restore(self) -> int:
+        if self.ckpt is None:
+            return 0
+        state, step = self.ckpt.restore(self.state)
+        if state is not None:
+            self.state = state
+            return int(step)
+        return 0
+
+    def fit(self, data_iter, steps: int) -> list[dict]:
+        start = int(self.state["step"])
+        t_last = time.time()
+        steps_done = 0
+        for batch in data_iter:
+            if steps_done >= steps:
+                break
+            jbatch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.state, metrics = self.step_fn(self.state, jbatch)
+            steps_done += 1
+            cur = start + steps_done
+
+            if steps_done % self.tcfg.log_every == 0:
+                now = time.time()
+                dt = now - t_last
+                t_last = now
+                rate = self.tcfg.log_every / dt
+                # feed the host step stream into the FT monitor
+                self.ft.rates.record_steps("host0", self.tcfg.log_every,
+                                           dt)
+                self.ft.heartbeats.beat("host0")
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec.update(step=cur, steps_per_s=rate)
+                self.history.append(rec)
+
+            if (self.ckpt is not None
+                    and steps_done % self.tcfg.ckpt_every == 0):
+                self.ckpt.save(cur, jax.device_get(self.state))
+        if self.ckpt is not None and steps_done:
+            self.ckpt.save(start + steps_done,
+                           jax.device_get(self.state), blocking=True)
+        return self.history

@@ -1,0 +1,98 @@
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.ft import (FaultToleranceManager, HeartbeatRegistry,
+                      plan_elastic_mesh)
+
+
+def _state(step=0):
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32)
+                       .reshape(3, 4),
+                       "b": jnp.ones((4,), jnp.float32) * step},
+            "step": jnp.asarray(step, jnp.int32)}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    s = _state(7)
+    mgr.save(7, s, blocking=True)
+    restored, step = mgr.restore(_state())
+    assert step == 7
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  s["params"]["w"])
+    np.testing.assert_array_equal(restored["params"]["b"],
+                                  s["params"]["b"])
+
+
+def test_ckpt_auto_resume_latest_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, _state(step), blocking=True)
+    assert mgr.steps() == [3, 4]          # gc keeps last 2
+    _, step = mgr.restore(_state())
+    assert step == 4
+
+
+def test_ckpt_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1), blocking=True)
+    leaf = next((tmp_path / "step_1").glob("leaf_0.npy"))
+    arr = np.load(leaf)
+    arr_corrupt = arr.copy()
+    arr_corrupt.flat[0] += 1
+    np.save(leaf, arr_corrupt)
+    with pytest.raises(IOError, match="corrupt"):
+        mgr.restore(_state())
+
+
+def test_ckpt_crash_mid_write_is_invisible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, _state(5), blocking=True)
+    # simulate a crashed partial write: tmp dir left behind
+    (tmp_path / ".tmp_step_6").mkdir()
+    (tmp_path / ".tmp_step_6" / "leaf_0.npy").write_bytes(b"garbage")
+    assert mgr.latest_step() == 5          # tmp dirs never count
+    _, step = mgr.restore(_state())
+    assert step == 5
+
+
+def test_heartbeat_dead_host():
+    hb = HeartbeatRegistry(timeout_s=0.05)
+    hb.beat("a")
+    hb.beat("b")
+    time.sleep(0.08)
+    hb.beat("b")
+    assert hb.dead_hosts() == ["a"]
+    assert hb.alive() == ["b"]
+
+
+def test_elastic_plan_shrinks_data_axis():
+    plan = plan_elastic_mesh(256, failed_chips=16)
+    assert plan.new_shape == (15, 16)
+    assert plan.n_chips == 240
+    plan2 = plan_elastic_mesh(256, failed_chips=0)
+    assert plan2.new_shape == (16, 16)
+
+
+def test_ft_manager_detects_straggler_and_plans():
+    ftm = FaultToleranceManager(n_hosts=8, chips_per_host=4,
+                                heartbeat_timeout_s=100.0)
+    for h in range(8):
+        ftm.heartbeats.beat(f"host{h}")
+    # hosts 0-6 run at 10 steps/s; host7 at 5 -> straggler
+    rng = np.random.default_rng(0)
+    for _ in range(600):
+        for h in range(8):
+            rate = 5.0 if h == 7 else 10.0
+            ftm.rates.record_steps(f"host{h}",
+                                   rng.poisson(rate), 1.0)
+    plan = ftm.assess(latest_ckpt_step=123)
+    assert plan is not None
+    assert "host7" in plan.dropped_hosts
+    assert plan.restart_step == 123
+    assert plan.n_chips < 32

@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+
+from repro.core.controller import (BufferAutotuner, DistributionClassifier,
+                                   ParallelismController, StragglerDetector)
+from repro.core.queueing import mm1k_throughput
+
+
+def test_autotuner_recommendation_achieves_target():
+    bt = BufferAutotuner(target_frac=0.99, current=4)
+    k = bt.recommend(lam=9e5, mu=1e6)
+    assert float(mm1k_throughput(9e5, 1e6, k)) >= 0.99 * 9e5
+
+
+def test_autotuner_hysteresis():
+    bt = BufferAutotuner(current=64, resize_factor=1.5)
+    k, resized = bt.maybe_resize(lam=1e5, mu=1e6)   # tiny rho -> small K
+    assert resized and k < 64
+    k2, resized2 = bt.maybe_resize(lam=1.05e5, mu=1e6)
+    assert not resized2                              # within hysteresis
+
+
+def test_parallelism_controller():
+    pc = ParallelismController(headroom=1.2)
+    assert pc.replicas(upstream_rate=10e6, stage_rate=1e6) == 12
+    assert pc.replicas(upstream_rate=1e5, stage_rate=1e6) == 1
+    n, change = pc.should_scale(1, 5e6, 1e6)
+    assert change and n == 6
+
+
+def test_straggler_detector():
+    sd = StragglerDetector(threshold=0.8, min_hosts=4)
+    for i in range(7):
+        sd.report(f"h{i}", 100.0)
+    sd.report("h7", 50.0)
+    assert sd.stragglers() == ["h7"]
+    assert sd.healthy_fraction() == pytest.approx(7 / 8)
+
+
+def test_distribution_classifier():
+    rng = np.random.default_rng(0)
+    dc = DistributionClassifier()
+    dc.update_batch(rng.exponential(1.0, 800))
+    assert dc.classify() == "M"
+    dd = DistributionClassifier()
+    dd.update_batch(np.full(100, 2.5) + rng.normal(0, 0.01, 100))
+    assert dd.classify() == "D"

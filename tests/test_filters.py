@@ -1,0 +1,59 @@
+import numpy as np
+import pytest
+from scipy import signal
+
+from repro.core.filters import (convolve_valid, gaussian_filter_valid,
+                                gaussian_kernel, log_filter_valid,
+                                log_kernel)
+
+
+def test_gaussian_kernel_matches_eq2():
+    """Eq. 2 verbatim: exp(-x^2/2)/sqrt(2pi) at x in [-2, 2]."""
+    k = gaussian_kernel(2, 1.0, normalize=False)
+    x = np.arange(-2, 3, dtype=float)
+    expected = np.exp(-x ** 2 / 2) / np.sqrt(2 * np.pi)
+    np.testing.assert_allclose(k, expected, rtol=1e-12)
+    assert abs(k.sum() - 0.9913) < 1e-3      # raw kernel sums to ~.9913
+
+
+def test_gaussian_kernel_normalized_sums_to_one():
+    assert abs(gaussian_kernel(2).sum() - 1.0) < 1e-12
+
+
+def test_log_kernel_matches_eq4():
+    """Eq. 4 with sigma = 1/2 at x in [-1, 1]."""
+    k = log_kernel(1, 0.5)
+    s = 0.5
+    x = np.arange(-1, 2, dtype=float)
+    g = np.exp(-x ** 2 / (2 * s * s)) / np.sqrt(2 * np.pi)
+    expected = x ** 2 * g / s ** 5 - g / s ** 3
+    np.testing.assert_allclose(k, expected, rtol=1e-12)
+    # center strongly negative, symmetric positive lobes: edge detector
+    assert k[1] < 0 < k[0] == pytest.approx(k[2])
+
+
+def test_convolve_valid_matches_scipy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=64)
+    k = gaussian_kernel(2)
+    ours = np.asarray(convolve_valid(x, k))
+    ref = signal.correlate(x, k, mode="valid")
+    np.testing.assert_allclose(ours, ref, rtol=1e-10, atol=1e-12)
+    assert ours.shape[0] == 64 - 4           # width shrinks by 2*radius
+
+
+def test_filter_width_contract():
+    x = np.ones(32)
+    assert gaussian_filter_valid(x).shape == (28,)
+    assert log_filter_valid(np.ones(18)).shape == (16,)
+
+
+def test_gaussian_filter_preserves_constant():
+    np.testing.assert_allclose(gaussian_filter_valid(np.full(32, 7.0)),
+                               7.0, rtol=1e-6)
+
+
+def test_log_filter_zero_on_constant_iff_kernel_sum():
+    k = log_kernel(1, 0.5)
+    resp = np.asarray(log_filter_valid(np.full(18, 3.0)))
+    np.testing.assert_allclose(resp, 3.0 * k.sum(), rtol=1e-9)

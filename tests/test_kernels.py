@@ -1,0 +1,94 @@
+"""Per-kernel shape/dtype sweeps asserting allclose vs the pure-jnp
+oracles (interpret=True executes the Pallas kernel body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.kernel import flash_attention_pallas
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.monitor.kernel import batched_monitor_pallas
+from repro.kernels.monitor.ref import batched_monitor_ref
+from repro.kernels.ssd.ops import ssd_chunked_pallas
+from repro.models.ssm import ssd_reference
+
+
+@pytest.mark.parametrize("q,w", [(8, 16), (100, 32), (256, 64), (37, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_monitor_kernel_matches_ref(q, w, dtype):
+    key = jax.random.PRNGKey(q * w)
+    win = (jax.random.uniform(key, (q, w), jnp.float32) * 500).astype(
+        dtype)
+    qp, mup, sdp = batched_monitor_pallas(win, interpret=True)
+    qr, mur, sdr = batched_monitor_ref(win)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(qp, qr, rtol=tol, atol=tol * 500)
+    np.testing.assert_allclose(mup, mur, rtol=tol, atol=tol * 500)
+
+
+@pytest.mark.parametrize("shape", [(1, 32, 2, 8, 8), (2, 64, 4, 8, 16),
+                                   (2, 128, 2, 16, 32)])
+@pytest.mark.parametrize("chunk", [8, 16, 32])
+def test_ssd_kernel_matches_sequential_reference(shape, chunk):
+    B, S, H, P, N = shape
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_ref, h_ref = ssd_reference(x, dt, A, Bm, Cm)
+    y, h = ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                              interpret=True)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h, h_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_state_carry():
+    """Chunked-with-h0 must continue a previous segment exactly."""
+    B, S, H, P, N = 1, 64, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_full, h_full = ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=16,
+                                        interpret=True)
+    y1, h1 = ssd_chunked_pallas(x[:, :32], dt[:, :32], A, Bm[:, :32],
+                                Cm[:, :32], chunk=16, interpret=True)
+    y2, h2 = ssd_chunked_pallas(x[:, 32:], dt[:, 32:], A, Bm[:, 32:],
+                                Cm[:, 32:], chunk=16, h0=h1,
+                                interpret=True)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h2, h_full, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 128, 2, 2, 32), (2, 256, 4, 2, 32),
+                                   (1, 256, 8, 8, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, causal):
+    B, S, H, K, hd = shape
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    out = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                 block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16_inputs(dtype):
+    B, S, H, K, hd = 1, 128, 2, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, hd), jnp.float32)
+    out = flash_attention_pallas(q.astype(dtype), k.astype(dtype),
+                                 v.astype(dtype), interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-2)

@@ -1,0 +1,120 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.monitor import (HostMonitor, MonitorConfig,
+                                SamplingPeriodController, monitor_init,
+                                monitor_update, run_monitor)
+from repro.core.simulate import TandemConfig, sample_periods, \
+    simulate_tandem
+
+
+def _drive_host(tc, blocked, cfg=None, period=1e-3):
+    hm = HostMonitor(cfg or MonitorConfig(), period_s=period)
+    for t, b in zip(tc, blocked):
+        hm.update(float(t), bool(b))
+    return hm
+
+
+def test_noise_free_deterministic_exact():
+    cfg = TandemConfig(mu_a=4.0e5, mu_b=2.0e5, dist_a="deterministic",
+                       dist_b="deterministic", capacity=64,
+                       n_items=120_000)
+    res = simulate_tandem(cfg)
+    tc, blocked, _ = sample_periods(res, 1e-3, timer_jitter_rel=0,
+                                    outlier_prob=0, clear_race_prob=0)
+    hm = _drive_host(tc, blocked)
+    assert hm.epoch >= 1
+    assert hm.rate_items_per_s() == pytest.approx(cfg.mu_b, rel=0.01)
+
+
+def test_noisy_exponential_within_paper_band():
+    """Paper Fig. 13: 'the majority of the results are within 20%'."""
+    cfg = TandemConfig(mu_a=4.0e5, mu_b=2.0e5, capacity=64,
+                       n_items=200_000, seed=7)
+    res = simulate_tandem(cfg)
+    tc, blocked, _ = sample_periods(res, 1e-3, seed=8)
+    hm = _drive_host(tc, blocked)
+    assert hm.epoch >= 1
+    err = abs(hm.rate_items_per_s() - cfg.mu_b) / cfg.mu_b
+    assert err < 0.20
+
+
+def test_dual_phase_detected():
+    """Paper Figs. 10/14: converged estimates track a mid-run rate shift."""
+    cfg = TandemConfig(mu_a=8.0e5, mu_b=2.66e5, mu_b2=1.0e5,
+                       capacity=64, n_items=300_000, seed=9)
+    res = simulate_tandem(cfg)
+    tc, blocked, _ = sample_periods(res, 1e-3, seed=10)
+    hm = HostMonitor(MonitorConfig(), period_s=1e-3)
+    ests = []
+    for t, b in zip(tc, blocked):
+        if hm.update(float(t), bool(b)):
+            ests.append(hm.last_qbar / 1e-3)
+    assert len(ests) >= 4
+    first, last = ests[0], ests[-1]
+    assert first == pytest.approx(cfg.mu_b, rel=0.25)
+    assert last == pytest.approx(cfg.mu_b2, rel=0.25)
+
+
+def test_jax_and_host_agree():
+    rng = np.random.default_rng(11)
+    tc = rng.poisson(200, 600).astype(np.float64)
+    blocked = rng.random(600) < 0.05
+    cfg = MonitorConfig()
+    hm = _drive_host(tc, blocked, cfg)
+    outs = run_monitor(cfg, tc, blocked)
+    assert int(outs.epoch[-1]) == hm.epoch
+    if hm.epoch:
+        assert float(outs.estimate[-1]) == pytest.approx(hm.last_qbar,
+                                                         rel=1e-3)
+
+
+def test_blocked_samples_are_discarded():
+    cfg = MonitorConfig()
+    state = monitor_init(cfg)
+    state1, _ = monitor_update(cfg, state, 100.0, True)
+    assert int(state1.s_fill) == 0
+    assert int(state1.n_blocked) == 1
+    state2, _ = monitor_update(cfg, state, 100.0, False)
+    assert int(state2.s_fill) == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(1.0, 1e4, allow_nan=False), min_size=80,
+                max_size=200))
+def test_property_estimate_within_observed_range(tcs):
+    """Invariant: q-bar stays within [min, max] of the observed samples
+    scaled by the quantile overshoot bound (mu + z*sigma <= max + z*range).
+    """
+    tc = np.asarray(tcs)
+    hm = _drive_host(tc, np.zeros(len(tc), bool))
+    lo, hi = tc.min(), tc.max()
+    z = hm.cfg.quantile_z
+    if hm.qbar:
+        assert lo - z * (hi - lo) <= hm.qbar <= hi + z * (hi - lo)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(10.0, 1e4), st.integers(0, 2 ** 31 - 1))
+def test_property_constant_stream_converges_to_value(val, seed):
+    tc = np.full(400, val)
+    hm = _drive_host(tc, np.zeros(400, bool))
+    assert hm.epoch >= 1
+    assert hm.last_qbar == pytest.approx(val, rel=1e-3)
+
+
+def test_sampling_period_controller_widens_then_fails():
+    # stable + unblocked -> widen
+    c = SamplingPeriodController(base_latency_s=1e-6, max_period_s=1e-3,
+                                 k_no_block=4, j_stable=4)
+    t0 = c.period_s
+    for _ in range(8):
+        c.observe(c.period_s, blocked=False)
+    assert c.period_s > t0
+    # hopelessly unstable at minimum -> declared failure (paper IV-A)
+    c2 = SamplingPeriodController(base_latency_s=1e-6, j_stable=3)
+    for _ in range(10):
+        c2.observe(c2.period_s * 10, blocked=True)
+    assert c2.failed

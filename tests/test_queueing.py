@@ -1,0 +1,71 @@
+import numpy as np
+import pytest
+
+from repro.core.queueing import (expected_nonblocking_fraction,
+                                 mm1k_blocking_prob, mm1k_throughput,
+                                 optimal_buffer_size, pr_nonblocking_read,
+                                 pr_nonblocking_write)
+from repro.core.simulate import TandemConfig, simulate_tandem
+
+
+def test_pr_read_is_rho_pow_k():
+    # k = ceil(mu*T); Pr = rho^k  (Eq. 1b/1c)
+    assert float(pr_nonblocking_read(T=1.0, rho=0.9, mu_s=5.0)) == \
+        pytest.approx(0.9 ** 5)
+    assert float(pr_nonblocking_read(T=0.7, rho=0.5, mu_s=10.0)) == \
+        pytest.approx(0.5 ** 7)
+
+
+def test_pr_read_decreases_with_T_and_mu():
+    # Fig. 4: faster servers / longer windows are harder to observe
+    ts = np.linspace(0.1, 2.0, 8)
+    ps = [float(pr_nonblocking_read(t, 0.8, 4.0)) for t in ts]
+    assert all(a >= b for a, b in zip(ps, ps[1:]))
+    mus = np.linspace(1.0, 16.0, 8)
+    ps = [float(pr_nonblocking_read(1.0, 0.8, m)) for m in mus]
+    assert all(a >= b for a, b in zip(ps, ps[1:]))
+
+
+def test_pr_write_zero_when_capacity_too_small():
+    # Eq. 1d: C < mu*T => 0
+    assert float(pr_nonblocking_write(T=1.0, C=3, rho=0.5, mu_s=5.0)) == 0.0
+    assert float(pr_nonblocking_write(T=1.0, C=8, rho=0.5, mu_s=5.0)) == \
+        pytest.approx(1.0 - 0.5 ** (8 - 5 + 1))
+
+
+def test_mm1k_blocking_closed_form():
+    # K=1 (single slot): P_block = rho/(1+rho)
+    lam, mu = 2.0, 4.0
+    rho = lam / mu
+    assert float(mm1k_blocking_prob(lam, mu, 1)) == \
+        pytest.approx(rho * (1 - rho) / (1 - rho ** 2))
+    # rho = 1 limit: 1/(K+1)
+    assert float(mm1k_blocking_prob(3.0, 3.0, 4)) == pytest.approx(0.2)
+
+
+def test_mm1k_throughput_matches_simulation():
+    cfg = TandemConfig(mu_a=4.0e5, mu_b=5.0e5, capacity=4,
+                       n_items=120_000, seed=5)
+    res = simulate_tandem(cfg)
+    sim_thr = cfg.n_items / res.finish_t[-1]
+    model_thr = float(mm1k_throughput(cfg.mu_a, cfg.mu_b, cfg.capacity))
+    assert sim_thr == pytest.approx(model_thr, rel=0.1)
+
+
+def test_optimal_buffer_size_monotone_and_effective():
+    k90 = optimal_buffer_size(9.0e5, 1.0e6, target_frac=0.90)
+    k99 = optimal_buffer_size(9.0e5, 1.0e6, target_frac=0.99)
+    assert k99 >= k90 >= 1
+    thr = float(mm1k_throughput(9.0e5, 1.0e6, k99))
+    assert thr >= 0.99 * 9.0e5
+
+
+def test_md1_needs_smaller_buffer_than_mm1():
+    km = optimal_buffer_size(9e5, 1e6, target_frac=0.99, cv2=1.0)
+    kd = optimal_buffer_size(9e5, 1e6, target_frac=0.99, cv2=0.0)
+    assert kd <= km
+
+
+def test_expected_nonblocking_fraction_bounds():
+    f = expected_nonblocking_fraction(1e-3, 64, 0.5, 2.0e5)
+    assert 0.0 <= f <= 1.0

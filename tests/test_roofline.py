@@ -1,0 +1,90 @@
+import textwrap
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.roofline.analysis import (CollectiveStats, model_flops,
+                                     parse_collective_bytes,
+                                     roofline_report)
+from repro.roofline.analytic import analytic_bytes, analytic_flops
+from repro.roofline.hlo import parse_collectives_hierarchical
+
+_HLO = textwrap.dedent("""
+    HloModule jit_f
+
+    %cond.1 (arg.1: (s32[], f32[64,256])) -> pred[] {
+      %p = (s32[], f32[64,256]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %c = s32[] constant(24)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %body.1 (arg.2: (s32[], f32[64,256])) -> (s32[], f32[64,256]) {
+      %p = (s32[], f32[64,256]) parameter(0)
+      %x = f32[64,256]{1,0} get-tuple-element(%p), index=1
+      %ar = f32[64,256]{1,0} all-reduce(f32[64,256]{1,0} %x), to_apply=%sum
+      ROOT %t = (s32[], f32[64,256]) tuple(%i, %ar)
+    }
+
+    ENTRY %main.1 (a: f32[64,256]) -> f32[64,256] {
+      %a = f32[64,256]{1,0} parameter(0)
+      %ag = f32[128,256]{1,0} all-gather(f32[64,256]{1,0} %a), dimensions={0}
+      %w = (s32[], f32[64,256]) while((s32[], f32[64,256]) %t0), condition=%cond.1, body=%body.1
+      ROOT %out = f32[64,256]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_flat_parse_counts_each_once():
+    st = parse_collective_bytes(_HLO)
+    assert st.count_by_op == {"all-reduce": 1, "all-gather": 1}
+    # all-reduce 64*256*4 * 2.0 mult; all-gather counts operand or result
+    assert st.bytes_by_op["all-reduce"] == 64 * 256 * 4 * 2.0
+
+
+def test_hierarchical_parse_multiplies_by_trip_count():
+    st = parse_collectives_hierarchical(_HLO, default_trip=1)
+    assert st.count_by_op["all-reduce"] == 24     # constant(24) in cond
+    assert st.count_by_op["all-gather"] == 1
+    assert st.bytes_by_op["all-reduce"] == 24 * 64 * 256 * 4 * 2.0
+
+
+def test_model_flops_conventions():
+    assert model_flops(1000, 10, "train") == 6000 * 10
+    assert model_flops(1000, 10, "decode") == 2000 * 10
+
+
+def test_roofline_report_dominant_term():
+    coll = CollectiveStats({"all-reduce": 50e9}, {"all-reduce": 4})
+    rep = roofline_report(flops_per_dev=197e12, bytes_per_dev=819e9,
+                          coll=coll, n_chips=256,
+                          model_flops_total=197e12 * 256)
+    assert rep["compute_s"] == pytest.approx(1.0)
+    assert rep["memory_s"] == pytest.approx(1.0)
+    assert rep["collective_s"] == pytest.approx(1.0)
+    assert rep["roofline_fraction"] == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "grok-1-314b",
+                                  "mamba2-2.7b", "whisper-large-v3"])
+def test_analytic_flops_scale_with_model(arch):
+    cfg = get_config(arch)
+    tr = analytic_flops(cfg, SHAPES["train_4k"])
+    pf = analytic_flops(cfg, SHAPES["prefill_32k"])
+    # train fwd ~ 2*N*D: within 3x of the parameter-count estimate
+    # (attention/router overheads push it above)
+    est = 2.0 * cfg.n_active_params() * SHAPES["train_4k"].global_batch \
+        * SHAPES["train_4k"].seq_len
+    assert tr["forward"] == pytest.approx(est, rel=3.0)
+    assert tr["forward"] > 0.5 * est
+    assert tr["compiled"] == pytest.approx(tr["forward"] * 4.0)
+    assert pf["compiled"] == pytest.approx(pf["forward"])
+
+
+def test_analytic_bytes_decode_includes_cache():
+    cfg = get_config("qwen2-vl-72b")
+    ab = analytic_bytes(cfg, SHAPES["decode_32k"])
+    # KV cache: 80L * 2 * B*S*K*hd * 2B
+    exp_cache = 2 * 80 * 128 * 32768 * 8 * 128 * 2
+    assert ab["cache_bytes"] == pytest.approx(exp_cache)
+    assert ab["traffic"] > ab["cache_bytes"]

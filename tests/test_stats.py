@@ -1,0 +1,86 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy import stats as sstats
+
+from repro.core.stats import (Moments, Welford, moments_finalize,
+                              moments_init, moments_merge, moments_update,
+                              welford_init, welford_merge, welford_std,
+                              welford_update, welford_variance)
+
+
+def _run_welford(xs):
+    s = welford_init(jnp.float64 if False else jnp.float32)
+    for x in xs:
+        s = welford_update(s, x)
+    return s
+
+
+def test_welford_matches_numpy():
+    rng = np.random.default_rng(1)
+    xs = rng.normal(5.0, 2.0, 500).astype(np.float32)
+    s = _run_welford(xs)
+    assert float(s.mean) == pytest.approx(xs.mean(), rel=1e-4)
+    assert float(welford_variance(s)) == pytest.approx(xs.var(), rel=1e-3)
+
+
+def test_welford_merge_equals_concat():
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=100).astype(np.float32)
+    b = rng.normal(3.0, 1.5, 77).astype(np.float32)
+    merged = welford_merge(_run_welford(a), _run_welford(b))
+    full = _run_welford(np.concatenate([a, b]))
+    assert float(merged.mean) == pytest.approx(float(full.mean), rel=1e-4)
+    assert float(merged.m2) == pytest.approx(float(full.m2), rel=1e-3)
+
+
+def test_welford_merge_empty_identity():
+    s = _run_welford(np.arange(10, dtype=np.float32))
+    m = welford_merge(s, welford_init())
+    assert float(m.mean) == pytest.approx(float(s.mean))
+    assert float(m.count) == 10
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=2,
+                max_size=60),
+       st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=2,
+                max_size=60))
+def test_welford_merge_commutative(a, b):
+    sa, sb = _run_welford(np.float32(a)), _run_welford(np.float32(b))
+    ab, ba = welford_merge(sa, sb), welford_merge(sb, sa)
+    np.testing.assert_allclose(float(ab.mean), float(ba.mean),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(ab.m2), float(ba.m2),
+                               rtol=1e-2, atol=1e-2)
+
+
+def _run_moments(xs):
+    s = moments_init()
+    for x in xs:
+        s = moments_update(s, x)
+    return s
+
+
+def test_moments_match_scipy():
+    rng = np.random.default_rng(3)
+    xs = rng.exponential(2.0, 2000).astype(np.float32)
+    mean, var, skew, kurt, cv2 = moments_finalize(_run_moments(xs))
+    assert float(mean) == pytest.approx(xs.mean(), rel=1e-3)
+    assert float(var) == pytest.approx(xs.var(), rel=2e-2)
+    assert float(skew) == pytest.approx(sstats.skew(xs), rel=0.1)
+    assert float(kurt) == pytest.approx(sstats.kurtosis(xs), rel=0.25)
+    # exponential: cv^2 ~ 1
+    assert 0.8 < float(cv2) < 1.2
+
+
+def test_moments_merge_equals_concat():
+    rng = np.random.default_rng(4)
+    a = rng.gamma(2.0, 1.0, 300).astype(np.float32)
+    b = rng.gamma(3.0, 2.0, 200).astype(np.float32)
+    merged = moments_merge(_run_moments(a), _run_moments(b))
+    full = _run_moments(np.concatenate([a, b]))
+    for f_m, f_f in zip(merged, full):
+        assert float(f_m) == pytest.approx(float(f_f), rel=2e-2,
+                                           abs=1e-2)

@@ -1,0 +1,98 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.train import (OptConfig, TrainConfig, clip_by_global_norm,
+                         init_opt_state, lr_schedule, make_train_step,
+                         opt_update, pick_optimizer)
+
+
+def _setup(opt_name="adamw", microbatches=1):
+    cfg = get_smoke_config("internlm2-1.8b")
+    model = build_model(cfg)
+    tcfg = TrainConfig(opt=OptConfig(name=opt_name, lr_peak=1e-2,
+                                     warmup_steps=5, total_steps=100),
+                       remat_policy=None, microbatches=microbatches)
+    step = jax.jit(make_train_step(model, tcfg))
+    params = model.init_params(jax.random.PRNGKey(0))
+    state = {"params": params,
+             "opt": init_opt_state(opt_name, params),
+             "step": jnp.zeros((), jnp.int32)}
+    return cfg, step, state
+
+
+def _batch(cfg, key, B=4, S=16):
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+
+def test_loss_decreases():
+    cfg, step, state = _setup()
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    losses = []
+    for _ in range(30):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] * 0.8
+    assert int(state["step"]) == 30
+
+
+def test_adamw8bit_tracks_adamw():
+    cfg, step_a, state_a = _setup("adamw")
+    _, step_q, state_q = _setup("adamw8bit")
+    batch = _batch(cfg, jax.random.PRNGKey(2))
+    for _ in range(10):
+        state_a, ma = step_a(state_a, batch)
+        state_q, mq = step_q(state_q, batch)
+    # same trajectory within quantization noise
+    assert float(mq["loss"]) == pytest.approx(float(ma["loss"]), rel=0.05)
+
+
+def test_grad_accum_matches_full_batch_grads():
+    cfg, _, state = _setup()
+    model = build_model(cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(3), B=8)
+    loss_fn = lambda p, b: model.loss(p, b)[0]        # noqa: E731
+    g_full = jax.grad(loss_fn)(state["params"], batch)
+    mbs = jax.tree_util.tree_map(
+        lambda x: x.reshape((2, 4) + x.shape[1:]), batch)
+    g_acc = jax.tree_util.tree_map(jnp.zeros_like, g_full)
+    for i in range(2):
+        mb = jax.tree_util.tree_map(lambda x: x[i], mbs)
+        g = jax.grad(loss_fn)(state["params"], mb)
+        g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+    g_acc = jax.tree_util.tree_map(lambda x: x / 2, g_acc)
+    la, lb = jax.tree_util.tree_leaves(g_full), \
+        jax.tree_util.tree_leaves(g_acc)
+    for a, b in zip(la, lb):
+        np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-4)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((10,), 3.0), "b": jnp.full((10,), 4.0)}
+    clipped, gn = clip_by_global_norm(grads, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(90 + 160))
+    total = np.sqrt(sum(float(jnp.sum(v ** 2))
+                        for v in clipped.values()))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr_peak=1e-3, lr_min=1e-4, warmup_steps=10,
+                    total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in
+           (0, 9, 10, 50, 100)]
+    assert lrs[0] < lrs[1] <= cfg.lr_peak * 1.001
+    assert lrs[2] == pytest.approx(cfg.lr_peak, rel=1e-2)
+    assert lrs[-1] == pytest.approx(cfg.lr_min, rel=1e-2)
+    assert lrs[3] < lrs[2]
+
+
+def test_pick_optimizer():
+    assert pick_optimizer(int(3e9)) == "adamw"
+    assert pick_optimizer(int(314e9)) == "adamw8bit"

@@ -1,35 +1,68 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows plus a per-benchmark verdict vs the paper's claim.
+# CSV rows plus a per-benchmark verdict vs the paper's claim.  With
+# ``--json PATH`` the same results are additionally written as a machine-
+# readable report (suite -> benchmark -> rows/verdict/status) so perf
+# trajectories can be tracked across PRs.
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON to PATH")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    args = ap.parse_args(argv)
+
     from benchmarks import apps, kernel_bench, paper_figs, roofline_table
 
     suites = [("paper", paper_figs.ALL), ("apps", apps.ALL),
               ("kernels", kernel_bench.ALL),
               ("roofline", roofline_table.ALL)]
     print("name,us_per_call,derived")
+    report: dict = {}
     n_fail = 0
     t0 = time.time()
     for suite, fns in suites:
         for fn in fns:
+            if args.only and args.only not in fn.__name__:
+                continue
+            entry = report.setdefault(suite, {})
+            t_fn = time.time()
             try:
                 rows, verdict = fn()
                 for r in rows:
                     print(r, flush=True)
                 print(f"# VERDICT {suite}/{fn.__name__}: {verdict}",
                       flush=True)
-            except Exception:  # noqa: BLE001
+                entry[fn.__name__] = {
+                    "status": "ok", "rows": list(rows),
+                    "verdict": verdict,
+                    "seconds": round(time.time() - t_fn, 2)}
+            except Exception as e:  # noqa: BLE001
                 n_fail += 1
                 print(f"# FAILED {suite}/{fn.__name__}:", flush=True)
                 traceback.print_exc()
+                entry[fn.__name__] = {
+                    "status": "error",
+                    "error": f"{type(e).__name__}: {e}",
+                    "seconds": round(time.time() - t_fn, 2)}
+    report["_meta"] = {"total_seconds": round(time.time() - t0, 1),
+                       "failures": n_fail}
     print(f"# done in {time.time() - t0:.0f}s, failures={n_fail}",
           flush=True)
+    if args.json:
+        path = pathlib.Path(args.json)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(report, indent=2))
+        print(f"# json report -> {path}", flush=True)
     if n_fail:
         sys.exit(1)
 

@@ -10,13 +10,15 @@ from repro.core.stats import (Welford, welford_init, welford_update,
                               moments_finalize)
 from repro.core.monitor import (MonitorConfig, MonitorState, MonitorOutput,
                                 monitor_init, monitor_update, run_monitor,
-                                HostMonitor, SamplingPeriodController, Z_95)
+                                FleetMonitorState, fleet_monitor_init,
+                                run_monitor_fleet, HostMonitor,
+                                SamplingPeriodController, Z_95)
 from repro.core.queueing import (pr_nonblocking_read, pr_nonblocking_write,
                                  mm1k_throughput, mm1k_blocking_prob,
                                  mm1k_mean_occupancy, optimal_buffer_size)
 from repro.core.controller import (BufferAutotuner, ParallelismController,
                                    StragglerDetector, DistributionClassifier)
 from repro.core.simulate import (TandemConfig, TandemResult, simulate_tandem,
-                                 sample_periods)
+                                 sample_periods, sample_periods_fleet)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

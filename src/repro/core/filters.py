@@ -24,6 +24,8 @@ import numpy as np
 __all__ = [
     "gaussian_kernel",
     "log_kernel",
+    "gaussian_taps",
+    "log_taps",
     "convolve_valid",
     "gaussian_filter_valid",
     "log_filter_valid",
@@ -82,22 +84,27 @@ def convolve_valid(x, kernel):
 
 
 @functools.lru_cache(maxsize=None)
-def _cached_gauss(radius: int, sigma: float, normalize: bool):
-    return tuple(gaussian_kernel(radius, sigma, normalize=normalize).tolist())
+def gaussian_taps(radius: int = 2, sigma: float = 1.0,
+                  normalize: bool = True) -> tuple:
+    """Eq. 2 kernel as a cached tuple of python floats (hashable — usable
+    as static kernel parameters and cheap to splat into stencils)."""
+    return tuple(gaussian_kernel(radius, sigma, normalize=normalize)
+                 .tolist())
 
 
 @functools.lru_cache(maxsize=None)
-def _cached_log(radius: int, sigma: float):
+def log_taps(radius: int = 1, sigma: float = 0.5) -> tuple:
+    """Eq. 4 LoG kernel as a cached tuple of python floats."""
     return tuple(log_kernel(radius, sigma).tolist())
 
 
 def gaussian_filter_valid(x, radius: int = 2, sigma: float = 1.0, *,
                           normalize: bool = True):
     """S -> S' of Algorithm 1: valid-mode Gaussian smoothing of the window."""
-    return convolve_valid(x, _cached_gauss(radius, float(sigma), normalize))
+    return convolve_valid(x, gaussian_taps(radius, float(sigma), normalize))
 
 
 def log_filter_valid(x, radius: int = 1, sigma: float = 0.5):
     """The paper's combined Gaussian+Laplacian ('one combined filter is
     used') applied in valid mode to the sigma(q-bar) trace."""
-    return convolve_valid(x, _cached_log(radius, float(sigma)))
+    return convolve_valid(x, log_taps(radius, float(sigma)))

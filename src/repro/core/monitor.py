@@ -23,6 +23,7 @@ Rates are maintained in *items per period*; callers convert with
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
 from typing import NamedTuple
@@ -42,6 +43,9 @@ __all__ = [
     "monitor_init",
     "monitor_update",
     "run_monitor",
+    "FleetMonitorState",
+    "fleet_monitor_init",
+    "run_monitor_fleet",
     "HostMonitor",
     "SamplingPeriodController",
 ]
@@ -85,12 +89,18 @@ class MonitorConfig:
 
 
 class MonitorState(NamedTuple):
-    s_buf: jnp.ndarray       # (window,) sliding tc window S
+    """Per-queue Algorithm-1 state.  All buffers are *index-based circular
+    buffers* (write head advances mod length) — a push is a masked O(1)
+    write instead of the old shift-everything copy."""
+    s_buf: jnp.ndarray       # (window,) circular tc window S
+    s_head: jnp.ndarray      # int32, next write slot == oldest entry
     s_fill: jnp.ndarray      # int32, valid entries in s_buf (saturating)
     q_stats: Welford         # running stats of q -> q-bar
-    qbar_buf: jnp.ndarray    # (conv_window,) recent q-bar values
+    qbar_buf: jnp.ndarray    # (conv_window,) circular recent q-bar values
+    qbar_head: jnp.ndarray
     qbar_fill: jnp.ndarray
-    sig_buf: jnp.ndarray     # (sig_trace_len,) trace of sigma(q-bar)
+    sig_buf: jnp.ndarray     # (sig_trace_len,) circular sigma(q-bar) trace
+    sig_head: jnp.ndarray
     sig_fill: jnp.ndarray
     epoch: jnp.ndarray       # int32, completed convergences
     last_qbar: jnp.ndarray   # last converged estimate (items/period)
@@ -112,11 +122,14 @@ def monitor_init(cfg: MonitorConfig, dtype=jnp.float32) -> MonitorState:
     f0 = jnp.zeros((), dtype)
     return MonitorState(
         s_buf=jnp.zeros((cfg.window,), dtype),
+        s_head=i0,
         s_fill=i0,
         q_stats=welford_init(dtype),
         qbar_buf=jnp.zeros((cfg.conv_window,), dtype),
+        qbar_head=i0,
         qbar_fill=i0,
         sig_buf=jnp.zeros((cfg.sig_trace_len,), dtype),
+        sig_head=i0,
         sig_fill=i0,
         epoch=i0,
         last_qbar=f0,
@@ -125,10 +138,36 @@ def monitor_init(cfg: MonitorConfig, dtype=jnp.float32) -> MonitorState:
     )
 
 
-def _push(buf, x, do_push):
-    """Shift-push x into a chronological buffer iff do_push (jit-safe)."""
-    pushed = jnp.concatenate([buf[1:], jnp.reshape(x, (1,)).astype(buf.dtype)])
-    return jnp.where(do_push, pushed, buf)
+def _ring_push(buf, head, x, do_push):
+    """Masked write of x at the head slot iff do_push; head advances mod n.
+
+    Replaces the old shift-push: no O(w) copy, and the write lowers to one
+    masked vector op under vmap across a fleet of queues.
+    """
+    n = buf.shape[0]
+    hit = jnp.logical_and(jnp.arange(n) == head, do_push)
+    new = jnp.where(hit, jnp.asarray(x, buf.dtype), buf)
+    new_head = jnp.where(do_push, jnp.mod(head + 1, n), head)
+    return new, new_head
+
+
+def _ring_conv(buf, head, taps):
+    """Valid-mode correlation of a circular buffer with a static kernel.
+
+    Returns ``(conv, valid)``: the circular correlation (length n, as
+    shifted-slice MACs) and the mask of the n-2r windows that do not
+    straddle the seam between newest and oldest entry — exactly the
+    valid-mode outputs of the chronological window, in rotated order.
+    All downstream reductions (mean/std/max|.|) are order-free.
+    """
+    n = buf.shape[0]
+    r = (len(taps) - 1) // 2
+    ext = jnp.concatenate([buf, buf[: 2 * r]])
+    conv = ext[:n] * jnp.asarray(taps[0], buf.dtype)
+    for i in range(1, 2 * r + 1):
+        conv = conv + ext[i:i + n] * jnp.asarray(taps[i], buf.dtype)
+    valid = jnp.mod(jnp.arange(n) - head, n) < n - 2 * r
+    return conv, valid
 
 
 def _where_tree(cond, new, old):
@@ -148,15 +187,17 @@ def monitor_update(cfg: MonitorConfig, state: MonitorState, tc, blocked
     n_blocked = state.n_blocked + blocked.astype(jnp.int32)
 
     # --- window stage -----------------------------------------------------
-    s_buf = _push(state.s_buf, tc, valid)
+    s_buf, s_head = _ring_push(state.s_buf, state.s_head, tc, valid)
     s_fill = jnp.minimum(state.s_fill + valid.astype(jnp.int32), cfg.window)
     window_ready = jnp.logical_and(valid, s_fill >= cfg.window)
 
-    s_prime = filters.gaussian_filter_valid(
-        s_buf, cfg.gauss_radius, cfg.gauss_sigma,
-        normalize=cfg.gauss_normalize)
-    mu_sp = jnp.mean(s_prime)
-    sd_sp = jnp.std(s_prime)
+    g_taps = filters.gaussian_taps(cfg.gauss_radius, float(cfg.gauss_sigma),
+                                   cfg.gauss_normalize)
+    conv, conv_ok = _ring_conv(s_buf, s_head, g_taps)
+    n_out = cfg.window - 2 * cfg.gauss_radius
+    mu_sp = jnp.sum(jnp.where(conv_ok, conv, 0.0)) / n_out
+    dev = jnp.where(conv_ok, conv - mu_sp, 0.0)
+    sd_sp = jnp.sqrt(jnp.maximum(jnp.sum(dev * dev) / n_out, 0.0))
     q = mu_sp + jnp.asarray(cfg.quantile_z, dtype) * sd_sp  # Eq. 3
 
     # --- q-bar stage (Welford) --------------------------------------------
@@ -164,7 +205,8 @@ def monitor_update(cfg: MonitorConfig, state: MonitorState, tc, blocked
                           welford_update(state.q_stats, q), state.q_stats)
     qbar = q_stats.mean
 
-    qbar_buf = _push(state.qbar_buf, qbar, window_ready)
+    qbar_buf, qbar_head = _ring_push(state.qbar_buf, state.qbar_head,
+                                     qbar, window_ready)
     qbar_fill = jnp.minimum(state.qbar_fill + window_ready.astype(jnp.int32),
                             cfg.conv_window)
 
@@ -175,13 +217,15 @@ def monitor_update(cfg: MonitorConfig, state: MonitorState, tc, blocked
         sigma_qbar = jnp.where(have, jnp.std(qbar_buf),
                                jnp.asarray(_BIG, dtype))
 
-    sig_buf = _push(state.sig_buf, sigma_qbar, window_ready)
+    sig_buf, sig_head = _ring_push(state.sig_buf, state.sig_head,
+                                   sigma_qbar, window_ready)
     sig_fill = jnp.minimum(state.sig_fill + window_ready.astype(jnp.int32),
                            cfg.sig_trace_len)
 
     # --- convergence stage (Eq. 4) ----------------------------------------
-    filt = filters.log_filter_valid(sig_buf, cfg.log_radius, cfg.log_sigma)
-    resp = jnp.max(jnp.abs(filt))
+    l_taps = filters.log_taps(cfg.log_radius, float(cfg.log_sigma))
+    filt, filt_ok = _ring_conv(sig_buf, sig_head, l_taps)
+    resp = jnp.max(jnp.where(filt_ok, jnp.abs(filt), 0.0))
     tol = jnp.asarray(cfg.conv_tol, dtype)
     if cfg.conv_tol_mode == "rel":
         tol = tol * jnp.maximum(jnp.abs(qbar), jnp.asarray(1e-12, dtype))
@@ -196,14 +240,16 @@ def monitor_update(cfg: MonitorConfig, state: MonitorState, tc, blocked
     fresh = monitor_init(cfg, dtype)
     q_stats = _where_tree(converged, fresh.q_stats, q_stats)
     qbar_buf = jnp.where(converged, fresh.qbar_buf, qbar_buf)
+    qbar_head = jnp.where(converged, fresh.qbar_head, qbar_head)
     qbar_fill = jnp.where(converged, fresh.qbar_fill, qbar_fill)
     sig_buf = jnp.where(converged, fresh.sig_buf, sig_buf)
+    sig_head = jnp.where(converged, fresh.sig_head, sig_head)
     sig_fill = jnp.where(converged, fresh.sig_fill, sig_fill)
 
     new_state = MonitorState(
-        s_buf=s_buf, s_fill=s_fill, q_stats=q_stats,
-        qbar_buf=qbar_buf, qbar_fill=qbar_fill,
-        sig_buf=sig_buf, sig_fill=sig_fill,
+        s_buf=s_buf, s_head=s_head, s_fill=s_fill, q_stats=q_stats,
+        qbar_buf=qbar_buf, qbar_head=qbar_head, qbar_fill=qbar_fill,
+        sig_buf=sig_buf, sig_head=sig_head, sig_fill=sig_fill,
         epoch=epoch, last_qbar=last_qbar,
         n_total=n_total, n_blocked=n_blocked)
     out = MonitorOutput(
@@ -239,6 +285,111 @@ def run_monitor(cfg: MonitorConfig, tc_seq, blocked_seq=None,
 
 
 # ---------------------------------------------------------------------------
+# Fleet-scale time-batched monitor (the fused Pallas hot path).
+# ---------------------------------------------------------------------------
+
+class FleetMonitorState(NamedTuple):
+    """Algorithm-1 state for Q queues at once, laid out for the fused
+    (BQ, T) estimators.  Everything is *chronological* (newest entry
+    last); there are no ring heads and no saturating fill counters —
+    every gate the sequential algorithm expressed through fills is a pure
+    function of ``count`` (q-bar fill = min(count, cw), sigma-trace fill
+    = min(count, cw+2), response fill = min(count-2, cw)), because all
+    three buffers advance on exactly the same fold events.
+
+    The sigma trace is reduced to its two most recent values (the LoG
+    stencil has radius 1; older trace entries survive only through the
+    response history).  All leaves have leading dim Q; this is the state
+    that stays resident in VMEM across a time tile.
+    """
+    win: jnp.ndarray         # (Q, window) last valid samples, newest last
+    s_fill: jnp.ndarray      # (Q,) int32 saturating valid-sample count
+    count: jnp.ndarray       # (Q,) Welford n        (float, matches stats)
+    mean: jnp.ndarray        # (Q,) Welford mean  == q-bar
+    m2: jnp.ndarray          # (Q,) Welford M2
+    qhist: jnp.ndarray       # (Q, conv_window) recent q-bar folds
+    shist: jnp.ndarray       # (Q, 2) [sigma(t-2), sigma(t-1)]
+    rhist: jnp.ndarray       # (Q, conv_window) recent LoG responses
+    epoch: jnp.ndarray       # (Q,) int32
+    last_qbar: jnp.ndarray   # (Q,) last converged estimate
+    n_total: jnp.ndarray     # (Q,) int32
+    n_blocked: jnp.ndarray   # (Q,) int32
+
+
+def fleet_monitor_init(cfg: MonitorConfig, n_queues: int,
+                       dtype=jnp.float32) -> FleetMonitorState:
+    q = n_queues
+    f = lambda *s: jnp.zeros(s, dtype)         # noqa: E731
+    i = lambda *s: jnp.zeros(s, jnp.int32)     # noqa: E731
+    return FleetMonitorState(
+        win=f(q, cfg.window), s_fill=i(q),
+        count=f(q), mean=f(q), m2=f(q),
+        qhist=f(q, cfg.conv_window), shist=f(q, 2),
+        rhist=f(q, cfg.conv_window),
+        epoch=i(q), last_qbar=f(q), n_total=i(q), n_blocked=i(q))
+
+
+def run_monitor_fleet(cfg: MonitorConfig, tc_seq, blocked_seq=None, *,
+                      state: FleetMonitorState | None = None,
+                      chunk_t: int = 256, impl: str = "rounds",
+                      mode: str = "full", interpret: bool = True,
+                      block_q: int = 256, dtype=jnp.float32
+                      ) -> tuple[FleetMonitorState, MonitorOutput | None]:
+    """Drive the fused fleet estimator over (Q, T) sample streams.
+
+    Consumes ``chunk_t`` samples per dispatch (instead of one per
+    ``lax.scan`` step) and carries ``FleetMonitorState`` across
+    dispatches, so arbitrarily long streams run in fixed memory with a
+    handful of launches.
+
+    ``impl`` selects the execution path (see ``kernels.monitor.ops``):
+    ``"rounds"`` (segmented time-batched XLA form — the CPU fast path),
+    ``"pallas"`` (the fused VMEM-resident kernel; the TPU contract, run
+    in interpret mode elsewhere) or ``"scan"`` (pure-jnp sequential
+    oracle).  ``mode="full"`` returns a ``MonitorOutput`` whose (Q, T)
+    leaves are step-for-step identical to ``jax.vmap(run_monitor)``;
+    ``mode="state"`` skips per-step outputs (converged estimates and
+    epochs live in the state) and returns ``(state, None)`` — the
+    production configuration for large fleets.
+    """
+    from repro.kernels.monitor.ops import fleet_monitor_scan
+
+    tc_seq = jnp.asarray(tc_seq, dtype)
+    if tc_seq.ndim != 2:
+        raise ValueError(f"tc_seq must be (Q, T), got {tc_seq.shape}")
+    Q, T = tc_seq.shape
+    if blocked_seq is not None:
+        blocked_seq = jnp.asarray(blocked_seq, jnp.bool_)
+    if state is None:
+        state = fleet_monitor_init(cfg, Q, dtype)
+
+    outs = []
+    for t0 in range(0, T, chunk_t):
+        tc_c = tc_seq[:, t0:t0 + chunk_t]
+        blk_c = (None if blocked_seq is None
+                 else blocked_seq[:, t0:t0 + chunk_t])
+        pad = chunk_t - tc_c.shape[1]
+        if pad:                            # pad the tail chunk as blocked
+            if blk_c is None:
+                blk_c = jnp.zeros(tc_c.shape, jnp.bool_)
+            tc_c = jnp.pad(tc_c, ((0, 0), (0, pad)))
+            blk_c = jnp.pad(blk_c, ((0, 0), (0, pad)),
+                            constant_values=True)
+        state, out = fleet_monitor_scan(
+            cfg, state, tc_c, blk_c, impl=impl, mode=mode,
+            interpret=interpret, block_q=block_q)
+        if pad:                            # padded steps are not real
+            state = state._replace(n_total=state.n_total - pad,
+                                   n_blocked=state.n_blocked - pad)
+        outs.append(out)
+    if mode != "full":
+        return state, None
+    merged = MonitorOutput(*(jnp.concatenate(parts, axis=1)[:, :T]
+                             for parts in zip(*outs)))
+    return state, merged
+
+
+# ---------------------------------------------------------------------------
 # Host-side implementation (the paper's monitor thread), float64 numpy.
 # ---------------------------------------------------------------------------
 
@@ -264,17 +415,24 @@ class HostMonitor:
         self.epoch = 0
         self.last_qbar = 0.0
         self.estimates: list[float] = []   # converged q-bar per epoch
-        self._s = np.zeros(c.window)
+        # Double-write ring: each sample is stored at p and p+w, so the
+        # chronological window is always the contiguous view
+        # _s[p+1 : p+1+w] — an O(1) push (two stores) instead of the old
+        # O(w) shift, on the instrumentation thread where the paper's
+        # 1-2% overhead budget applies.
+        self._s = np.zeros(2 * c.window)
+        self._s_head = c.window - 1
         self._s_fill = 0
         self._reset_stats()
 
     # -- Algorithm 1's resetStats() ----------------------------------------
     def _reset_stats(self):
+        c = self.cfg
         self._n = 0
         self._mean = 0.0
         self._m2 = 0.0
-        self._qbars: list[float] = []
-        self._sigs: list[float] = []
+        self._qbars = collections.deque(maxlen=c.conv_window)
+        self._sigs = collections.deque(maxlen=c.sig_trace_len)
 
     def update(self, tc: float, blocked: bool = False) -> bool:
         """Ingest one period's sample; returns True if converged+emitted."""
@@ -283,13 +441,16 @@ class HostMonitor:
         if blocked:
             self.n_blocked += 1
             return False
-        self._s[:-1] = self._s[1:]
-        self._s[-1] = tc
-        self._s_fill = min(self._s_fill + 1, c.window)
-        if self._s_fill < c.window:
+        w = c.window
+        p = (self._s_head + 1) % w
+        self._s_head = p
+        self._s[p] = tc
+        self._s[p + w] = tc
+        self._s_fill = min(self._s_fill + 1, w)
+        if self._s_fill < w:
             return False
 
-        sp = filters.convolve_valid(self._s, self._gauss)
+        sp = filters.convolve_valid(self._s[p + 1:p + 1 + w], self._gauss)
         q = float(np.mean(sp) + c.quantile_z * np.std(sp))
 
         self._n += 1
@@ -298,17 +459,13 @@ class HostMonitor:
         self._m2 += delta * (q - self._mean)
         qbar = self._mean
 
-        self._qbars.append(qbar)
-        if len(self._qbars) > c.conv_window:
-            self._qbars.pop(0)
+        self._qbars.append(qbar)      # deque: O(1), evicts the oldest
         if c.sigma_mode == "stderr":
             sig = math.sqrt(self._m2 / self._n / self._n) if self._n else 0.0
         else:
             sig = (float(np.std(self._qbars))
                    if len(self._qbars) >= c.conv_window else _BIG)
         self._sigs.append(sig)
-        if len(self._sigs) > c.sig_trace_len:
-            self._sigs.pop(0)
 
         if (len(self._sigs) < c.sig_trace_len
                 or self._n < c.min_q_samples):

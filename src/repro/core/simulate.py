@@ -18,7 +18,7 @@ import dataclasses
 import numpy as np
 
 __all__ = ["TandemConfig", "TandemResult", "simulate_tandem",
-           "sample_periods"]
+           "sample_periods", "sample_periods_fleet"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,3 +137,30 @@ def sample_periods(res: TandemResult, period_s: float, *,
                                 np.log(outlier_scale), n_periods))
     tc = np.where(out, tc * factor, tc)
     return tc, blocked, edges[:-1]
+
+
+def sample_periods_fleet(results, period_s: float, *, n_periods=None,
+                         seed: int = 1, **noise):
+    """Batch many tandem simulations into fleet-shaped sample planes.
+
+    ``results`` is a list of :class:`TandemResult` (one per monitored
+    queue).  Each is sampled with :func:`sample_periods` and the rows are
+    stacked into ``(tc (Q, T), blocked (Q, T))`` — the exact input layout
+    of ``repro.core.monitor.run_monitor_fleet`` and the fused Pallas
+    fleet kernels.  Shorter streams are padded with blocked=True periods
+    (the monitor discards them), so ragged simulations batch cleanly.
+    """
+    rows = []
+    for i, res in enumerate(results):
+        tc, blocked, _ = sample_periods(res, period_s, seed=seed + i,
+                                        **noise)
+        rows.append((tc, blocked))
+    T = max(len(tc) for tc, _ in rows) if n_periods is None else n_periods
+    Q = len(rows)
+    tc_f = np.zeros((Q, T))
+    blk_f = np.ones((Q, T), dtype=bool)
+    for qi, (tc, blocked) in enumerate(rows):
+        n = min(len(tc), T)
+        tc_f[qi, :n] = tc[:n]
+        blk_f[qi, :n] = blocked[:n]
+    return tc_f, blk_f

@@ -1,0 +1,15 @@
+"""Distribution engine: logical-axis sharding rules + gradient compression.
+
+``repro.dist.api`` carries the active :class:`ShardingContext` (mesh + rule
+tables) that ``constrain`` consults from inside model code;
+``repro.dist.sharding`` holds the rule tables and the greedy
+divisibility-aware ``spec_for`` resolver; ``repro.dist.compression``
+implements the int8 error-feedback gradient compressor used on the
+cross-pod axis.
+"""
+
+from repro.dist.api import (ShardingContext, active_context, constrain,
+                            use_sharding)
+
+__all__ = ["ShardingContext", "active_context", "constrain",
+           "use_sharding"]

@@ -1,0 +1,81 @@
+"""Int8 error-feedback gradient compression for the cross-pod axis.
+
+Numerical semantics of the scheme: each step's gradients are quantized
+to int8 with a per-row scale, the quantization residual is fed back into
+the next step's gradients (error feedback, Seide et al. style) so the
+compression error stays bounded instead of accumulating, and the
+dequantized values are mean-reduced across the pod axis.
+
+Note this module models the *numerics only*: the all-reduce here moves
+dequantized float32 (XLA's psum has no int8-payload collective), so it
+measures convergence impact, not wire savings.  An actual 4x-payload
+deployment needs a custom collective that reduces the int8 tensors and
+scales directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "ef_compress_grads"]
+
+
+def quantize_int8(x):
+    """Per-row (last axis) symmetric int8 quantization.
+
+    Returns ``(q int8, scale f32)`` with ``scale`` shaped like ``x`` minus
+    its last axis.  All-zero rows get scale 0 and survive the round trip
+    exactly.  Non-finite elements (overflowed mixed-precision grads) are
+    treated as 0 — otherwise one inf would drive the row scale to inf,
+    the round trip to NaN, and (through error feedback) poison the
+    residual for every subsequent step.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    x = jnp.where(jnp.isfinite(x), x, 0.0)
+    amax = jnp.max(jnp.abs(x), axis=-1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x / safe[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[..., None]
+
+
+def _roundtrip(x):
+    return dequantize_int8(*quantize_int8(x))
+
+
+def ef_compress_grads(grads, residuals, mesh, axis_name: str = "pod"):
+    """EF-quantized all-reduce-mean of a gradient pytree over
+    ``axis_name``.
+
+    Each device quantizes (grad + carried residual) to int8, the
+    round-tripped values are mean-reduced across the axis, and the local
+    quantization error becomes the new residual.  Returns ``(reduced,
+    new_residuals)``.  See the module docstring: this reproduces the
+    scheme's numerics; the reduction itself is float32.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = mesh.shape[axis_name]
+
+    def body(g, r):
+        c = jax.tree_util.tree_map(jnp.add, g, r)
+        # drop non-finite elements before the round trip AND the residual
+        # (c - deq with an inf would otherwise feed back forever)
+        c = jax.tree_util.tree_map(
+            lambda x: jnp.where(jnp.isfinite(x), x, 0.0), c)
+        deq = jax.tree_util.tree_map(_roundtrip, c)
+        red = jax.tree_util.tree_map(
+            lambda d: jax.lax.psum(d, axis_name) / n, deq)
+        res = jax.tree_util.tree_map(jnp.subtract, c, deq)
+        return red, res
+
+    specs = jax.tree_util.tree_map(lambda _: P(), grads)
+    fn = shard_map(body, mesh=mesh, in_specs=(specs, specs),
+                   out_specs=(specs, specs), check_rep=False)
+    return fn(grads, residuals)

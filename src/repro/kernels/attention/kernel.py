@@ -34,10 +34,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, t_len, scale,
 
     def body(j, carry):
         acc, m, l = carry
-        k = pl.load(k_ref, (0, pl.dslice(j * bk, bk),
-                            0, pl.dslice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(j * bk, bk),
-                            0, pl.dslice(None))).astype(jnp.float32)
+        # all-slice indices: plain-int 0s break the interpret-mode
+        # discharge rule on static trip counts (jax 0.4.37)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk),
+                            pl.dslice(0, 1), pl.dslice(None)))[
+                                0, :, 0, :].astype(jnp.float32)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(j * bk, bk),
+                            pl.dslice(0, 1), pl.dslice(None)))[
+                                0, :, 0, :].astype(jnp.float32)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (BQ,BK)
         if causal:
             q_idx = qi * bq + jax.lax.broadcasted_iota(

@@ -1,11 +1,26 @@
-"""Pallas TPU kernel: fused batched service-rate window estimator.
+"""Pallas TPU kernels: fused fleet-scale service-rate monitor.
 
-One launch evaluates the Gaussian-filter -> mean/std -> 95th-quantile
-stage for a (Q, w) block of queue windows resident in VMEM.  The 5-tap
-stencil is unrolled as shifted-slice multiply-adds (pure VPU work, w is
-the 128-lane dimension); the two reductions are lane reductions.  Block
-shape (BQ x w) is chosen so BQ is a multiple of 8 (sublane) and w a
-multiple of 128 when possible.
+Two entry points:
+
+* ``batched_monitor_pallas`` — the original per-tick window stage
+  (Eq. 2+3) for (Q, w) windows.  Block shape is *static* (``block_q``),
+  the queue axis is padded up to a block multiple and the tail masked off
+  by slicing, so varying fleet sizes share one compiled executable
+  instead of recompiling per (Q-derived) block shape.
+
+* ``monitor_fleet_pallas`` — the time-batched full Algorithm-1 scan.
+  One launch consumes a (Q, T) tile of compacted samples: grid over
+  queue blocks; per program the (BQ, w) window carry, the (BQ, conv_w)
+  q-bar and LoG-response rings, and all per-queue scalar state live in
+  VMEM for the whole time loop.  Stage A (Gaussian stencil + sliding
+  mean/std via centered cumsums) is vectorized over the whole tile; the
+  sequential Stage B folds one sample per ``fori_loop`` step with O(1)
+  masked-vector work per queue.  Fleet state never round-trips HBM per
+  sample — it is read once per tile and written once per tile.
+
+The math lives in ``ref.py`` (``fleet_window_stage`` / ``fleet_step``);
+this module only adds the memory choreography, so kernel and oracle
+cannot drift.
 """
 
 from __future__ import annotations
@@ -14,14 +29,27 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.core.filters import gaussian_kernel
-from repro.core.monitor import Z_95
+from repro.core.monitor import MonitorConfig, Z_95
+from repro.kernels.monitor.ref import (carry_of_state, fleet_static_params,
+                                       fleet_step, fleet_window_stage)
 
-__all__ = ["monitor_kernel", "batched_monitor_pallas"]
+__all__ = ["monitor_kernel", "batched_monitor_pallas",
+           "monitor_fleet_kernel", "monitor_fleet_pallas",
+           "N_FSTATE", "N_ISTATE"]
 
+# packed per-queue scalar state lanes (see pack/unpack in ops.py):
+# fstate: [count, mean, m2, last_qbar, pad x4]
+# istate: [s_fill, epoch, pad x6]
+N_FSTATE = 8
+N_ISTATE = 8
+
+
+# ---------------------------------------------------------------------------
+# Per-tick window stage (kept for the per-sample path and its tests).
+# ---------------------------------------------------------------------------
 
 def monitor_kernel(win_ref, q_ref, mu_ref, sd_ref, *, taps, n_out, z):
     w = win_ref[...].astype(jnp.float32)            # (BQ, W)
@@ -41,13 +69,19 @@ def monitor_kernel(win_ref, q_ref, mu_ref, sd_ref, *, taps, n_out, z):
 def batched_monitor_pallas(windows, *, radius: int = 2, sigma: float = 1.0,
                            z: float = Z_95, block_q: int = 256,
                            interpret: bool = True):
-    """windows: (Q, w) -> (q, mu, sd).  Q padded to a block multiple."""
+    """windows: (Q, w) -> (q, mu, sd).
+
+    ``block_q`` is the static block shape; Q is padded up to a block
+    multiple and the tail rows are masked off by the final slice, so the
+    compiled kernel is reused across fleet sizes within the same padded
+    bucket (no data-dependent block arithmetic).
+    """
     Q, W = windows.shape
     taps = tuple(float(t) for t in
                  gaussian_kernel(radius, sigma, normalize=True))
     n_out = W - 2 * radius
-    BQ = min(block_q, max(8, Q))
-    Qp = ((Q + BQ - 1) // BQ) * BQ
+    BQ = block_q
+    Qp = -(-Q // BQ) * BQ
     if Qp != Q:
         windows = jnp.pad(windows, ((0, Qp - Q), (0, 0)))
 
@@ -63,3 +97,97 @@ def batched_monitor_pallas(windows, *, radius: int = 2, sigma: float = 1.0,
         interpret=interpret,
     )(windows.astype(jnp.float32))
     return q[:Q], mu[:Q], sd[:Q]
+
+
+# ---------------------------------------------------------------------------
+# Fused time-batched fleet scan.
+# ---------------------------------------------------------------------------
+
+class _BlockState:
+    """Adapter: packed (BQ, lanes) refs -> the named carry leaves that
+    ``carry_of_state`` expects."""
+
+    def __init__(self, fs, ist, win, qhist, shist, rhist):
+        self.s_fill, self.epoch = ist[:, 0], ist[:, 1]
+        self.count, self.mean, self.m2, self.last_qbar = (
+            fs[:, 0], fs[:, 1], fs[:, 2], fs[:, 3])
+        self.win = win
+        self.qhist = qhist
+        self.shist = shist
+        self.rhist = rhist
+
+
+def monitor_fleet_kernel(comp_ref, m_ref, win_ref, fstate_ref, istate_ref,
+                         qhist_ref, shist_ref, rhist_ref,
+                         q_ref, qbar_ref, sig_ref, conv_ref, est_ref,
+                         ep_ref, fout_ref, iout_ref, qhist_out_ref,
+                         shist_out_ref, rhist_out_ref, *, P, t_len):
+    comp = comp_ref[...].astype(jnp.float32)       # (BQ, T)
+    m = m_ref[...]                                  # (BQ,) int32
+    st = _BlockState(fstate_ref[...], istate_ref[...], win_ref[...],
+                     qhist_ref[...], shist_ref[...], rhist_ref[...])
+    q_seq = fleet_window_stage(P, st.win, comp)     # (BQ, T), Stage A
+
+    def body(t, carry):
+        q_t = jax.lax.dynamic_slice_in_dim(q_seq, t, 1, axis=1)[:, 0]
+        carry, (qo, qb, sg, cv, es, ep) = fleet_step(P, carry, q_t, t, m)
+        col = (slice(None), pl.dslice(t, 1))
+        pl.store(q_ref, col, qo[:, None])
+        pl.store(qbar_ref, col, qb[:, None])
+        pl.store(sig_ref, col, sg[:, None])
+        pl.store(conv_ref, col, cv[:, None].astype(jnp.int32))
+        pl.store(est_ref, col, es[:, None])
+        pl.store(ep_ref, col, ep[:, None])
+        return carry
+
+    carry = jax.lax.fori_loop(0, t_len, body, carry_of_state(st))
+    (s_fill, count, mean, m2, qhist, shist, rhist, epoch, last_qbar) = carry
+    z = jnp.zeros_like(count)
+    fout_ref[...] = jnp.stack(
+        [count, mean, m2, last_qbar, z, z, z, z], axis=1)
+    zi = jnp.zeros_like(s_fill)
+    iout_ref[...] = jnp.stack(
+        [s_fill, epoch, zi, zi, zi, zi, zi, zi], axis=1)
+    qhist_out_ref[...] = qhist
+    shist_out_ref[...] = shist
+    rhist_out_ref[...] = rhist
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "block_q", "interpret"))
+def monitor_fleet_pallas(cfg: MonitorConfig, comp, m, win, fstate, istate,
+                         qhist, shist, rhist, *, block_q: int = 256,
+                         interpret: bool = True):
+    """Launch the fused scan over a padded (Qp, T) compacted tile.
+
+    Qp must be a multiple of the static ``block_q`` (ops.py pads and
+    masks the tail).  Returns 6 per-step output planes + 5 state arrays.
+    """
+    Qp, T = comp.shape
+    W = cfg.window
+    CW = cfg.conv_window
+    if Qp % block_q:
+        raise ValueError(f"Q={Qp} not a multiple of block_q={block_q}")
+    P = fleet_static_params(cfg)
+    kernel = functools.partial(monitor_fleet_kernel, P=P, t_len=T)
+
+    f32, i32 = jnp.float32, jnp.int32
+    plane = lambda dt: jax.ShapeDtypeStruct((Qp, T), dt)   # noqa: E731
+    row = lambda n, dt: jax.ShapeDtypeStruct((Qp, n), dt)  # noqa: E731
+    blk = lambda n: pl.BlockSpec((block_q, n), lambda i: (i, 0))  # noqa: E731
+    outs = pl.pallas_call(
+        kernel,
+        grid=(Qp // block_q,),
+        in_specs=[blk(T), pl.BlockSpec((block_q,), lambda i: (i,)),
+                  blk(W), blk(N_FSTATE), blk(N_ISTATE), blk(CW), blk(2),
+                  blk(CW)],
+        out_specs=[blk(T)] * 6 + [blk(N_FSTATE), blk(N_ISTATE),
+                                  blk(CW), blk(2), blk(CW)],
+        out_shape=[plane(f32), plane(f32), plane(f32), plane(i32),
+                   plane(f32), plane(i32), row(N_FSTATE, f32),
+                   row(N_ISTATE, i32), row(CW, f32), row(2, f32),
+                   row(CW, f32)],
+        interpret=interpret,
+    )(comp.astype(f32), m.astype(i32), win.astype(f32),
+      fstate.astype(f32), istate.astype(i32), qhist.astype(f32),
+      shist.astype(f32), rhist.astype(f32))
+    return outs

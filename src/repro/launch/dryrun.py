@@ -163,6 +163,8 @@ def lower_cell(arch_id: str, shape_id: str, multi_pod: bool,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):   # older jax: one dict per computation
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     # loop-corrected collectives (XLA prints scan bodies once; a collective
     # inside the layer scan fires n_layers times per step)

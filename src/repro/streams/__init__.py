@@ -1,6 +1,7 @@
 from repro.streams.queue import InstrumentedQueue, EndStats
 from repro.streams.monitor_thread import QueueMonitor, MonitorThread
+from repro.streams.fleet import FleetMonitorService
 from repro.streams.pipeline import Stage, Pipeline, STOP
 
 __all__ = ["InstrumentedQueue", "EndStats", "QueueMonitor", "MonitorThread",
-           "Stage", "Pipeline", "STOP"]
+           "FleetMonitorService", "Stage", "Pipeline", "STOP"]

@@ -1,0 +1,81 @@
+"""Shared test setup.
+
+The container image does not ship ``hypothesis`` (and installing packages
+is off-limits), so when the real library is absent we install a tiny
+deterministic stand-in that supports exactly the API surface these tests
+use — ``given``/``settings`` and the ``floats``/``integers``/``lists``
+strategies — drawing a fixed number of seeded random examples per test.
+With the real library installed, this file does nothing.
+"""
+
+from __future__ import annotations
+
+import functools
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def floats(min_value, max_value, allow_nan=None, **_kw):
+        span = (float(min_value), float(max_value))
+
+        def draw(rng, _s=span):
+            return float(rng.uniform(_s[0], _s[1]))
+        return _Strategy(draw)
+
+    def integers(min_value, max_value):
+        def draw(rng):
+            return int(rng.integers(int(min_value), int(max_value) + 1))
+        return _Strategy(draw)
+
+    def lists(elements, min_size=0, max_size=None, **_kw):
+        def draw(rng):
+            hi = max_size if max_size is not None else min_size + 10
+            n = int(rng.integers(min_size, hi + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._stub_settings = dict(kwargs)
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                cfg = getattr(wrapper, "_stub_settings", {})
+                n = min(int(cfg.get("max_examples", 20)), 25)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strats), **kwargs)
+            # hide the drawn parameters from pytest's fixture resolution
+            # (like hypothesis, strategies fill the rightmost parameters)
+            import inspect
+            params = list(inspect.signature(fn).parameters.values())
+            wrapper.__signature__ = inspect.Signature(
+                params[:len(params) - len(strats)])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.floats, st.integers, st.lists = floats, integers, lists
+    mod.given, mod.settings, mod.strategies = given, settings, st
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:                                    # pragma: no cover
+    _install_hypothesis_stub()

@@ -111,7 +111,10 @@ _SMALL_MESH_PROG = textwrap.dedent("""
         lowered = jax.jit(lambda p, b: model.loss(p, b)[0],
                           in_shardings=(p_sh, None)).lower(ap, batch)
         compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):   # older jax: one dict per computation
+        ca = ca[0]
+    assert ca["flops"] > 0
     print("SMALL_MESH_OK")
 """)
 

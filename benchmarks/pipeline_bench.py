@@ -1,0 +1,170 @@
+"""Pipeline-integration benchmark: one fleet dispatch per tick vs the
+seed per-queue monitor path.
+
+Measures the *monitoring overhead* both designs add to a pipeline tick,
+in-process on identical synthetic counter streams:
+
+* per-queue (seed): ``QueueMonitor.sample()`` per queue per period —
+  two ``HostMonitor`` Algorithm-1 updates in python/numpy per queue.
+* fleet (this PR): the batched collector copies all counters into one
+  staging tile per tick; the fused donated ``run_monitor_fleet``
+  dispatch advances every stream once per ``chunk_t`` ticks.
+
+Both paths monitor both queue ends.  The shared counter-setting harness
+cost is measured separately and subtracted, so the reported ratio is
+monitoring work against monitoring work.  Absolute numbers are capped by
+this container (2-core CPU, ~8 GB/s); the artifact records the
+*in-process ratio* — see BENCH_pipeline.json.
+
+Also replays a deterministic blocked stream through the integrated
+service and checks estimate parity against the sequential scan oracle
+(rtol 1e-4), so the perf artifact carries its own correctness witness.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.monitor import MonitorConfig, run_monitor_fleet
+from repro.streams import (FleetMonitorService, InstrumentedQueue,
+                           Pipeline, QueueMonitor, Stage)
+
+BENCH_PIPELINE_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_pipeline.json"
+
+PERIOD_S = 1e-3
+
+
+def _tick_counters(queues, vals):
+    for q, v in zip(queues, vals):
+        q.head.tc = v
+        q.tail.tc = v
+
+
+def _bench_path(Q, warm, meas, tick_fn, queues, vals):
+    """Time ``meas`` post-warmup ticks of ``tick_fn`` (which samples all
+    monitors once) including the counter-setting harness."""
+    for t in range(warm):
+        _tick_counters(queues, vals[t % len(vals)])
+        tick_fn()
+    t0 = time.perf_counter()
+    for t in range(meas):
+        _tick_counters(queues, vals[t % len(vals)])
+        tick_fn()
+    return (time.perf_counter() - t0) / meas
+
+
+def monitor_overhead_ratio():
+    """Fleet vs per-queue monitoring overhead at Q in {16, 256, 4096};
+    writes BENCH_pipeline.json (ratios + oracle parity)."""
+    cfg = MonitorConfig()
+    rng = np.random.default_rng(0)
+    rows = []
+    report: dict = {"period_s": PERIOD_S, "config": "MonitorConfig()",
+                    "per_queue": {}, "fleet": {}, "harness": {},
+                    "ratio": {}}
+
+    for Q in (16, 256, 4096):
+        warm = 40
+        meas = 26 if Q >= 4096 else 160
+        vals = [rng.poisson(200, Q).astype(float) for _ in range(8)]
+
+        # harness-only: counter stores the monitor would read
+        queues = [InstrumentedQueue(8) for _ in range(Q)]
+        t_harness = _bench_path(Q, 4, meas, lambda: None, queues, vals)
+
+        # seed per-queue MonitorThread path
+        queues = [InstrumentedQueue(8) for _ in range(Q)]
+        qms = [QueueMonitor(q, cfg, base_period_s=PERIOD_S)
+               for q in queues]
+
+        def tick_pq():
+            for qm in qms:
+                qm.sample()
+
+        t_pq = _bench_path(Q, warm, meas, tick_pq, queues, vals)
+
+        # fleet path: batched collector + amortized fused dispatch
+        queues = [InstrumentedQueue(8) for _ in range(Q)]
+        svc = FleetMonitorService(queues, cfg, period_s=PERIOD_S,
+                                  chunk_t=32, ends="both")
+        t_fl = _bench_path(Q, max(warm, 2 * svc.chunk_t), meas,
+                           svc.sample, queues, vals)
+        svc.flush()
+
+        ov_pq = max(t_pq - t_harness, 1e-12)
+        ov_fl = max(t_fl - t_harness, 1e-12)
+        ratio = ov_pq / ov_fl
+        report["harness"][str(Q)] = {"us_per_tick": t_harness * 1e6}
+        report["per_queue"][str(Q)] = {
+            "us_per_tick": ov_pq * 1e6, "us_per_sample": ov_pq / Q * 1e6}
+        report["fleet"][str(Q)] = {
+            "us_per_tick": ov_fl * 1e6, "us_per_sample": ov_fl / Q * 1e6,
+            "dispatches": svc.dispatches}
+        report["ratio"][str(Q)] = ratio
+        rows.append(f"pipeline_monitor/q={Q},{ov_fl * 1e6:.0f},"
+                    f"{ratio:.1f}x_vs_per_queue")
+
+    # --- estimate parity: integrated service vs sequential scan oracle --
+    Qp, Tp = 64, 640
+    tc = rng.poisson(rng.uniform(100, 400, (Qp, 1)), (Qp, Tp)).astype(float)
+    blocked = rng.random((Qp, Tp)) < 0.05
+    queues = [InstrumentedQueue(8) for _ in range(Qp)]
+    svc = FleetMonitorService(queues, cfg, period_s=PERIOD_S, chunk_t=32,
+                              scale_to_period=False)
+    for t in range(Tp):
+        for qi, q in enumerate(queues):
+            q.head.tc = float(tc[qi, t])
+            q.head.blocked = bool(blocked[qi, t])
+        svc.sample()
+    svc.flush()
+    st, _ = run_monitor_fleet(cfg, tc, blocked, impl="scan", mode="state")
+    epochs_equal = bool(
+        np.array_equal(svc.epochs(), np.asarray(st.epoch)))
+    conv = svc.epochs() > 0
+    got = svc.service_rates() * svc.period_s
+    want = np.asarray(st.last_qbar)
+    rel = np.abs(got[conv] - want[conv]) / np.maximum(np.abs(want[conv]),
+                                                      1e-12)
+    max_rel = float(rel.max()) if conv.any() else float("nan")
+    parity_ok = epochs_equal and conv.any() and max_rel < 1e-4
+    report["parity"] = {"rtol_target": 1e-4, "max_rel_err": max_rel,
+                        "converged_queues": int(conv.sum()),
+                        "epochs_equal": epochs_equal, "ok": parity_ok}
+    rows.append(f"pipeline_parity/q={Qp},0,"
+                f"max_rel_err={max_rel:.2e}_ok={parity_ok}")
+
+    r256 = report["ratio"]["256"]
+    report["target"] = {"ratio_at_256": 3.0, "met": r256 >= 3.0}
+    BENCH_PIPELINE_JSON.write_text(json.dumps(report, indent=2))
+    return rows, (f"fleet monitoring {r256:.1f}x cheaper than per-queue "
+                  f"at Q=256 (target >=3x), parity ok={parity_ok} "
+                  "(see BENCH_pipeline.json)")
+
+
+def pipeline_end_to_end():
+    """A live pipeline on the fleet hot path: correctness + the number
+    of fused dispatches the whole run cost."""
+    n = 60_000
+    pipe = Pipeline([Stage("src", source=range(n)),
+                     Stage("x2", fn=lambda x: x * 2),
+                     Stage("sink_stage", fn=lambda x: x)],
+                    capacity=64, base_period_s=1e-3,
+                    monitor_cfg=MonitorConfig(window=16, min_q_samples=16))
+    pipe.fleet.warmup()   # one-time jit compile, not steady-state cost
+    t0 = time.perf_counter()
+    out = pipe.run_collect(timeout_s=120)
+    dt = time.perf_counter() - t0
+    ok = sorted(out) == [2 * i for i in range(n)]
+    disp = pipe.fleet.dispatches
+    return ([f"pipeline_e2e/items={n},{dt * 1e6:.0f},"
+             f"correct={ok}_dispatches={disp}"],
+            f"3-stage pipeline, {n} items, correct={ok}; whole-pipeline "
+            f"monitoring cost {disp} fused dispatches")
+
+
+ALL = [monitor_overhead_ratio, pipeline_end_to_end]

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# One-command smoke: tier-1 tests + the pipeline-integration benchmark.
+#
+#   scripts/smoke.sh
+#
+# Runs the full test suite, then the pipeline monitoring suite
+# (fleet-vs-per-queue overhead ratio + scan-oracle parity), which
+# regenerates BENCH_pipeline.json at the repo root.  The run-level JSON
+# report lands next to it as BENCH_pipeline.run.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
+
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/run.py --suite pipeline \
+    --json BENCH_pipeline.run.json
+
+python - <<'EOF'
+import json
+rep = json.load(open("BENCH_pipeline.json"))
+ratio = rep["ratio"]["256"]
+parity = rep["parity"]["ok"]
+print(f"smoke: fleet/per-queue overhead ratio at Q=256 = {ratio:.1f}x "
+      f"(target >= 3x), parity ok = {parity}")
+assert ratio >= 3.0 and parity, "pipeline bench below acceptance"
+EOF
+echo "smoke: OK"

@@ -12,13 +12,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core import queueing
 from repro.core.stats import Moments, moments_finalize, moments_init, \
-    moments_update
+    moments_update, moments_update_batch
 
 __all__ = [
     "BufferAutotuner",
@@ -62,6 +62,33 @@ class BufferAutotuner:
             return rec, True
         return self.current, False
 
+    # -- fleet forms: (Q,) rate arrays in, (Q,) capacities out ------------
+    def recommend_fleet(self, lam, mu, cv2=1.0, current=None) -> np.ndarray:
+        """Vectorized ``recommend``: one fused evaluation sizes every
+        queue in the fleet.  Queues with unobservable rates keep
+        ``current`` (per-queue array, or the scalar tuner default)."""
+        lam = np.asarray(lam, float)
+        mu = np.asarray(mu, float)
+        cur = (np.full(lam.shape, self.current, np.int64)
+               if current is None else np.asarray(current, np.int64))
+        k = np.asarray(queueing.optimal_buffer_size_fleet(
+            lam, mu, target_frac=self.target_frac, cv2=cv2,
+            max_k=self.max_capacity))
+        k = np.clip(k, self.min_capacity, self.max_capacity)
+        return np.where((lam > 0) & (mu > 0), k, cur).astype(np.int64)
+
+    def maybe_resize_fleet(self, lam, mu, current, cv2=1.0
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Vectorized ``maybe_resize`` against a per-queue ``current``
+        capacity array; returns ``(new_capacities, resized_mask)`` with
+        the same hysteresis band as the scalar form."""
+        cur = np.asarray(current, np.int64)
+        rec = self.recommend_fleet(lam, mu, cv2, current=cur)
+        ratio = rec / np.maximum(cur, 1)
+        resized = (ratio >= self.resize_factor) \
+            | (ratio <= 1.0 / self.resize_factor)
+        return np.where(resized, rec, cur), resized
+
 
 @dataclasses.dataclass
 class ParallelismController:
@@ -80,6 +107,15 @@ class ParallelismController:
                      stage_rate: float) -> tuple[int, bool]:
         n = self.replicas(upstream_rate, stage_rate)
         return n, n != current
+
+    def replicas_fleet(self, upstream_rates, stage_rates) -> np.ndarray:
+        """Vectorized ``replicas``: (Q,) rate arrays in, (Q,) replica
+        counts out in one fused evaluation."""
+        up = np.asarray(upstream_rates, float)
+        mu = np.asarray(stage_rates, float)
+        n = np.ceil(self.headroom * up / np.where(mu > 0, mu, 1.0))
+        n = np.where(mu <= 0, self.max_replicas, n)
+        return np.clip(n, 1, self.max_replicas).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -101,6 +137,25 @@ class StragglerDetector:
         if rate > 0:
             self.rates[host] = rate
 
+    def report_fleet(self, hosts, rates) -> None:
+        """Batch report: one call folds a whole fleet's converged rates
+        into the registry (non-positive rates are unobserved, skipped)."""
+        rates = np.asarray(rates, float)
+        for host, rate in zip(hosts, rates):
+            if rate > 0:
+                self.rates[host] = float(rate)
+
+    def straggler_mask(self, rates) -> np.ndarray:
+        """Array-in/array-out phase-change detection without the host
+        registry: flags entries below ``threshold`` x the median of the
+        positive (observed) rates — one fused evaluation."""
+        r = np.asarray(rates, float)
+        pos = r > 0
+        if int(pos.sum()) < self.min_hosts:
+            return np.zeros(r.shape, bool)
+        med = float(np.median(r[pos]))
+        return pos & (r < self.threshold * med)
+
     def stragglers(self) -> list[str]:
         if len(self.rates) < self.min_hosts:
             return []
@@ -121,34 +176,63 @@ class DistributionClassifier:
     cv^2 ~ 0   -> 'D'  (deterministic; use M/D/1/K sizing)
     cv^2 ~ 1   -> 'M'  (exponential; use M/M/1/K sizing)
     otherwise  -> 'G'  (general; fall back to conservative M/M/1/K)
+
+    ``n_streams=None`` is the scalar classifier (one service process).
+    ``n_streams=Q`` is the fleet form: every leaf of the moment state is
+    (Q,), ``update_batch`` takes a (Q, B) tile (one fused evaluation for
+    the whole fleet), and ``classify``/``cv2`` return (Q,) arrays.
     """
 
-    def __init__(self, d_tol: float = 0.25, m_tol: float = 0.35):
+    def __init__(self, d_tol: float = 0.25, m_tol: float = 0.35,
+                 n_streams: Optional[int] = None):
         self.d_tol = d_tol
         self.m_tol = m_tol
-        self._m: Moments = moments_init()
+        self.n_streams = n_streams
+        if n_streams is None:
+            self._m: Moments = moments_init()
+        else:
+            self._m = Moments(*(np.zeros((n_streams,))
+                                for _ in range(5)))
 
     def update(self, service_time: float) -> None:
+        if self.n_streams is not None:
+            raise ValueError("fleet classifier takes update_batch tiles")
         self._m = moments_update(self._m, service_time)
 
-    def update_batch(self, service_times) -> None:
-        for s in np.asarray(service_times).ravel():
-            self._m = moments_update(self._m, float(s))
+    def update_batch(self, service_times, where=None) -> None:
+        """Fold a batch of service-time samples in one vectorized Pebay
+        merge: (B,) for the scalar form, (Q, B) for the fleet form.
+        ``where`` masks invalid samples (e.g. blocked periods)."""
+        x = np.asarray(service_times, np.float64)
+        if self.n_streams is None and x.ndim > 1:
+            x = x.ravel()
+        self._m = moments_update_batch(self._m, x, where=where)
 
     @property
-    def cv2(self) -> float:
-        return float(moments_finalize(self._m)[4])
+    def counts(self) -> np.ndarray:
+        return np.asarray(self._m.count)
 
-    def classify(self) -> str:
-        if float(self._m.count) < 16:
-            return "G"
-        cv2 = self.cv2
-        if cv2 < self.d_tol:
-            return "D"
-        if abs(cv2 - 1.0) < self.m_tol:
-            return "M"
-        return "G"
+    @property
+    def cv2(self):
+        out = np.asarray(moments_finalize(self._m)[4])
+        return float(out) if self.n_streams is None else out
+
+    def classify(self):
+        count = np.asarray(self._m.count)
+        cv2 = np.asarray(moments_finalize(self._m)[4])
+        ready = count >= 16
+        is_d = ready & (cv2 < self.d_tol)
+        is_m = ready & ~is_d & (np.abs(cv2 - 1.0) < self.m_tol)
+        if self.n_streams is None:
+            return "D" if is_d else ("M" if is_m else "G")
+        out = np.full(count.shape, "G", dtype="<U1")
+        out[is_d] = "D"
+        out[is_m] = "M"
+        return out
 
     def sizing_fn(self) -> Callable:
+        if self.n_streams is not None:
+            raise ValueError("fleet classifier feeds cv2 arrays to "
+                             "BufferAutotuner.recommend_fleet instead")
         return (queueing.md1k_throughput_approx if self.classify() == "D"
                 else queueing.mm1k_throughput)

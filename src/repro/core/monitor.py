@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import math
 from typing import NamedTuple
 
@@ -46,6 +47,8 @@ __all__ = [
     "FleetMonitorState",
     "fleet_monitor_init",
     "run_monitor_fleet",
+    "fleet_rate_readout",
+    "fleet_dispatch_trace_count",
     "HostMonitor",
     "SamplingPeriodController",
 ]
@@ -329,11 +332,49 @@ def fleet_monitor_init(cfg: MonitorConfig, n_queues: int,
         epoch=i(q), last_qbar=f(q), n_total=i(q), n_blocked=i(q))
 
 
+_FLEET_TRACE_COUNT = [0]
+
+
+def fleet_dispatch_trace_count() -> int:
+    """How many times the cached fleet-step dispatch has been (re)traced.
+
+    Used by the recompile-count regression tests: ragged fleet sizes must
+    map onto one trace per (block_q, chunk_t, config) via queue-axis
+    padding, not one trace per Q.
+    """
+    return _FLEET_TRACE_COUNT[0]
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet_dispatch(cfg: MonitorConfig, impl: str, mode: str,
+                    interpret: bool, block_q: int, donate: bool):
+    """Jitted fleet step, cached per static configuration.
+
+    The returned function is shape-polymorphic only through jit's own
+    shape cache: because ``run_monitor_fleet`` pads the queue axis to a
+    ``block_q`` multiple and the time axis to ``chunk_t``, every dispatch
+    for a given (block_q, chunk_t, cfg) shares a single trace.  With
+    ``donate=True`` the state argument is donated so XLA reuses the fleet
+    state buffers in place across dispatches — callers must not touch the
+    passed-in state afterwards (the monitoring services never do).
+    """
+    from repro.kernels.monitor.ops import _fleet_monitor_scan_impl
+
+    def step(state, tc, blocked):
+        _FLEET_TRACE_COUNT[0] += 1   # python body runs at trace time only
+        return _fleet_monitor_scan_impl(
+            cfg, state, tc, blocked, impl=impl, mode=mode,
+            interpret=interpret, block_q=block_q)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
 def run_monitor_fleet(cfg: MonitorConfig, tc_seq, blocked_seq=None, *,
                       state: FleetMonitorState | None = None,
                       chunk_t: int = 256, impl: str = "rounds",
                       mode: str = "full", interpret: bool = True,
-                      block_q: int = 256, dtype=jnp.float32
+                      block_q: int = 256, dtype=jnp.float32,
+                      donate: bool = False, pad_q: bool = True
                       ) -> tuple[FleetMonitorState, MonitorOutput | None]:
     """Drive the fused fleet estimator over (Q, T) sample streams.
 
@@ -351,9 +392,14 @@ def run_monitor_fleet(cfg: MonitorConfig, tc_seq, blocked_seq=None, *,
     ``mode="state"`` skips per-step outputs (converged estimates and
     epochs live in the state) and returns ``(state, None)`` — the
     production configuration for large fleets.
-    """
-    from repro.kernels.monitor.ops import fleet_monitor_scan
 
+    The jitted step is cached per (config, chunk_t, block_q): ``pad_q``
+    (default) pads the queue axis up to a ``block_q`` multiple with
+    always-blocked rows, so ragged fleet sizes share one trace and one
+    executable.  ``donate=True`` donates the state into the dispatch (the
+    caller must not reuse the passed-in ``state``) so the (Q,)-leaf fleet
+    state updates in place — the monitoring-service hot path.
+    """
     tc_seq = jnp.asarray(tc_seq, dtype)
     if tc_seq.ndim != 2:
         raise ValueError(f"tc_seq must be (Q, T), got {tc_seq.shape}")
@@ -363,6 +409,18 @@ def run_monitor_fleet(cfg: MonitorConfig, tc_seq, blocked_seq=None, *,
     if state is None:
         state = fleet_monitor_init(cfg, Q, dtype)
 
+    rpad = (-(-Q // block_q) * block_q - Q) if pad_q else 0
+    if rpad:                      # padded rows are permanently blocked
+        if blocked_seq is None:
+            blocked_seq = jnp.zeros((Q, T), jnp.bool_)
+        tc_seq = jnp.pad(tc_seq, ((0, rpad), (0, 0)))
+        blocked_seq = jnp.pad(blocked_seq, ((0, rpad), (0, 0)),
+                              constant_values=True)
+        state = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, rpad),) + ((0, 0),) * (a.ndim - 1)),
+            state)
+
+    step = _fleet_dispatch(cfg, impl, mode, interpret, block_q, donate)
     outs = []
     for t0 in range(0, T, chunk_t):
         tc_c = tc_seq[:, t0:t0 + chunk_t]
@@ -375,18 +433,38 @@ def run_monitor_fleet(cfg: MonitorConfig, tc_seq, blocked_seq=None, *,
             tc_c = jnp.pad(tc_c, ((0, 0), (0, pad)))
             blk_c = jnp.pad(blk_c, ((0, 0), (0, pad)),
                             constant_values=True)
-        state, out = fleet_monitor_scan(
-            cfg, state, tc_c, blk_c, impl=impl, mode=mode,
-            interpret=interpret, block_q=block_q)
+        state, out = step(state, tc_c, blk_c)
         if pad:                            # padded steps are not real
             state = state._replace(n_total=state.n_total - pad,
                                    n_blocked=state.n_blocked - pad)
         outs.append(out)
+    if rpad:
+        state = jax.tree_util.tree_map(lambda a: a[:Q], state)
     if mode != "full":
         return state, None
-    merged = MonitorOutput(*(jnp.concatenate(parts, axis=1)[:, :T]
+    merged = MonitorOutput(*(jnp.concatenate(parts, axis=1)[:Q, :T]
                              for parts in zip(*outs)))
     return state, merged
+
+
+def fleet_rate_readout(cfg: MonitorConfig, state: FleetMonitorState,
+                       period_s: float = 1.0) -> np.ndarray:
+    """Per-queue service-rate readout (items/s) with the Welford-count
+    readiness gate.
+
+    A queue that has converged at least once reports its last converged
+    q-bar.  Before the first convergence the running q-bar is reported
+    only once the current epoch has accumulated ``min_q_samples`` folds —
+    never a raw partial-window sample, which is exactly the noise the
+    paper's Algorithm 1 exists to filter out.  Unready queues report 0.
+    """
+    epoch = np.asarray(state.epoch)
+    count = np.asarray(state.count)
+    mean = np.asarray(state.mean)
+    last = np.asarray(state.last_qbar)
+    est = np.where(epoch > 0, last,
+                   np.where(count >= cfg.min_q_samples, mean, 0.0))
+    return est / period_s if period_s > 0 else np.zeros_like(est)
 
 
 # ---------------------------------------------------------------------------

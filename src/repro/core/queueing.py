@@ -13,6 +13,10 @@ motivating use case (Fig. 2).
 
 from __future__ import annotations
 
+import functools
+import math
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,6 +29,7 @@ __all__ = [
     "mm1k_mean_occupancy",
     "md1k_throughput_approx",
     "optimal_buffer_size",
+    "optimal_buffer_size_fleet",
 ]
 
 
@@ -122,6 +127,65 @@ def optimal_buffer_size(lam, mu, *, target_frac: float = 0.99,
         else:
             lo = mid + 1
     return int(lo)
+
+
+@functools.lru_cache(maxsize=None)
+def _buffer_size_search(target_frac: float, max_k: int):
+    """Jitted fleet-capacity search, cached per (target_frac, max_k).
+    The gallop + bisection loops are fixed-trip and data-independent, so
+    they trace once into one fused executable — the monitoring timer
+    thread must not pay ~40 eager op dispatches per resize decision.
+    """
+
+    def search(lam, mu, cv2):
+        lam, mu, cv2 = jnp.broadcast_arrays(lam, mu, cv2)
+        target = target_frac * jnp.minimum(lam, mu)
+
+        def thr(k):
+            return jnp.where(cv2 >= 0.5, mm1k_throughput(lam, mu, k),
+                             md1k_throughput_approx(lam, mu, k))
+
+        # Per-element galloping, then bisection — the same schedule as
+        # the scalar search.  Galloping matters beyond speed: for
+        # rho > 1 the blocking-probability formula NaNs out at huge K
+        # (rho**K overflows), so probing mid = max_k/2 first would never
+        # observe the small-K passes; doubling from 2 finds them exactly
+        # as the scalar loop does.
+        lo = jnp.ones(lam.shape, jnp.int32)
+        hi = jnp.full(lam.shape, 2, jnp.int32)
+        h = 2
+        while h < max_k:
+            failing = ~(thr(hi.astype(jnp.float32)) >= target) \
+                & (hi < max_k)
+            lo = jnp.where(failing, hi, lo)
+            hi = jnp.where(failing, jnp.minimum(hi * 2, int(max_k)), hi)
+            h *= 2
+        for _ in range(max(1, math.ceil(math.log2(max(max_k, 2)))) + 1):
+            mid = (lo + hi) // 2
+            use = lo < hi
+            ok = thr(mid.astype(jnp.float32)) >= target
+            hi = jnp.where(use & ok, mid, hi)
+            lo = jnp.where(use & ~ok, mid + 1, lo)
+        return jnp.where((lam > 0) & (mu > 0), lo, 1)
+
+    return jax.jit(search)
+
+
+def optimal_buffer_size_fleet(lam, mu, *, target_frac: float = 0.99,
+                              max_k: int = 1 << 16, cv2=1.0):
+    """Vectorized ``optimal_buffer_size`` over (Q,) rate arrays.
+
+    One fused (jitted) evaluation for the whole fleet: a fixed
+    ``ceil(log2(max_k))``-step gallop + bisection on the monotone
+    accepted-throughput curve, with each queue routed elementwise to the
+    M/M/1/K or (``cv2 < 0.5``) M/D/1/K model.  Agrees with the scalar
+    search for every element; queues with non-positive rates report
+    capacity 1 (the scalar function's unobservable-rates answer).
+    """
+    lam = jnp.asarray(lam, jnp.float32)
+    return _buffer_size_search(float(target_frac), int(max_k))(
+        lam, jnp.asarray(mu, jnp.float32),
+        jnp.asarray(cv2, jnp.float32))
 
 
 def expected_nonblocking_fraction(T, C, rho, mu_s) -> float:

@@ -17,6 +17,7 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "Welford",
@@ -30,6 +31,7 @@ __all__ = [
     "Moments",
     "moments_init",
     "moments_update",
+    "moments_update_batch",
     "moments_merge",
     "moments_finalize",
 ]
@@ -114,6 +116,38 @@ def moments_update(s: Moments, x) -> Moments:
     m3 = s.m3 + term1 * delta_n * (n - 2.0) - 3.0 * delta_n * s.m2
     m2 = s.m2 + term1
     return Moments(count=n, mean=mean, m2=m2, m3=m3, m4=m4)
+
+
+def moments_update_batch(s: Moments, x, where=None) -> Moments:
+    """Fold a whole batch of observations into the running moments with
+    one vectorized evaluation: raw central moments of the batch along its
+    last axis, then one exact Pebay merge — replacing the per-sample
+    python loop the host-side classifier used to pay per period.
+
+    The last axis of ``x`` is reduced; the remaining leading shape must
+    broadcast against the state's leaves, so a scalar state takes a flat
+    (B,) batch and a (Q,)-leaf fleet state takes a (Q, B) tile.
+    ``where`` (same shape as ``x``) masks samples out — a masked-empty
+    row leaves that row's state untouched.
+    """
+    xp = jnp if isinstance(x, jnp.ndarray) else np
+    x = xp.asarray(x)
+    if where is None:
+        n = xp.full(x.shape[:-1], float(x.shape[-1]))
+        mean = xp.mean(x, axis=-1)
+        d = x - mean[..., None]
+    else:
+        w = xp.asarray(where, bool)
+        n = xp.sum(w, axis=-1).astype(x.dtype)
+        safe = xp.maximum(n, 1.0)
+        mean = xp.sum(xp.where(w, x, 0.0), axis=-1) / safe
+        d = xp.where(w, x - mean[..., None], 0.0)
+    d2 = d * d
+    batch = Moments(count=n, mean=mean,
+                    m2=xp.sum(d2, axis=-1),
+                    m3=xp.sum(d2 * d, axis=-1),
+                    m4=xp.sum(d2 * d2, axis=-1))
+    return moments_merge(s, batch)
 
 
 def moments_merge(a: Moments, b: Moments) -> Moments:

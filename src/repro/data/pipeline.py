@@ -16,8 +16,8 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.core.monitor import MonitorConfig
-from repro.streams import InstrumentedQueue, MonitorThread, QueueMonitor, \
-    STOP
+from repro.streams import (FleetMonitorService, FleetMonitorThread,
+                           InstrumentedQueue, STOP)
 
 __all__ = ["SyntheticLMSource", "TextFileSource", "DataPipeline",
            "pack_tokens"]
@@ -87,11 +87,11 @@ class DataPipeline:
             queue_capacity, item_bytes=4 * (seq_len + 1) * batch_size,
             name="batch->device")
         cfg = monitor_cfg or MonitorConfig(window=16, min_q_samples=16)
-        self.monitors = [QueueMonitor(self.q_seq, cfg,
-                                      base_period_s=5e-3),
-                         QueueMonitor(self.q_batch, cfg,
-                                      base_period_s=5e-3)]
-        self.monitor_thread = MonitorThread(self.monitors)
+        # both links ride the one fleet dispatch per tick
+        self.fleet = FleetMonitorService([self.q_seq, self.q_batch], cfg,
+                                         period_s=5e-3, chunk_t=16,
+                                         ends="both")
+        self.monitor_thread = FleetMonitorThread(self.fleet)
         self._threads: list[threading.Thread] = []
         self._source = source
         self._n_readers = n_readers
@@ -144,8 +144,12 @@ class DataPipeline:
         self.monitor_thread.stop()
 
     def rates(self) -> dict:
-        return {qm.queue.name: {
-            "service_rate": qm.service_rate(),
-            "arrival_rate": qm.arrival_rate(),
-            "epochs": qm.head.epoch + qm.tail.epoch,
-        } for qm in self.monitors}
+        mu = self.fleet.service_rates()
+        lam = self.fleet.arrival_rates()
+        eps = self.fleet.epochs()
+        q = len(self.fleet)
+        return {queue.name: {
+            "service_rate": float(mu[i]),
+            "arrival_rate": float(lam[i]),
+            "epochs": int(eps[i] + eps[q + i]),
+        } for i, queue in enumerate(self.fleet.queues)}

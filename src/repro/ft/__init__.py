@@ -1,6 +1,7 @@
-from repro.ft.failures import (HeartbeatRegistry, HostRateTracker,
+from repro.ft.failures import (FleetRateTracker,
+                               HeartbeatRegistry, HostRateTracker,
                                ElasticPlan, plan_elastic_mesh,
                                FaultToleranceManager)
 
-__all__ = ["HeartbeatRegistry", "HostRateTracker", "ElasticPlan",
-           "plan_elastic_mesh", "FaultToleranceManager"]
+__all__ = ["HeartbeatRegistry", "HostRateTracker", "FleetRateTracker",
+           "ElasticPlan", "plan_elastic_mesh", "FaultToleranceManager"]

@@ -18,10 +18,12 @@ from typing import Optional
 import numpy as np
 
 from repro.core.controller import StragglerDetector
-from repro.core.monitor import HostMonitor, MonitorConfig
+from repro.core.monitor import (HostMonitor, MonitorConfig,
+                                fleet_monitor_init, fleet_rate_readout,
+                                run_monitor_fleet)
 
-__all__ = ["HeartbeatRegistry", "HostRateTracker", "ElasticPlan",
-           "plan_elastic_mesh", "FaultToleranceManager"]
+__all__ = ["HeartbeatRegistry", "HostRateTracker", "FleetRateTracker",
+           "ElasticPlan", "plan_elastic_mesh", "FaultToleranceManager"]
 
 
 class HeartbeatRegistry:
@@ -60,6 +62,48 @@ class HostRateTracker:
         hm.period_s = period_s
         if hm.update(steps_in_period, blocked):
             self.detector.report(host, hm.rate_items_per_s())
+
+    def stragglers(self) -> list[str]:
+        return self.detector.stragglers()
+
+
+class FleetRateTracker:
+    """Fleet-scale host-rate tracking: every host's step-completion
+    stream rides one fused Algorithm-1 dispatch instead of a python
+    ``HostMonitor`` per host, and converged rate arrays fold into the
+    straggler detector with one batched report.
+
+    Feed (Q, T) tiles of per-period step counts (``blocked`` marks
+    periods where a host was stalled on I/O or a collective, which
+    Algorithm 1 discards); readouts carry the Welford-count readiness
+    gate, so an unconverged host reports 0 and is simply unobserved.
+    """
+
+    def __init__(self, hosts, cfg: Optional[MonitorConfig] = None, *,
+                 period_s: float = 1.0, chunk_t: int = 16,
+                 impl: str = "rounds", block_q: int = 64):
+        self.hosts = list(hosts)
+        self.cfg = cfg or MonitorConfig(window=16, min_q_samples=16)
+        self.period_s = float(period_s)
+        self.chunk_t = int(chunk_t)
+        self.impl = impl
+        self.block_q = block_q
+        self.detector = StragglerDetector()
+        self._state = fleet_monitor_init(self.cfg, len(self.hosts))
+
+    def record_tile(self, steps_per_period, blocked=None) -> np.ndarray:
+        """(Q, T) step counts -> one donated fleet dispatch; returns the
+        gated (Q,) rates after folding them into the detector."""
+        self._state, _ = run_monitor_fleet(
+            self.cfg, np.asarray(steps_per_period, float), blocked,
+            state=self._state, chunk_t=self.chunk_t, impl=self.impl,
+            mode="state", block_q=self.block_q, donate=True)
+        rates = fleet_rate_readout(self.cfg, self._state, self.period_s)
+        self.detector.report_fleet(self.hosts, rates)
+        return rates
+
+    def rates(self) -> np.ndarray:
+        return fleet_rate_readout(self.cfg, self._state, self.period_s)
 
     def stragglers(self) -> list[str]:
         return self.detector.stragglers()

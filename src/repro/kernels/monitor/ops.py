@@ -83,13 +83,10 @@ def _compact(tc, blocked):
     return comp, m, cnt
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "impl", "mode",
-                                             "interpret", "block_q",
-                                             "sub_t"))
-def fleet_monitor_scan(cfg: MonitorConfig, state: FleetMonitorState,
-                       tc, blocked=None, *, impl: str = "rounds",
-                       mode: str = "full", interpret: bool = True,
-                       block_q: int = 256, sub_t: int = 32):
+def _fleet_monitor_scan_impl(cfg: MonitorConfig, state: FleetMonitorState,
+                             tc, blocked=None, *, impl: str = "rounds",
+                             mode: str = "full", interpret: bool = True,
+                             block_q: int = 256, sub_t: int = 32):
     """One fused dispatch over a (Q, T) tile.
 
     impl: "rounds" (segmented time-batched XLA form — host fast path),
@@ -182,6 +179,16 @@ def fleet_monitor_scan(cfg: MonitorConfig, state: FleetMonitorState,
         epoch=hold(ep_c, state.epoch),
     )
     return new_state, out
+
+
+# The public jitted form.  ``run_monitor_fleet`` does NOT call this one:
+# it builds its own cached dispatch from ``_fleet_monitor_scan_impl`` with
+# the queue axis padded to a ``block_q`` multiple (so ragged fleets share
+# one trace) and optional state donation (so fleet state buffers are
+# reused in place across dispatches).
+fleet_monitor_scan = functools.partial(
+    jax.jit, static_argnames=("cfg", "impl", "mode", "interpret",
+                              "block_q", "sub_t"))(_fleet_monitor_scan_impl)
 
 
 # ---------------------------------------------------------------------------

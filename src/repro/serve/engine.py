@@ -2,8 +2,13 @@
 queue and monitor-driven admission.
 
 The request queue is a paper-instrumented stream: the monitor's converged
-non-blocking service rate (tokens/s the engine can sustain) drives
+non-blocking service rate (requests/s the engine can sustain) drives
 admission control and batch sizing — queueing-model-based, not reactive.
+Monitoring rides the fleet path (``FleetMonitorService`` +
+``FleetMonitorThread``): both queue ends are collected into one staging
+tile and Algorithm 1 advances in one fused dispatch per chunk, the same
+hot path ``streams.Pipeline`` uses — so an engine process serving many
+models/queues shares a single monitoring dispatch per tick.
 """
 
 from __future__ import annotations
@@ -20,7 +25,8 @@ import numpy as np
 from repro.core.monitor import MonitorConfig
 from repro.core.queueing import optimal_buffer_size
 from repro.models.api import Model
-from repro.streams import InstrumentedQueue, MonitorThread, QueueMonitor
+from repro.streams import (FleetMonitorService, FleetMonitorThread,
+                           InstrumentedQueue)
 
 __all__ = ["Request", "ServeConfig", "Engine"]
 
@@ -52,11 +58,11 @@ class Engine:
         self.scfg = scfg
         self.queue = InstrumentedQueue(scfg.queue_capacity, item_bytes=1,
                                        name="requests")
-        self.qmon = QueueMonitor(self.queue,
-                                 monitor_cfg or MonitorConfig(
-                                     window=16, min_q_samples=16),
-                                 base_period_s=10e-3)
-        self.monitor_thread = MonitorThread([self.qmon])
+        self.fleet = FleetMonitorService(
+            [self.queue],
+            monitor_cfg or MonitorConfig(window=16, min_q_samples=16),
+            period_s=10e-3, chunk_t=16, ends="both")
+        self.monitor_thread = FleetMonitorThread(self.fleet)
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._prefill = jax.jit(model.prefill)
@@ -138,11 +144,14 @@ class Engine:
 
     # ---------------- monitor-driven tuning ---------------------------------
     def recommended_queue_capacity(self) -> int:
-        lam = self.qmon.arrival_rate()
-        mu = self.qmon.service_rate()
+        lam = float(self.fleet.arrival_rates()[0])
+        mu = float(self.fleet.service_rates()[0])
         if lam <= 0 or mu <= 0:
             return self.queue.capacity
         return optimal_buffer_size(lam, mu, target_frac=0.99)
 
     def service_rate(self) -> float:
-        return self.qmon.service_rate()
+        """Requests/s from the fleet state, readiness-gated: 0 until the
+        estimate has either converged or accumulated ``min_q_samples``
+        q-folds — never a raw partial-window sample."""
+        return float(self.fleet.service_rates()[0])

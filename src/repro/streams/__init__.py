@@ -1,7 +1,9 @@
 from repro.streams.queue import InstrumentedQueue, EndStats
-from repro.streams.monitor_thread import QueueMonitor, MonitorThread
+from repro.streams.monitor_thread import (QueueMonitor, MonitorThread,
+                                          FleetMonitorThread)
 from repro.streams.fleet import FleetMonitorService
 from repro.streams.pipeline import Stage, Pipeline, STOP
 
 __all__ = ["InstrumentedQueue", "EndStats", "QueueMonitor", "MonitorThread",
-           "FleetMonitorService", "Stage", "Pipeline", "STOP"]
+           "FleetMonitorThread", "FleetMonitorService", "Stage", "Pipeline",
+           "STOP"]

@@ -1,23 +1,40 @@
-"""Fleet monitor service: one thread, thousands of queues.
+"""Fleet monitor service: one dispatch per pipeline tick, any fleet size.
 
-The paper's design instruments each queue with its own host-side
-``HostMonitor`` update per period.  At fleet scale the per-queue
-Algorithm-1 math on the instrumentation thread blows the 1-2% overhead
-budget, so this service moves it off-thread: the sampling loop only
-copies-and-zeros the per-queue ``tc``/``blocked`` counters into a
-(Q, chunk_t) staging buffer, and every ``chunk_t`` periods hands the
-whole tile to the fused time-batched estimator (``run_monitor_fleet``),
-which advances Algorithm 1 for every queue in one dispatch.
+This is the single monitoring hot path for the whole stack
+(``streams.Pipeline``, ``serve.Engine``, ``data.DataPipeline``).  The
+paper instruments each queue with its own host-side Algorithm-1 update
+per period; at fleet scale that per-queue python math blows the 1-2%
+overhead budget.  Here the timer tick only runs the *batched collector*:
+copy-and-zero every monitored queue end's ``tc``/``blocked`` counters
+into a pinned (S, chunk_t) host staging buffer.  Every ``chunk_t``
+periods the full tile goes through **one** jitted, donated-argnums
+``run_monitor_fleet`` dispatch that advances Algorithm 1 for every
+stream at once:
 
-The sampling loop itself is still a python for over queues, which is
-fine to a few thousand queues at millisecond periods; the 10^4-10^5
-scale in ROADMAP additionally needs shared (Q,) counter arrays sampled
-in one vectorized copy and the estimator dispatched off the timer
-thread (see ROADMAP Open items).
+    collector -> double buffer -> fused fleet dispatch -> vectorized
+    controllers (BufferAutotuner / ParallelismController /
+    StragglerDetector / DistributionClassifier fleet forms)
 
-Estimates come back through ``FleetMonitorService.rates_items_per_s()``
-and the per-epoch ``on_converged`` callback, mirroring the single-queue
-``QueueMonitor`` API.
+Two things keep the dispatch off the tick's critical path:
+
+* **Double buffering** — two staging buffers swap at dispatch time, so
+  collection continues into one while the previous tile's dispatch
+  (asynchronous under jax) still computes from the other.
+* **Deferred harvest** — a dispatch's epochs/estimates are read back at
+  the *next* dispatch (or ``flush()``), so the timer thread never blocks
+  on device results it does not yet need.
+
+The jitted fleet step is cached per (config, chunk_t, block_q) with the
+queue axis padded to a ``block_q`` multiple, so ragged fleets (any
+number of queues, growing or shrinking) never retrace or recompile.
+
+With ``ends="both"`` each queue contributes two monitored streams —
+head (consumer / service rate) first, then tail (producer / arrival
+rate) — which is what the run-time controllers need to size buffers and
+replicas.  Estimates come back through the Welford-count-gated
+``service_rates()`` / ``arrival_rates()`` readouts and the batched
+``on_fleet(indices, rates)`` convergence callback (a scalar per-stream
+``on_converged(i, rate)`` is kept for compatibility).
 """
 
 from __future__ import annotations
@@ -28,27 +45,41 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.controller import DistributionClassifier
 from repro.core.monitor import (FleetMonitorState, MonitorConfig,
-                                fleet_monitor_init, run_monitor_fleet)
+                                fleet_monitor_init, fleet_rate_readout,
+                                run_monitor_fleet)
 from repro.streams.queue import InstrumentedQueue
 
 __all__ = ["FleetMonitorService"]
 
 
+def _pick_block_q(n_streams: int) -> int:
+    """Smallest power-of-two block covering the fleet, capped at 256 (the
+    kernel's default queue-block): ragged fleet sizes pad up to one
+    shared dispatch shape instead of retracing per size."""
+    return min(256, 1 << max(1, (max(n_streams, 1) - 1).bit_length()))
+
+
 class FleetMonitorService:
     """Batched Algorithm-1 monitoring for a fleet of instrumented queues.
 
-    Monitors the *head* (consumer / service-rate) end of every queue.
-    ``sample()`` is cheap and safe to call from a timer thread; the fused
-    estimator runs synchronously inside ``sample`` every ``chunk_t``
-    periods (or in ``flush()``).
+    ``sample()`` is the per-tick collector — cheap, safe to call from a
+    timer thread, and O(S) python with no estimator math.  The fused
+    estimator runs as one donated dispatch per ``chunk_t`` ticks (or in
+    ``flush()``), with results harvested one dispatch behind so the
+    collector never waits on the device.
     """
 
     def __init__(self, queues: Sequence[InstrumentedQueue],
                  cfg: Optional[MonitorConfig] = None, *,
                  period_s: float = 1e-3, chunk_t: int = 32,
                  impl: str = "rounds", scale_to_period: bool = True,
-                 on_converged: Optional[Callable] = None):
+                 ends: str = "head", block_q: Optional[int] = None,
+                 on_converged: Optional[Callable] = None,
+                 on_fleet: Optional[Callable] = None):
+        if ends not in ("head", "both"):
+            raise ValueError(f"bad ends {ends!r}")
         self.queues = list(queues)
         self.cfg = cfg or MonitorConfig()
         self.period_s = float(period_s)
@@ -57,23 +88,68 @@ class FleetMonitorService:
         # rescale counts by realized/nominal period so timer drift does
         # not alias into the rate (disable when periods are synthetic)
         self.scale_to_period = scale_to_period
+        self.ends = ends
         self.on_converged = on_converged
+        self.on_fleet = on_fleet
+
         q = len(self.queues)
-        self._state: FleetMonitorState = fleet_monitor_init(self.cfg, q)
-        self._tc = np.zeros((q, self.chunk_t))
-        self._blocked = np.ones((q, self.chunk_t), dtype=bool)
+        # stream layout: heads (0..Q-1), then tails (Q..2Q-1) if "both"
+        self._end_stats = [qu.head for qu in self.queues]
+        if ends == "both":
+            self._end_stats += [qu.tail for qu in self.queues]
+        s = len(self._end_stats)
+        self.n_streams = s
+        self.block_q = int(block_q) if block_q else _pick_block_q(s)
+
+        self._state: FleetMonitorState = fleet_monitor_init(self.cfg, s)
+        # pinned double-buffered (S, chunk_t) staging: the active pair
+        # collects while the shadow pair backs the in-flight dispatch
+        self._tc = np.zeros((s, self.chunk_t))
+        self._blocked = np.ones((s, self.chunk_t), dtype=bool)
+        self._tc_shadow = np.zeros_like(self._tc)
+        self._blk_shadow = np.ones_like(self._blocked)
         self._col = 0
-        self._epochs = np.zeros((q,), np.int64)
-        self._estimates = np.zeros((q,))
+        self._pending = False          # a dispatch awaits harvest
+        self._epochs = np.zeros((s,), np.int64)
+        self.dispatches = 0
+        # per-queue service-process moments (cv^2 feeds buffer sizing)
+        self.classifier = DistributionClassifier(n_streams=q)
         self._lock = threading.Lock()
         self._last_t: Optional[float] = None   # set on first sample()
 
     def __len__(self) -> int:
         return len(self.queues)
 
+    def warmup(self) -> None:
+        """Compile the fused dispatch on a throwaway state (same padded
+        shape and static knobs, so it hits the same jit cache entry).
+        ``FleetMonitorThread`` calls this before its first tick — the
+        multi-second first-call compile must never land on the sampling
+        tick, where it would eat the whole observation budget."""
+        tc = np.zeros((self.n_streams, self.chunk_t))
+        blk = np.ones((self.n_streams, self.chunk_t), bool)
+        run_monitor_fleet(
+            self.cfg, tc, blk, state=fleet_monitor_init(self.cfg,
+                                                        self.n_streams),
+            chunk_t=self.chunk_t, impl=self.impl, mode="state",
+            block_q=self.block_q, donate=True)
+        # discard whatever the queues accumulated during the compile:
+        # the first real tick must not fold a multi-second interval as
+        # if it were one nominal period
+        with self._lock:
+            for end in self._end_stats:
+                end.tc = 0
+                end.blocked = False
+                end.bytes_count = 0
+            self._last_t = time.monotonic()
+
     # -- sampling ---------------------------------------------------------
-    def sample(self) -> None:
-        """Copy-and-zero every queue head's counters for this period."""
+    def sample(self) -> bool:
+        """Copy-and-zero every monitored end's counters for this period.
+
+        Returns True if any end observed blocking this tick — the signal
+        the shared sampling-period controller consumes.
+        """
         now = time.monotonic()
         realized = None if self._last_t is None else now - self._last_t
         self._last_t = now
@@ -83,55 +159,129 @@ class FleetMonitorService:
         emit = ()
         with self._lock:
             col = self._col
-            for qi, queue in enumerate(self.queues):
-                tc, blocked, _ = queue.head.sample_and_reset()
-                self._tc[qi, col] = tc * scale
-                self._blocked[qi, col] = blocked
+            tc_col = self._tc[:, col]
+            blk_col = self._blocked[:, col]
+            for si, end in enumerate(self._end_stats):
+                tc_col[si] = end.tc * scale
+                blk_col[si] = end.blocked
+                end.tc = 0
+                end.blocked = False
+                end.bytes_count = 0
+            any_blocked = bool(blk_col.any())
             self._col = col + 1
             if self._col >= self.chunk_t:
                 emit = self._dispatch_locked()
         self._fire(emit)
+        return any_blocked
 
     def flush(self) -> None:
-        """Run the estimator over any buffered partial chunk."""
-        emit = ()
+        """Dispatch any buffered partial chunk and harvest everything."""
+        emits = []
         with self._lock:
             if self._col:
-                emit = self._dispatch_locked()
-        self._fire(emit)
+                emits.append(self._dispatch_locked())
+            emits.append(self._harvest_locked())
+        for emit in emits:
+            self._fire(emit)
 
     def _dispatch_locked(self) -> tuple:
         cols = self._col
-        tc = self._tc[:, :cols]
-        blocked = self._blocked[:, :cols]
-        self._state, _ = run_monitor_fleet(
-            self.cfg, tc, blocked, state=self._state, chunk_t=self.chunk_t,
-            impl=self.impl, mode="state")
+        tc, blocked = self._tc[:, :cols], self._blocked[:, :cols]
+        # swap staging: the dispatch reads this tile while the collector
+        # keeps writing into the other buffer
+        self._tc, self._tc_shadow = self._tc_shadow, self._tc
+        self._blocked, self._blk_shadow = self._blk_shadow, self._blocked
         self._col = 0
         self._blocked[:] = True
+        emit = self._harvest_locked()   # previous dispatch, now complete
+
+        # per-queue implied service times (period / items) -> fleet cv^2,
+        # one fused masked-moment evaluation for the whole tile
+        q = len(self.queues)
+        head_tc, head_blk = tc[:q], blocked[:q]
+        valid = (head_tc > 0) & ~head_blk
+        self.classifier.update_batch(
+            np.where(valid, self.period_s / np.maximum(head_tc, 1e-30),
+                     0.0), where=valid)
+
+        self._state, _ = run_monitor_fleet(
+            self.cfg, tc, blocked, state=self._state,
+            chunk_t=self.chunk_t, impl=self.impl, mode="state",
+            block_q=self.block_q, donate=True)
+        self.dispatches += 1
+        self._pending = True
+        return emit
+
+    def _harvest_locked(self) -> tuple:
+        """Read back the last dispatch's epochs/estimates (blocks only if
+        the asynchronous dispatch has not finished yet)."""
+        if not self._pending:
+            return ()
+        self._pending = False
         epochs = np.asarray(self._state.epoch, np.int64)
         ests = np.asarray(self._state.last_qbar)
         newly = np.nonzero(epochs > self._epochs)[0]
         self._epochs = epochs
-        self._estimates = ests
-        return tuple((int(qi), float(ests[qi]) / self.period_s)
-                     for qi in newly)
+        return tuple((int(si), float(ests[si]) / self.period_s)
+                     for si in newly)
 
     def _fire(self, emit: tuple) -> None:
         """Run user callbacks outside the lock: a slow or re-entrant
         callback must not stall or deadlock the sampling thread."""
+        if not emit:
+            return
+        if self.on_fleet is not None:
+            idx = np.array([si for si, _ in emit], np.int64)
+            rates = np.array([r for _, r in emit])
+            self.on_fleet(idx, rates)
         if self.on_converged is not None:
-            for qi, rate in emit:
-                self.on_converged(qi, rate)
+            for si, rate in emit:
+                self.on_converged(si, rate)
 
     # -- readouts ---------------------------------------------------------
+    def state_snapshot(self) -> FleetMonitorState:
+        """Materialized numpy copy of the fleet state, taken under the
+        collector lock.  The live jax state must never escape: its
+        buffers are donated into the next dispatch, and a reference read
+        after that raises "Array has been deleted"."""
+        with self._lock:
+            return FleetMonitorState(*(np.array(leaf)
+                                       for leaf in self._state))
+
     def epochs(self) -> np.ndarray:
         return self._epochs.copy()
 
+    def _gated_rates(self) -> np.ndarray:
+        """Readiness-gated items/s for every stream (see
+        ``fleet_rate_readout``): converged estimate, else the running
+        q-bar once ``min_q_samples`` folds accumulated, else 0."""
+        return fleet_rate_readout(self.cfg, self.state_snapshot(),
+                                  self.period_s)
+
+    def service_rates(self) -> np.ndarray:
+        """(Q,) consumer non-blocking service rates, items/s (gated)."""
+        return self._gated_rates()[:len(self.queues)]
+
+    def arrival_rates(self) -> np.ndarray:
+        """(Q,) producer arrival rates, items/s (gated); requires
+        ``ends='both'``."""
+        if self.ends != "both":
+            raise ValueError("arrival rates need ends='both'")
+        return self._gated_rates()[len(self.queues):]
+
     def rates_items_per_s(self) -> np.ndarray:
-        """Latest converged service-rate estimate per queue, items/s."""
-        return self._estimates / self.period_s
+        """Back-compat alias for the head-end readout."""
+        return self.service_rates()
 
     def observed_blocking_fraction(self) -> np.ndarray:
-        n_total = np.maximum(np.asarray(self._state.n_total), 1)
-        return np.asarray(self._state.n_blocked) / n_total
+        state = self.state_snapshot()
+        q = len(self.queues)
+        n_total = np.maximum(state.n_total[:q], 1)
+        return state.n_blocked[:q] / n_total
+
+    def cv2s(self) -> np.ndarray:
+        """(Q,) squared coefficient of variation of each queue's service
+        process — feeds ``BufferAutotuner.recommend_fleet``."""
+        cv2 = np.asarray(self.classifier.cv2)
+        # queues without enough samples fall back to M/M (cv2 = 1)
+        return np.where(self.classifier.counts >= 16, cv2, 1.0)

@@ -1,23 +1,33 @@
-"""The paper's monitor thread ("the eye", Fig. 5).
+"""The paper's monitor thread ("the eye", Fig. 5) — in two generations.
 
-One thread instruments a set of queues: every period T it copies-and-zeros
-each queue end's ``tc`` and ``blocked`` flag and feeds the per-end
-``HostMonitor`` (Algorithm 1).  T adapts per queue via the paper's
-sampling-period controller (§IV-A).  Converged estimates are pushed to the
-run-time controllers (buffer autotuner / parallelism / straggler).
+``FleetMonitorThread`` is the production path: one timer thread runs the
+batched collector of a ``FleetMonitorService`` every period T (all
+queues' counters into one staging tile, one fused estimator dispatch per
+``chunk_t`` ticks) and adapts the *shared* sampling period with the
+paper's controller (§IV-A) from the fleet's any-blocked signal.  The
+per-tick monitor work is O(S) counter copies — the Algorithm-1 math runs
+amortized and vectorized off the tick.
+
+``QueueMonitor``/``MonitorThread`` are the original per-queue design
+(one ``HostMonitor`` update per queue end per period, per-queue adaptive
+T).  They remain as the paper-faithful reference and as the baseline the
+pipeline benchmark measures the fleet path against.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, TYPE_CHECKING
 
 from repro.core.monitor import (HostMonitor, MonitorConfig,
                                 SamplingPeriodController)
 from repro.streams.queue import InstrumentedQueue
 
-__all__ = ["QueueMonitor", "MonitorThread"]
+if TYPE_CHECKING:   # pragma: no cover - import cycle guard
+    from repro.streams.fleet import FleetMonitorService
+
+__all__ = ["QueueMonitor", "MonitorThread", "FleetMonitorThread"]
 
 
 class QueueMonitor:
@@ -92,3 +102,49 @@ class MonitorThread(threading.Thread):
 
     def stop(self) -> None:
         self._stop.set()
+
+
+class FleetMonitorThread(threading.Thread):
+    """One timer thread for the whole fleet: batched collection, one
+    amortized estimator dispatch, shared adaptive sampling period.
+
+    Every tick costs one ``FleetMonitorService.sample()`` (counter
+    copies into the staging tile); the fused Algorithm-1 dispatch fires
+    once per ``chunk_t`` ticks inside ``sample``.  The paper's
+    sampling-period controller observes the realized period and the
+    fleet-wide any-blocked signal, so T widens/narrows for the fleet as
+    a unit — the natural posture when all queues ride one dispatch.
+    """
+
+    def __init__(self, service: "FleetMonitorService",
+                 period: Optional[SamplingPeriodController] = None,
+                 adapt_period: bool = True, min_sleep_s: float = 2e-4):
+        super().__init__(daemon=True, name="repro-fleet-monitor")
+        self.service = service
+        self.period = period or SamplingPeriodController(
+            base_latency_s=service.period_s,
+            max_period_s=service.period_s * 64)
+        self.adapt_period = adapt_period
+        self.min_sleep_s = min_sleep_s
+        self._stop = threading.Event()
+
+    def run(self) -> None:
+        self.service.warmup()          # jit-compile off the tick path
+        last = time.monotonic()
+        next_due = last
+        while not self._stop.is_set():
+            now = time.monotonic()
+            if now < next_due:
+                self._stop.wait(max(next_due - now, self.min_sleep_s))
+                continue
+            blocked = self.service.sample()
+            realized, last = now - last, now
+            if self.adapt_period:
+                self.service.period_s = self.period.observe(realized,
+                                                            blocked)
+            next_due = now + self.service.period_s
+
+    def stop(self, flush: bool = True) -> None:
+        self._stop.set()
+        if flush:
+            self.service.flush()

@@ -1,6 +1,14 @@
 """Streaming pipeline graph: RaftLib-style kernels connected by
-InstrumentedQueues, each kernel on its own thread, one monitor thread per
-pipeline, and the run-time controllers closing the loop.
+InstrumentedQueues, each kernel on its own thread, and the run-time
+controllers closing the loop.
+
+Monitoring is the fleet path: every link's head and tail ride one
+``FleetMonitorService`` — a single timer thread collects all counters
+into one staging tile and the whole pipeline's Algorithm-1 state
+advances in **one** fused dispatch per ``chunk_t`` ticks.  The control
+plane is vectorized to match: buffer autotuning and replica
+recommendations consume the (Q,) fleet estimate arrays directly instead
+of one scalar callback per queue.
 
 This is the substrate both the paper's applications (matrix multiply,
 Rabin-Karp — examples/streaming_apps.py) and the training data pipeline
@@ -10,12 +18,14 @@ Rabin-Karp — examples/streaming_apps.py) and the training data pipeline
 from __future__ import annotations
 
 import threading
-import time
 from typing import Any, Callable, Iterable, Optional
+
+import numpy as np
 
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig
-from repro.streams.monitor_thread import MonitorThread, QueueMonitor
+from repro.streams.fleet import FleetMonitorService
+from repro.streams.monitor_thread import FleetMonitorThread
 from repro.streams.queue import InstrumentedQueue
 
 __all__ = ["Stage", "Pipeline", "STOP"]
@@ -70,7 +80,7 @@ class _Worker(threading.Thread):
 
 
 class Pipeline:
-    """Linear pipeline with monitoring + optional autotuning.
+    """Linear pipeline with fleet monitoring + optional autotuning.
 
     >>> pipe = Pipeline([Stage("src", source=range(1000)),
     ...                  Stage("work", fn=lambda x: x * 2)],
@@ -82,12 +92,10 @@ class Pipeline:
                  item_bytes: int = 8,
                  monitor_cfg: Optional[MonitorConfig] = None,
                  base_period_s: float = 1e-3,
-                 autotune: bool = False):
+                 autotune: bool = False, chunk_t: int = 32):
         self.stages = stages
         self.queues: list[InstrumentedQueue] = []
-        self.qmonitors: list[QueueMonitor] = []
         self.autotune = autotune
-        self._tuners: dict[int, BufferAutotuner] = {}
         self.sink: list[Any] = []
         self._sink_lock = threading.Lock()
 
@@ -96,25 +104,31 @@ class Pipeline:
                                   name=f"{stages[i].name}->"
                                        f"{stages[i+1].name if i+1 < len(stages) else 'sink'}")
             self.queues.append(q)
-            self.qmonitors.append(QueueMonitor(
-                q, monitor_cfg, base_period_s=base_period_s))
-            if autotune:
-                self._tuners[i] = BufferAutotuner(current=capacity)
 
-        self.monitor = MonitorThread(self.qmonitors,
-                                     on_converged=self._on_converged)
+        # one fleet service monitors every link's head AND tail: one
+        # collector pass and one fused dispatch per tick for the whole
+        # pipeline, convergence delivered as (indices, rates) batches
+        self.fleet = FleetMonitorService(
+            self.queues, monitor_cfg, period_s=base_period_s,
+            chunk_t=chunk_t, ends="both", on_fleet=self._on_fleet)
+        self.monitor = FleetMonitorThread(self.fleet)
+        self.tuner = BufferAutotuner(current=capacity)
+        self._capacities = np.full(len(self.queues), capacity, np.int64)
         self.parallelism = ParallelismController()
 
-    def _on_converged(self, qm: QueueMonitor):
+    def _on_fleet(self, idx: np.ndarray, rates: np.ndarray) -> None:
+        """Batched convergence callback: one vectorized control-plane
+        evaluation re-sizes every queue whose converged rates moved the
+        recommendation outside the hysteresis band."""
         if not self.autotune:
             return
-        i = self.qmonitors.index(qm)
-        lam = qm.arrival_rate()
-        mu = qm.service_rate()
-        if lam > 0 and mu > 0:
-            _, resized = self._tuners[i].maybe_resize(lam, mu)
-            if resized:
-                qm.queue.resize(self._tuners[i].current)
+        lam = self.fleet.arrival_rates()
+        mu = self.fleet.service_rates()
+        new_caps, resized = self.tuner.maybe_resize_fleet(
+            lam, mu, self._capacities, cv2=self.fleet.cv2s())
+        for i in np.nonzero(resized)[0]:
+            self.queues[i].resize(int(new_caps[i]))
+        self._capacities = new_caps
 
     def run_collect(self, timeout_s: float = 300.0) -> list:
         workers: list[_Worker] = []
@@ -139,19 +153,37 @@ class Pipeline:
             w.start()
         drainer.start()
         drainer.join(timeout_s)
-        self.monitor.stop()
+        self.monitor.stop()            # flushes the partial chunk
         return self.sink
 
     # observability ----------------------------------------------------------
     def rates(self) -> dict:
+        """Per-link readout from the fleet state.  Rates carry the
+        Welford-count readiness gate: a link that has not converged and
+        has not accumulated ``min_q_samples`` q-folds reports 0 rather
+        than a raw partial-window sample."""
+        mu = self.fleet.service_rates()
+        lam = self.fleet.arrival_rates()
+        eps = self.fleet.epochs()[:len(self.queues)]
+        blk = self.fleet.observed_blocking_fraction()
         out = {}
-        for qm in self.qmonitors:
-            out[qm.queue.name] = {
-                "service_rate": qm.service_rate(),
-                "arrival_rate": qm.arrival_rate(),
-                "epochs": qm.head.epoch,
-                "T": qm.period.period_s,
-                "blocking_frac": qm.head.observed_blocking_fraction(),
-                "capacity": qm.queue.capacity,
+        for i, q in enumerate(self.queues):
+            out[q.name] = {
+                "service_rate": float(mu[i]),
+                "arrival_rate": float(lam[i]),
+                "epochs": int(eps[i]),
+                "T": self.fleet.period_s,
+                "blocking_frac": float(blk[i]),
+                "capacity": q.capacity,
             }
         return out
+
+    def recommended_replicas(self) -> dict:
+        """Vectorized duplication decision (Gordon et al., Li et al.):
+        ceil(headroom * offered load / stage service rate) for every
+        consumer stage in one fleet evaluation."""
+        lam = self.fleet.arrival_rates()
+        mu = self.fleet.service_rates()
+        reps = self.parallelism.replicas_fleet(lam, mu)
+        return {self.stages[i + 1].name: int(reps[i])
+                for i in range(len(self.stages) - 1)}

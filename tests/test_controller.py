@@ -45,3 +45,84 @@ def test_distribution_classifier():
     dd = DistributionClassifier()
     dd.update_batch(np.full(100, 2.5) + rng.normal(0, 0.01, 100))
     assert dd.classify() == "D"
+
+
+# ---------------------------------------------------------------------------
+# Array-in/array-out fleet forms (PR 2): one fused evaluation must agree
+# with the scalar controllers elementwise.
+# ---------------------------------------------------------------------------
+
+def test_autotuner_fleet_matches_scalar():
+    rng = np.random.default_rng(11)
+    lam = rng.uniform(1e3, 2e6, 50)
+    mu = rng.uniform(1e3, 2e6, 50)      # includes rho > 1 elements
+    cv2 = rng.choice([0.0, 0.3, 1.0, 2.0], 50)
+    bt = BufferAutotuner(target_frac=0.99, current=4)
+    fleet = bt.recommend_fleet(lam, mu, cv2=cv2)
+    scalar = [bt.recommend(la, m, c) for la, m, c in zip(lam, mu, cv2)]
+    np.testing.assert_array_equal(fleet, scalar)
+    # unobservable rates keep the per-queue current capacity
+    cur = np.array([7, 9], np.int64)
+    out = bt.recommend_fleet([0.0, -1.0], [1e5, 1e5], current=cur)
+    np.testing.assert_array_equal(out, cur)
+
+
+def test_autotuner_maybe_resize_fleet_hysteresis():
+    bt = BufferAutotuner(resize_factor=1.5)
+    cur = np.array([64, 64], np.int64)
+    lam = np.array([1e5, 1e5])
+    mu = np.array([1e6, 1e6])
+    caps, resized = bt.maybe_resize_fleet(lam, mu, cur)
+    assert resized.all() and (caps < 64).all()     # big move: resize
+    caps2, resized2 = bt.maybe_resize_fleet(lam * 1.05, mu, caps)
+    assert not resized2.any()                      # within hysteresis
+    np.testing.assert_array_equal(caps2, caps)
+
+
+def test_parallelism_fleet_matches_scalar():
+    rng = np.random.default_rng(5)
+    up = rng.uniform(0, 1e7, 64)
+    mu = np.where(rng.random(64) < 0.1, 0.0, rng.uniform(1e4, 1e6, 64))
+    pc = ParallelismController(headroom=1.2)
+    fleet = pc.replicas_fleet(up, mu)
+    scalar = [pc.replicas(u, m) for u, m in zip(up, mu)]
+    np.testing.assert_array_equal(fleet, scalar)
+
+
+def test_straggler_fleet_report_and_mask():
+    sd = StragglerDetector(threshold=0.8, min_hosts=4)
+    rates = np.array([100.0] * 7 + [50.0])
+    sd.report_fleet([f"h{i}" for i in range(8)], rates)
+    assert sd.stragglers() == ["h7"]
+    mask = sd.straggler_mask(rates)
+    np.testing.assert_array_equal(mask, [False] * 7 + [True])
+    # unobserved (rate 0) entries are neither stragglers nor counted
+    assert not sd.straggler_mask(np.array([0.0, 100.0, 0.0, 90.0])).any()
+
+
+def test_distribution_classifier_fleet():
+    rng = np.random.default_rng(0)
+    dc = DistributionClassifier(n_streams=3)
+    tile = np.stack([rng.exponential(1.0, 800),
+                     np.full(800, 2.5) + rng.normal(0, 0.01, 800),
+                     rng.lognormal(0.0, 1.5, 800)])
+    dc.update_batch(tile)
+    np.testing.assert_array_equal(dc.classify(), ["M", "D", "G"])
+    # masked rows fold nothing
+    dm = DistributionClassifier(n_streams=2)
+    dm.update_batch(np.ones((2, 16)),
+                    where=np.stack([np.ones(16, bool), np.zeros(16, bool)]))
+    np.testing.assert_array_equal(dm.counts, [16.0, 0.0])
+
+
+def test_distribution_classifier_batch_matches_per_sample():
+    """The vectorized Pebay fold reproduces the per-sample update."""
+    rng = np.random.default_rng(2)
+    xs = rng.gamma(2.0, 1.5, 300)
+    a = DistributionClassifier()
+    for x in xs:
+        a.update(float(x))
+    b = DistributionClassifier()
+    b.update_batch(xs)
+    assert a.classify() == b.classify()
+    assert b.cv2 == pytest.approx(a.cv2, rel=1e-3)

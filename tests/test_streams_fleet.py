@@ -1,0 +1,282 @@
+"""Fleet monitoring hot path + vectorized control plane (PR 2).
+
+Covers the batched collector under blocked-sample bursts and mid-stream
+stage failure (``ft.failures`` injection), parity of the
+pipeline-integrated estimates against the sequential scan oracle, the
+recompile-count contract for ragged fleets, and the readiness-gated
+pre-convergence readouts.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.monitor import (MonitorConfig, fleet_dispatch_trace_count,
+                                fleet_rate_readout, run_monitor_fleet)
+from repro.ft import FleetRateTracker
+from repro.streams import (FleetMonitorService, FleetMonitorThread,
+                           InstrumentedQueue, Pipeline, Stage)
+
+
+def _drive_service(tc, blocked, cfg, chunk_t=32, **kw):
+    """Replay a synthetic (Q, T) sample stream through the batched
+    collector exactly as a pipeline tick would produce it."""
+    Q, T = tc.shape
+    queues = [InstrumentedQueue(8) for _ in range(Q)]
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=chunk_t,
+                              scale_to_period=False, **kw)
+    for t in range(T):
+        for qi, q in enumerate(queues):
+            q.head.tc = float(tc[qi, t])
+            q.head.blocked = bool(blocked[qi, t])
+        svc.sample()
+    svc.flush()
+    return svc
+
+
+def test_service_blocked_bursts_match_scan_oracle():
+    """Pipeline-integrated estimates == sequential scan oracle (rtol
+    1e-4) on streams with a long full-block burst and background
+    blocking; epochs identical, healthy queues unaffected."""
+    cfg = MonitorConfig()
+    rng = np.random.default_rng(7)
+    Q, T = 6, 640
+    tc = rng.poisson(rng.uniform(100, 400, (Q, 1)), (Q, T)).astype(float)
+    blocked = rng.random((Q, T)) < 0.05
+    blocked[2, 100:260] = True          # mid-stream blocked burst
+    blocked[4, 500:] = True             # stalls near the end
+
+    svc = _drive_service(tc, blocked, cfg, chunk_t=32)
+    st, _ = run_monitor_fleet(cfg, tc, blocked, impl="scan",
+                              mode="state", chunk_t=128, block_q=8)
+
+    np.testing.assert_array_equal(svc.epochs(), np.asarray(st.epoch))
+    assert svc.epochs().min() >= 1      # bursts did not stall convergence
+    conv = svc.epochs() > 0
+    got = svc.service_rates() * svc.period_s        # items/period
+    want = np.asarray(st.last_qbar)
+    np.testing.assert_allclose(got[conv], want[conv], rtol=1e-4)
+    # burst periods were discarded, not folded
+    frac = svc.observed_blocking_fraction()
+    assert frac[2] > 0.2 and frac[0] < 0.15
+
+
+def test_service_stage_failure_ft_injection():
+    """A consumer stage dying mid-stream turns its queue head into a
+    permanently blocked stream: the fleet keeps estimating the healthy
+    queues, the dead queue's epochs freeze, and the ft straggler path
+    flags the phase-changed host."""
+    cfg = MonitorConfig(window=16, min_q_samples=16)
+    rng = np.random.default_rng(3)
+    Q, T = 5, 400
+    tc = rng.poisson(200, (Q, T)).astype(float)
+    blocked = np.zeros((Q, T), bool)
+    fail_at = 120
+    tc[3, fail_at:] = 0.0               # stage 3's consumer dies
+    blocked[3, fail_at:] = True
+
+    svc = _drive_service(tc, blocked, cfg, chunk_t=32)
+    st, _ = run_monitor_fleet(cfg, tc, blocked, impl="scan",
+                              mode="state", block_q=8)
+    np.testing.assert_array_equal(svc.epochs(), np.asarray(st.epoch))
+    healthy = [q for q in range(Q) if q != 3]
+    assert svc.epochs()[healthy].min() >= 1
+    # the dead queue blocks from fail_at on
+    assert svc.observed_blocking_fraction()[3] == pytest.approx(
+        (T - fail_at) / T)
+
+    # ft.failures injection: per-host step streams through the fleet
+    # tracker — host 3's rate phase-changes down and is flagged
+    hosts = [f"h{i}" for i in range(Q)]
+    tracker = FleetRateTracker(hosts, cfg, period_s=1.0, chunk_t=16,
+                               impl="rounds")
+    steps = np.full((Q, 600), 100.0) + rng.normal(0, 1.0, (Q, 600))
+    steps[3, 200:] *= 0.3               # straggler phase change
+    for t0 in range(0, 600, 100):
+        tracker.record_tile(steps[:, t0:t0 + 100])
+    assert tracker.stragglers() == ["h3"]
+    rates = tracker.rates()
+    assert rates[3] < 0.5 * np.median(rates[[0, 1, 2, 4]])
+
+
+def test_service_rates_pre_convergence_gated():
+    """Regression (satellite 1): before convergence the readout must be
+    gated on the Welford count — a handful of q-folds is a raw sample,
+    not an estimate, and reports 0."""
+    cfg = MonitorConfig()               # min_q_samples = 32
+    rng = np.random.default_rng(0)
+    Q = 2
+    queues = [InstrumentedQueue(8) for _ in range(Q)]
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=8,
+                              scale_to_period=False)
+
+    def feed(n):
+        for _ in range(n):
+            for q in queues:
+                q.head.tc = float(rng.uniform(50, 150))
+            svc.sample()
+        svc.flush()
+
+    # window filled but only a few folds: count < min_q_samples -> 0
+    feed(cfg.window + 8)
+    assert (svc.epochs() == 0).all()
+    np.testing.assert_array_equal(svc.service_rates(), 0.0)
+
+    # past the count gate the running q-bar becomes visible even before
+    # the first convergence (high-variance stream stays unconverged)
+    feed(64)
+    state = svc.state_snapshot()
+    count = np.asarray(state.count)
+    assert (count >= cfg.min_q_samples).all()
+    rates = svc.service_rates()
+    assert (rates > 0).all()
+    pre = svc.epochs() == 0
+    expect = np.asarray(state.mean) / svc.period_s
+    np.testing.assert_allclose(rates[pre], expect[pre], rtol=1e-6)
+
+
+def test_engine_service_rate_pre_convergence_gate():
+    """Regression (satellite 1): a fresh engine reports 0 requests/s and
+    keeps its configured capacity instead of echoing raw samples."""
+    from repro.serve import Engine, ServeConfig
+
+    class _Cfg:
+        vocab_size = 16
+
+    class _FakeModel:
+        cfg = _Cfg()
+
+        def prefill(self, params, batch):
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tok, pos):
+            raise NotImplementedError
+
+    eng = Engine(_FakeModel(), None,
+                 ServeConfig(batch_size=2, max_seq=32, queue_capacity=8))
+    assert eng.service_rate() == 0.0
+    assert eng.recommended_queue_capacity() == 8
+
+
+def test_pipeline_rates_pre_convergence_gated():
+    pipe = Pipeline([Stage("src", source=range(10)),
+                     Stage("id", fn=lambda x: x)], capacity=8)
+    rates = pipe.rates()
+    assert len(rates) == 2
+    for entry in rates.values():
+        assert entry["service_rate"] == 0.0
+        assert entry["arrival_rate"] == 0.0
+        assert entry["epochs"] == 0
+
+
+def test_ragged_fleet_does_not_retrace():
+    """Satellite 2: the jitted fleet step is cached per (block_q,
+    chunk_t, config); varying Q across calls must not retrace."""
+    cfg = MonitorConfig(window=8, min_q_samples=8)   # fresh cache key
+    rng = np.random.default_rng(0)
+
+    def run(q):
+        tc = rng.poisson(50, (q, 64)).astype(float)
+        blk = rng.random((q, 64)) < 0.1
+        run_monitor_fleet(cfg, tc, blk, chunk_t=32, impl="rounds",
+                          mode="state", block_q=16)
+
+    base = fleet_dispatch_trace_count()
+    run(3)
+    warm = fleet_dispatch_trace_count()
+    assert warm > base                   # first call traced
+    for q in (5, 9, 16, 2, 11):
+        run(q)
+    assert fleet_dispatch_trace_count() == warm   # ragged Q: no retrace
+
+
+def test_ragged_services_share_one_dispatch():
+    """Different-size FleetMonitorServices with the same static knobs
+    ride the same compiled dispatch."""
+    cfg = MonitorConfig(window=8, min_q_samples=8)
+
+    def drive(q):
+        queues = [InstrumentedQueue(4) for _ in range(q)]
+        svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=8,
+                                  scale_to_period=False, block_q=16)
+        for t in range(16):
+            for qu in queues:
+                qu.head.tc = 10.0
+            svc.sample()
+        svc.flush()
+
+    drive(3)
+    warm = fleet_dispatch_trace_count()
+    for q in (5, 7, 2):
+        drive(q)
+    assert fleet_dispatch_trace_count() == warm
+
+
+def test_state_snapshot_survives_donated_dispatch():
+    """Regression: readouts must materialize the state under the lock —
+    the live state's buffers are donated into the next dispatch (no-pad
+    shapes donate the service's arrays directly), so a held reference
+    would raise "Array has been deleted"."""
+    cfg = MonitorConfig(window=8, min_q_samples=8)
+    queues = [InstrumentedQueue(4)]
+    # 2 streams with block_q=2: rpad == 0, donation hits the live state
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=8,
+                              scale_to_period=False, ends="both",
+                              block_q=2)
+
+    def feed(n):
+        for _ in range(n):
+            queues[0].head.tc = 10.0
+            queues[0].tail.tc = 10.0
+            svc.sample()
+
+    feed(8)                             # first dispatch
+    snap = svc.state_snapshot()
+    feed(16)                            # two more dispatches donate
+    svc.flush()
+    # the snapshot must still be readable after its source was donated
+    assert np.isfinite(snap.mean).all()
+    assert np.isfinite(svc.service_rates()).all()
+    assert np.isfinite(svc.observed_blocking_fraction()).all()
+
+
+def test_fleet_thread_drives_pipeline_service():
+    """End-to-end: the timer thread + batched collector + fused dispatch
+    over live queues converges to the synthetic service rates."""
+    cfg = MonitorConfig(window=16, min_q_samples=16)
+    queues = [InstrumentedQueue(capacity=8) for _ in range(3)]
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=16,
+                              ends="both")
+    thread = FleetMonitorThread(svc, adapt_period=False)
+    thread.start()
+    import time
+    deadline = time.monotonic() + 20.0
+    while svc.epochs()[:3].min() < 1 and time.monotonic() < deadline:
+        for queue, rate in zip(queues, (40, 80, 120)):
+            for _ in range(rate):
+                queue.push(object())
+                queue.pop()
+        time.sleep(1e-3)
+    thread.stop()
+    assert svc.epochs()[:3].min() >= 1
+    mu = svc.service_rates()
+    lam = svc.arrival_rates()
+    assert mu.shape == lam.shape == (3,)
+    assert (mu > 0).all()
+    # relative ordering of the three synthetic rates must be preserved
+    assert mu[0] < mu[1] < mu[2]
+
+
+def test_pipeline_autotune_vectorized():
+    """The vectorized control plane runs end-to-end: a live pipeline
+    with autotuning resizes through maybe_resize_fleet without error and
+    produces correct results."""
+    pipe = Pipeline([Stage("src", source=range(4000)),
+                     Stage("x3", fn=lambda x: x * 3)], capacity=64,
+                    base_period_s=1e-3, autotune=True,
+                    monitor_cfg=MonitorConfig(window=16, min_q_samples=16))
+    out = pipe.run_collect(timeout_s=60)
+    assert sorted(out) == [3 * i for i in range(4000)]
+    reps = pipe.recommended_replicas()
+    assert set(reps) == {"x3"}
+    assert reps["x3"] >= 1
+    assert (pipe._capacities >= pipe.tuner.min_capacity).all()

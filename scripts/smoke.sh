@@ -1,12 +1,17 @@
 #!/usr/bin/env bash
-# One-command smoke: tier-1 tests + the pipeline-integration benchmark.
+# One-command smoke: tier-1 tests + the pipeline-integration benchmark
+# + the collector benchmark in quick mode.
 #
 #   scripts/smoke.sh
 #
 # Runs the full test suite, then the pipeline monitoring suite
-# (fleet-vs-per-queue overhead ratio + scan-oracle parity), which
-# regenerates BENCH_pipeline.json at the repo root.  The run-level JSON
-# report lands next to it as BENCH_pipeline.run.json.
+# (fleet-vs-per-queue overhead ratio + scan-oracle parity), then the
+# arena-collector suite in quick mode (REPRO_BENCH_QUICK=1 skips the
+# 2*10^5-end ladder rung).  BENCH_pipeline.json / BENCH_collector.json
+# are regenerated at the repo root; run-level JSON reports land next to
+# them as *.run.json.  Fails on any estimate-parity regression vs the
+# sequential scan oracle and on collector/pipeline overhead ratios
+# falling below acceptance.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,5 +29,21 @@ parity = rep["parity"]["ok"]
 print(f"smoke: fleet/per-queue overhead ratio at Q=256 = {ratio:.1f}x "
       f"(target >= 3x), parity ok = {parity}")
 assert ratio >= 3.0 and parity, "pipeline bench below acceptance"
+EOF
+
+REPRO_BENCH_QUICK=1 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/run.py --suite collector \
+    --json BENCH_collector.run.json
+
+python - <<'EOF'
+import json
+rep = json.load(open("BENCH_collector.json"))
+ratio = rep["collector"]["sizes"]["8192"]["loop_over_arena_ratio"]
+parity = rep["parity"]
+print(f"smoke: arena/PR-2-loop collector ratio at S=8192 = {ratio:.1f}x "
+      f"(target >= 10x), parity max_rel_err = {parity['max_rel_err']:.2e} "
+      f"(target <= 1e-4), ok = {parity['ok']}")
+assert ratio >= 10.0, "collector bench below acceptance"
+assert parity["ok"], "arena-path estimate parity regression vs scan oracle"
 EOF
 echo "smoke: OK"

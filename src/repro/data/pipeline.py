@@ -16,8 +16,8 @@ from typing import Iterator, Optional
 import numpy as np
 
 from repro.core.monitor import MonitorConfig
-from repro.streams import (FleetMonitorService, FleetMonitorThread,
-                           InstrumentedQueue, STOP)
+from repro.streams import (CounterArena, FleetMonitorService,
+                           FleetMonitorThread, InstrumentedQueue, STOP)
 
 __all__ = ["SyntheticLMSource", "TextFileSource", "DataPipeline",
            "pack_tokens"]
@@ -76,16 +76,17 @@ class DataPipeline:
     def __init__(self, source, seq_len: int, batch_size: int,
                  queue_capacity: int = 16, n_readers: int = 1,
                  monitor_cfg: Optional[MonitorConfig] = None,
-                 max_batches: Optional[int] = None):
+                 max_batches: Optional[int] = None,
+                 arena: Optional[CounterArena] = None):
         self.seq_len = seq_len
         self.batch_size = batch_size
         self.max_batches = max_batches
         self.q_seq = InstrumentedQueue(queue_capacity * batch_size,
                                        item_bytes=4 * (seq_len + 1),
-                                       name="pack->batch")
+                                       name="pack->batch", arena=arena)
         self.q_batch = InstrumentedQueue(
             queue_capacity, item_bytes=4 * (seq_len + 1) * batch_size,
-            name="batch->device")
+            name="batch->device", arena=arena)
         cfg = monitor_cfg or MonitorConfig(window=16, min_q_samples=16)
         # both links ride the one fleet dispatch per tick
         self.fleet = FleetMonitorService([self.q_seq, self.q_batch], cfg,

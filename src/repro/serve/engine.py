@@ -25,8 +25,8 @@ import numpy as np
 from repro.core.monitor import MonitorConfig
 from repro.core.queueing import optimal_buffer_size
 from repro.models.api import Model
-from repro.streams import (FleetMonitorService, FleetMonitorThread,
-                           InstrumentedQueue)
+from repro.streams import (CounterArena, FleetMonitorService,
+                           FleetMonitorThread, InstrumentedQueue)
 
 __all__ = ["Request", "ServeConfig", "Engine"]
 
@@ -52,12 +52,15 @@ class Engine:
     """Continuous-batching engine (static batch per generation round)."""
 
     def __init__(self, model: Model, params, scfg: ServeConfig,
-                 monitor_cfg: Optional[MonitorConfig] = None):
+                 monitor_cfg: Optional[MonitorConfig] = None,
+                 arena: Optional[CounterArena] = None):
         self.model = model
         self.params = params
         self.scfg = scfg
+        # request-queue counters live in the shared arena, so an engine
+        # process serving many models rides one vectorized collector
         self.queue = InstrumentedQueue(scfg.queue_capacity, item_bytes=1,
-                                       name="requests")
+                                       name="requests", arena=arena)
         self.fleet = FleetMonitorService(
             [self.queue],
             monitor_cfg or MonitorConfig(window=16, min_q_samples=16),

@@ -1,9 +1,10 @@
-from repro.streams.queue import InstrumentedQueue, EndStats
+from repro.streams.arena import CounterArena, EndStats, default_arena
+from repro.streams.queue import InstrumentedQueue
 from repro.streams.monitor_thread import (QueueMonitor, MonitorThread,
                                           FleetMonitorThread)
 from repro.streams.fleet import FleetMonitorService
 from repro.streams.pipeline import Stage, Pipeline, STOP
 
-__all__ = ["InstrumentedQueue", "EndStats", "QueueMonitor", "MonitorThread",
-           "FleetMonitorThread", "FleetMonitorService", "Stage", "Pipeline",
-           "STOP"]
+__all__ = ["CounterArena", "EndStats", "default_arena", "InstrumentedQueue",
+           "QueueMonitor", "MonitorThread", "FleetMonitorThread",
+           "FleetMonitorService", "Stage", "Pipeline", "STOP"]

@@ -1,0 +1,220 @@
+"""Shared counter arena: contiguous (S,) instrumentation arrays.
+
+The paper instruments each queue end with a non-blocking transaction
+counter ``tc`` and a ``blocked`` flag (§III).  At fleet scale the
+monitor cannot afford to touch S python objects per sampling tick, so
+every monitored end is a *slot view* into one process-wide
+``CounterArena``: three contiguous numpy arrays (``tc``, ``blocked``,
+``bytes_count``) indexed by slot.  Producers and consumers increment
+single cells (single-writer per cell, as in the paper); the fleet
+collector samples every monitored end in a handful of vectorized ops —
+one gather, one fused scale, one zero-fill — with no per-end python
+iteration (the 10^5-queue step).
+
+The paper's non-locking copy-and-zero contract carries over unchanged
+to arena cells: a monitor clear racing a cell increment can drop either
+side (a numpy ``arr[i] += 1`` is a read-modify-write across several
+bytecodes), which Algorithm 1 is built to tolerate — blocked periods
+are discarded and q-bar folds smooth single-period jitter.  The arena
+lock guards only *structural* transitions (slot alloc/retire, geometric
+growth) plus the collector's copy-and-zero window, so an arena grow can
+never lose a whole sampling tick; it is never taken on the push/pop hot
+path.
+
+Slots are recycled: an ``EndStats`` returns its slot when explicitly
+``release()``-d (``InstrumentedQueue.close()``) or when garbage
+collected, so churning fleets reuse low slots instead of growing the
+arena without bound.  A released end must no longer be written — its
+slot may already back a new queue.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import weakref
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["CounterArena", "EndStats", "default_arena"]
+
+
+class EndStats:
+    """One queue end's instrumentation, as a slot view into an arena.
+
+    Keeps the object API (``end.tc += 1``, ``end.blocked = True``)
+    while the storage is an arena cell; the raw array references
+    (``_tc``/``_blk``/``_byt``) are rebound by the arena on growth and
+    exist so hot paths can cache ``end._tc[end._slot]`` access without
+    going through the properties.
+    """
+
+    __slots__ = ("_arena", "_slot", "_tc", "_blk", "_byt", "_finalizer",
+                 "_pins", "__weakref__")
+
+    def __init__(self, arena: Optional["CounterArena"] = None):
+        # monitors that currently gather this slot; weak so a dead
+        # service un-pins automatically
+        self._pins: weakref.WeakSet = weakref.WeakSet()
+        (arena if arena is not None else default_arena())._attach(self)
+
+    def _bind(self, arena: "CounterArena", slot: int) -> None:
+        """(Re)point the view at the arena's current arrays — called at
+        attach time and again whenever the arena grows."""
+        self._arena = arena
+        self._slot = slot
+        self._tc = arena.tc
+        self._blk = arena.blocked
+        self._byt = arena.bytes_count
+
+    @property
+    def arena(self) -> "CounterArena":
+        return self._arena
+
+    @property
+    def slot(self) -> int:
+        return self._slot
+
+    # -- the paper's counter API, backed by arena cells -------------------
+    @property
+    def tc(self):
+        return self._tc[self._slot]
+
+    @tc.setter
+    def tc(self, v) -> None:
+        self._tc[self._slot] = v
+
+    @property
+    def blocked(self):
+        return self._blk[self._slot]
+
+    @blocked.setter
+    def blocked(self, v) -> None:
+        self._blk[self._slot] = v
+
+    @property
+    def bytes_count(self):
+        return self._byt[self._slot]
+
+    @bytes_count.setter
+    def bytes_count(self, v) -> None:
+        self._byt[self._slot] = v
+
+    def sample_and_reset(self) -> tuple[float, bool, int]:
+        """Monitor-side copy-and-zero of one end (non-locking) — the
+        scalar form; fleet collection goes through the arena arrays."""
+        s = self._slot
+        tc, blk, nb = self._tc[s], self._blk[s], self._byt[s]
+        self._tc[s] = 0.0
+        self._blk[s] = False
+        self._byt[s] = 0
+        return float(tc), bool(blk), int(nb)
+
+    def release(self) -> None:
+        """Return the slot to the arena (idempotent).  The end must not
+        be written afterwards: its slot may back a new end.  Raises
+        while a live monitor still gathers the slot — recycling it then
+        would silently corrupt the next owner's counters."""
+        if self._pins:
+            raise ValueError(
+                "cannot release a queue end while a live "
+                "FleetMonitorService monitors it")
+        self._finalizer()
+
+
+class CounterArena:
+    """Contiguous (capacity,) counter arrays with slot alloc/retire and
+    geometric growth.  ``tc``/``blocked``/``bytes_count`` are the live
+    arrays — replaced wholesale on growth, with every attached
+    ``EndStats`` view rebound under the lock."""
+
+    def __init__(self, capacity: int = 256):
+        capacity = max(int(capacity), 1)
+        self.lock = threading.Lock()
+        self.tc = np.zeros(capacity)
+        self.blocked = np.zeros(capacity, bool)
+        self.bytes_count = np.zeros(capacity, np.int64)
+        # low slots first, so co-allocated fleets land contiguously
+        self._free = list(range(capacity - 1, -1, -1))
+        self._ends: dict[int, weakref.ref] = {}
+        # slots released from GC finalizers land here lock-free and are
+        # recycled by the next structural op (see _release_slot)
+        self._pending_free: collections.deque = collections.deque()
+
+    @property
+    def capacity(self) -> int:
+        return self.tc.shape[0]
+
+    def __len__(self) -> int:
+        """Live (attached) slots."""
+        with self.lock:
+            self._drain_pending_locked()
+            return len(self._ends)
+
+    def alloc(self) -> EndStats:
+        return EndStats(self)
+
+    def _attach(self, end: EndStats) -> None:
+        with self.lock:
+            self._drain_pending_locked()
+            if not self._free:
+                self._grow()
+            slot = self._free.pop()
+            end._bind(self, slot)
+            self._ends[slot] = weakref.ref(end)
+            end._finalizer = weakref.finalize(end, self._release_slot, slot)
+
+    def _release_slot(self, slot: int) -> None:
+        """May run from a GC-triggered weakref finalizer on a thread
+        that already holds the (non-reentrant) arena lock — e.g. the
+        collector's gather allocates and trips a cyclic-GC pass — so it
+        must not acquire the lock.  Recycling is deferred to the next
+        structural op, which drains under the lock."""
+        self._pending_free.append(slot)
+
+    def _drain_pending_locked(self) -> None:
+        pending = self._pending_free
+        while True:
+            try:
+                slot = pending.popleft()
+            except IndexError:
+                return
+            self.tc[slot] = 0.0
+            self.blocked[slot] = False
+            self.bytes_count[slot] = 0
+            self._ends.pop(slot, None)
+            self._free.append(slot)
+
+    def _grow(self) -> None:
+        """Double the arrays (lock held).  Increments racing the copy on
+        the old arrays can be dropped — the same benign single-period
+        race as the monitor's copy-and-zero, and growth is rare."""
+        old_cap = self.capacity
+        new_cap = old_cap * 2
+        for name in ("tc", "blocked", "bytes_count"):
+            old = getattr(self, name)
+            new = np.zeros(new_cap, old.dtype)
+            new[:old_cap] = old
+            setattr(self, name, new)
+        self._free.extend(range(new_cap - 1, old_cap - 1, -1))
+        for slot, ref in self._ends.items():
+            live = ref()
+            if live is not None:
+                live._bind(self, slot)
+
+
+_DEFAULT: Optional[CounterArena] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_arena() -> CounterArena:
+    """The process-wide arena every ``InstrumentedQueue`` backs into
+    unless given its own — one shared counter store means any mix of
+    pipelines/engines can ride a single vectorized collector pass."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        with _DEFAULT_LOCK:
+            if _DEFAULT is None:
+                _DEFAULT = CounterArena()
+    return _DEFAULT

@@ -5,11 +5,24 @@ This is the single monitoring hot path for the whole stack
 paper instruments each queue with its own host-side Algorithm-1 update
 per period; at fleet scale that per-queue python math blows the 1-2%
 overhead budget.  Here the timer tick only runs the *batched collector*:
-copy-and-zero every monitored queue end's ``tc``/``blocked`` counters
-into a pinned (S, chunk_t) host staging buffer.  Every ``chunk_t``
-periods the full tile goes through **one** jitted, donated-argnums
-``run_monitor_fleet`` dispatch that advances Algorithm 1 for every
-stream at once:
+every monitored end is a slot view into one shared ``CounterArena``
+(contiguous (S,) ``tc``/``blocked``/``bytes_count`` arrays), and the
+tick copies-and-zeros the whole fleet in a handful of vectorized ops —
+one gather with a fused period-scale into the active staging row, one
+boolean copy, one zero-fill — with **no per-end python iteration** (the
+10^5-queue step).  Two layout choices keep those ops at memcpy speed:
+
+* staging rows are *slot-sorted*: internal row order follows arena slot
+  order, so a co-allocated fleet's gather and zero-fill collapse to
+  plain slice views (readouts translate back to the public
+  heads-then-tails stream order through a permutation, off the tick);
+* the staging tile is (chunk_t, S) row-major, so each tick writes one
+  contiguous row; the (S, chunk_t) estimator layout is produced by one
+  transpose-copy per dispatch, amortized over ``chunk_t`` ticks.
+
+Every ``chunk_t`` periods the full tile goes through **one** jitted,
+donated-argnums ``run_monitor_fleet`` dispatch that advances Algorithm 1
+for every stream at once:
 
     collector -> double buffer -> fused fleet dispatch -> vectorized
     controllers (BufferAutotuner / ParallelismController /
@@ -49,6 +62,7 @@ from repro.core.controller import DistributionClassifier
 from repro.core.monitor import (FleetMonitorState, MonitorConfig,
                                 fleet_monitor_init, fleet_rate_readout,
                                 run_monitor_fleet)
+from repro.streams.arena import default_arena
 from repro.streams.queue import InstrumentedQueue
 
 __all__ = ["FleetMonitorService"]
@@ -64,11 +78,15 @@ def _pick_block_q(n_streams: int) -> int:
 class FleetMonitorService:
     """Batched Algorithm-1 monitoring for a fleet of instrumented queues.
 
-    ``sample()`` is the per-tick collector — cheap, safe to call from a
-    timer thread, and O(S) python with no estimator math.  The fused
-    estimator runs as one donated dispatch per ``chunk_t`` ticks (or in
-    ``flush()``), with results harvested one dispatch behind so the
-    collector never waits on the device.
+    ``sample()`` is the per-tick collector — a constant number of
+    vectorized arena ops regardless of fleet size, safe to call from a
+    timer thread, with no per-end python loop and no estimator math.
+    The fused estimator runs as one donated dispatch per ``chunk_t``
+    ticks (or in ``flush()``), with results harvested one dispatch
+    behind so the collector never waits on the device.
+
+    All monitored queues must back into one ``CounterArena`` (the
+    default process-wide arena makes this automatic).
     """
 
     def __init__(self, queues: Sequence[InstrumentedQueue],
@@ -101,11 +119,42 @@ class FleetMonitorService:
         self.n_streams = s
         self.block_q = int(block_q) if block_q else _pick_block_q(s)
 
+        # every monitored end must back into ONE arena: the collector is
+        # a single gather/zero over that arena's (S,) counter arrays
+        arenas = {id(end.arena): end.arena for end in self._end_stats}
+        if len(arenas) > 1:
+            raise ValueError(
+                "all monitored queues must share one CounterArena "
+                f"(got {len(arenas)})")
+        self._arena = (next(iter(arenas.values())) if arenas
+                       else default_arena())
+        # pin the monitored ends: releasing a slot we keep gathering
+        # would hand it to a new owner whose counters we then zero
+        for end in self._end_stats:
+            end._pins.add(self)
+        slots = np.array([end.slot for end in self._end_stats], np.intp)
+        # internal row order = slot-sorted: row r stages the stream
+        # _stream_of_row[r], stream i lives at row _row_of_stream[i].
+        # A co-allocated fleet's sorted slots form one contiguous run,
+        # collapsing the per-tick gather/zero to plain slice views.
+        perm = np.argsort(slots, kind="stable")
+        self._stream_of_row = perm
+        self._row_of_stream = np.argsort(perm, kind="stable")
+        sorted_slots = slots[perm]
+        if s and np.array_equal(sorted_slots,
+                                np.arange(sorted_slots[0],
+                                          sorted_slots[0] + s)):
+            self._slots = slice(int(sorted_slots[0]),
+                                int(sorted_slots[0]) + s)
+        else:
+            self._slots = sorted_slots
+
         self._state: FleetMonitorState = fleet_monitor_init(self.cfg, s)
-        # pinned double-buffered (S, chunk_t) staging: the active pair
-        # collects while the shadow pair backs the in-flight dispatch
-        self._tc = np.zeros((s, self.chunk_t))
-        self._blocked = np.ones((s, self.chunk_t), dtype=bool)
+        # pinned double-buffered (chunk_t, S) staging, row-major so each
+        # tick writes one contiguous row; the active pair collects while
+        # the shadow pair backs the in-flight dispatch
+        self._tc = np.zeros((self.chunk_t, s))
+        self._blocked = np.ones((self.chunk_t, s), dtype=bool)
         self._tc_shadow = np.zeros_like(self._tc)
         self._blk_shadow = np.ones_like(self._blocked)
         self._col = 0
@@ -136,11 +185,12 @@ class FleetMonitorService:
         # discard whatever the queues accumulated during the compile:
         # the first real tick must not fold a multi-second interval as
         # if it were one nominal period
+        arena, idx = self._arena, self._slots
         with self._lock:
-            for end in self._end_stats:
-                end.tc = 0
-                end.blocked = False
-                end.bytes_count = 0
+            with arena.lock:
+                arena.tc[idx] = 0.0
+                arena.blocked[idx] = False
+                arena.bytes_count[idx] = 0
             self._last_t = time.monotonic()
 
     # -- sampling ---------------------------------------------------------
@@ -157,17 +207,25 @@ class FleetMonitorService:
         if self.scale_to_period and realized is not None and realized > 0:
             scale = self.period_s / realized
         emit = ()
+        arena, idx = self._arena, self._slots
         with self._lock:
             col = self._col
-            tc_col = self._tc[:, col]
-            blk_col = self._blocked[:, col]
-            for si, end in enumerate(self._end_stats):
-                tc_col[si] = end.tc * scale
-                blk_col[si] = end.blocked
-                end.tc = 0
-                end.blocked = False
-                end.bytes_count = 0
-            any_blocked = bool(blk_col.any())
+            tc_row = self._tc[col]
+            blk_row = self._blocked[col]
+            # vectorized copy-and-zero of the whole fleet: one gather
+            # with a fused scale into the contiguous staging row, one
+            # boolean copy, one zero-fill — no per-end python iteration
+            # (all three are slice views for co-allocated fleets).  The
+            # arena lock bounds the copy-and-zero window against
+            # structural growth; cell increments stay lock-free (the
+            # paper's tolerated single-period race).
+            with arena.lock:
+                np.multiply(arena.tc[idx], scale, out=tc_row)
+                np.copyto(blk_row, arena.blocked[idx])
+                arena.tc[idx] = 0.0
+                arena.blocked[idx] = False
+                arena.bytes_count[idx] = 0
+            any_blocked = bool(blk_row.any())
             self._col = col + 1
             if self._col >= self.chunk_t:
                 emit = self._dispatch_locked()
@@ -186,7 +244,7 @@ class FleetMonitorService:
 
     def _dispatch_locked(self) -> tuple:
         cols = self._col
-        tc, blocked = self._tc[:, :cols], self._blocked[:, :cols]
+        tc_rows, blk_rows = self._tc[:cols], self._blocked[:cols]
         # swap staging: the dispatch reads this tile while the collector
         # keeps writing into the other buffer
         self._tc, self._tc_shadow = self._tc_shadow, self._tc
@@ -195,10 +253,17 @@ class FleetMonitorService:
         self._blocked[:] = True
         emit = self._harvest_locked()   # previous dispatch, now complete
 
+        # the estimator consumes (S, cols): one transpose-copy per
+        # dispatch, amortized over chunk_t ticks
+        tc = np.ascontiguousarray(tc_rows.T)
+        blocked = np.ascontiguousarray(blk_rows.T)
+
         # per-queue implied service times (period / items) -> fleet cv^2,
-        # one fused masked-moment evaluation for the whole tile
+        # one fused masked-moment evaluation for the whole tile (rows
+        # re-ordered back to per-queue stream order off the tick)
         q = len(self.queues)
-        head_tc, head_blk = tc[:q], blocked[:q]
+        head_rows = self._row_of_stream[:q]
+        head_tc, head_blk = tc[head_rows], blocked[head_rows]
         valid = (head_tc > 0) & ~head_blk
         self.classifier.update_batch(
             np.where(valid, self.period_s / np.maximum(head_tc, 1e-30),
@@ -220,10 +285,11 @@ class FleetMonitorService:
         self._pending = False
         epochs = np.asarray(self._state.epoch, np.int64)
         ests = np.asarray(self._state.last_qbar)
-        newly = np.nonzero(epochs > self._epochs)[0]
+        newly = np.nonzero(epochs > self._epochs)[0]    # staging rows
         self._epochs = epochs
-        return tuple((int(si), float(ests[si]) / self.period_s)
-                     for si in newly)
+        streams = self._stream_of_row[newly]
+        return tuple((int(si), float(ests[r]) / self.period_s)
+                     for si, r in zip(streams, newly))
 
     def _fire(self, emit: tuple) -> None:
         """Run user callbacks outside the lock: a slow or re-entrant
@@ -240,16 +306,19 @@ class FleetMonitorService:
 
     # -- readouts ---------------------------------------------------------
     def state_snapshot(self) -> FleetMonitorState:
-        """Materialized numpy copy of the fleet state, taken under the
-        collector lock.  The live jax state must never escape: its
-        buffers are donated into the next dispatch, and a reference read
-        after that raises "Array has been deleted"."""
+        """Materialized numpy copy of the fleet state in public stream
+        order (heads 0..Q-1, then tails), taken under the collector
+        lock.  The live jax state must never escape: its buffers are
+        donated into the next dispatch, and a reference read after that
+        raises "Array has been deleted"."""
+        rows = self._row_of_stream
         with self._lock:
-            return FleetMonitorState(*(np.array(leaf)
+            return FleetMonitorState(*(np.array(leaf)[rows]
                                        for leaf in self._state))
 
     def epochs(self) -> np.ndarray:
-        return self._epochs.copy()
+        """(S,) convergence epochs in public stream order."""
+        return self._epochs[self._row_of_stream]
 
     def _gated_rates(self) -> np.ndarray:
         """Readiness-gated items/s for every stream (see

@@ -1,12 +1,13 @@
 """The paper's monitor thread ("the eye", Fig. 5) — in two generations.
 
 ``FleetMonitorThread`` is the production path: one timer thread runs the
-batched collector of a ``FleetMonitorService`` every period T (all
-queues' counters into one staging tile, one fused estimator dispatch per
-``chunk_t`` ticks) and adapts the *shared* sampling period with the
-paper's controller (§IV-A) from the fleet's any-blocked signal.  The
-per-tick monitor work is O(S) counter copies — the Algorithm-1 math runs
-amortized and vectorized off the tick.
+batched collector of a ``FleetMonitorService`` every period T (one
+vectorized copy-and-zero of the shared counter arena into the staging
+tile, one fused estimator dispatch per ``chunk_t`` ticks) and adapts the
+*shared* sampling period with the paper's controller (§IV-A) from the
+fleet's any-blocked signal.  The per-tick monitor work is a constant
+number of numpy ops regardless of fleet size — the Algorithm-1 math
+runs amortized and vectorized off the tick.
 
 ``QueueMonitor``/``MonitorThread`` are the original per-queue design
 (one ``HostMonitor`` update per queue end per period, per-queue adaptive
@@ -108,9 +109,9 @@ class FleetMonitorThread(threading.Thread):
     """One timer thread for the whole fleet: batched collection, one
     amortized estimator dispatch, shared adaptive sampling period.
 
-    Every tick costs one ``FleetMonitorService.sample()`` (counter
-    copies into the staging tile); the fused Algorithm-1 dispatch fires
-    once per ``chunk_t`` ticks inside ``sample``.  The paper's
+    Every tick costs one ``FleetMonitorService.sample()`` (a vectorized
+    arena copy-and-zero into the staging tile); the fused Algorithm-1
+    dispatch fires once per ``chunk_t`` ticks inside ``sample``.  The paper's
     sampling-period controller observes the realized period and the
     fleet-wide any-blocked signal, so T widens/narrows for the fleet as
     a unit — the natural posture when all queues ride one dispatch.

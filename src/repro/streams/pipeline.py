@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig
+from repro.streams.arena import CounterArena, default_arena
 from repro.streams.fleet import FleetMonitorService
 from repro.streams.monitor_thread import FleetMonitorThread
 from repro.streams.queue import InstrumentedQueue
@@ -92,17 +93,22 @@ class Pipeline:
                  item_bytes: int = 8,
                  monitor_cfg: Optional[MonitorConfig] = None,
                  base_period_s: float = 1e-3,
-                 autotune: bool = False, chunk_t: int = 32):
+                 autotune: bool = False, chunk_t: int = 32,
+                 arena: Optional[CounterArena] = None):
         self.stages = stages
         self.queues: list[InstrumentedQueue] = []
         self.autotune = autotune
         self.sink: list[Any] = []
         self._sink_lock = threading.Lock()
+        # every link's counters back into one arena, so the collector
+        # samples the whole pipeline in one vectorized gather
+        self.arena = arena if arena is not None else default_arena()
 
         for i in range(len(stages)):
             q = InstrumentedQueue(capacity, item_bytes,
                                   name=f"{stages[i].name}->"
-                                       f"{stages[i+1].name if i+1 < len(stages) else 'sink'}")
+                                       f"{stages[i+1].name if i+1 < len(stages) else 'sink'}",
+                                  arena=self.arena)
             self.queues.append(q)
 
         # one fleet service monitors every link's head AND tail: one
@@ -127,7 +133,11 @@ class Pipeline:
         new_caps, resized = self.tuner.maybe_resize_fleet(
             lam, mu, self._capacities, cv2=self.fleet.cv2s())
         for i in np.nonzero(resized)[0]:
-            self.queues[i].resize(int(new_caps[i]))
+            if not self.queues[i].resize(int(new_caps[i])):
+                # rejected (shrink below queued items): keep tracking
+                # the real capacity so the shrink is retried once the
+                # queue drains
+                new_caps[i] = self._capacities[i]
         self._capacities = new_caps
 
     def run_collect(self, timeout_s: float = 300.0) -> list:

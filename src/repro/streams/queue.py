@@ -1,12 +1,22 @@
 """Instrumented SPSC ring buffer — the paper's queue mechanism (§III).
 
 The queue keeps exactly the state the paper prescribes and nothing more:
-a non-blocking transaction counter ``tc`` and a ``blocked`` boolean at each
-end (head = consumer/departures, tail = producer/arrivals).  The monitor
-thread copies-and-zeros the counters without locking (single-writer /
-single-reader ints are GIL-atomic in CPython, mirroring the paper's
-non-locking counter contract — including the benign race where a clear
-lands mid-firing, which the heuristic is built to tolerate).
+a non-blocking transaction counter ``tc`` and a ``blocked`` boolean at
+each end (head = consumer/departures, tail = producer/arrivals).  The
+counters live as slot views into a shared ``CounterArena`` (see
+``streams.arena``), so the fleet monitor copies-and-zeros the whole
+fleet in a few vectorized array ops instead of touching S python
+objects.  The non-locking contract is unchanged: single-writer cell
+increments race the monitor's clear benignly (a clear landing
+mid-firing drops one sample either way), which the heuristic is built
+to tolerate.
+
+Hot-path notes: push/pop cache the end's raw array reference and slot
+in locals (rebound by the arena on growth, never mid-call in a way that
+loses more than the benign single-period race) and use bitmask indexing
+when the capacity is a power of two.  Buffer/index updates on both ends
+serialize against a live controller ``resize`` through the queue's
+resize lock; the counter increments themselves stay lock-free.
 """
 
 from __future__ import annotations
@@ -15,25 +25,16 @@ import threading
 import time
 from typing import Any, Optional
 
-__all__ = ["InstrumentedQueue", "EndStats"]
+from repro.streams.arena import CounterArena, EndStats, default_arena
+
+__all__ = ["InstrumentedQueue", "EndStats", "CounterArena", "default_arena"]
+
+_EMPTY = object()   # private empty-queue marker: stored None round-trips
 
 
-class EndStats:
-    """One queue end's instrumentation: tc counter + blocked flag."""
-    __slots__ = ("tc", "blocked", "bytes_count")
-
-    def __init__(self):
-        self.tc = 0
-        self.blocked = False
-        self.bytes_count = 0
-
-    def sample_and_reset(self) -> tuple[int, bool, int]:
-        """Monitor-side copy-and-zero (non-locking)."""
-        tc, blocked, nbytes = self.tc, self.blocked, self.bytes_count
-        self.tc = 0
-        self.blocked = False
-        self.bytes_count = 0
-        return tc, blocked, nbytes
+def _mask_for(capacity: int) -> int:
+    """Bitmask for power-of-two capacities, else -1 (use modulo)."""
+    return capacity - 1 if capacity & (capacity - 1) == 0 else -1
 
 
 class InstrumentedQueue:
@@ -41,31 +42,43 @@ class InstrumentedQueue:
 
     Producer API: ``try_push`` / ``push`` (blocking with backoff).
     Consumer API: ``try_pop`` / ``pop``.
-    Monitor API:  ``head``/``tail`` EndStats, ``resize``.
+    Monitor API:  ``head``/``tail`` EndStats (arena slot views),
+    ``resize``, ``close`` (retire the arena slots).
     """
 
     def __init__(self, capacity: int = 64, item_bytes: int = 0,
-                 name: str = "q"):
+                 name: str = "q", arena: Optional[CounterArena] = None):
         self.name = name
         self.item_bytes = item_bytes
         self._buf: list[Any] = [None] * capacity
         self._cap = capacity
+        self._mask = _mask_for(capacity)
         self._head = 0      # next pop index (monotonic)
         self._tail = 0      # next push index (monotonic)
-        self.head = EndStats()   # departures (reads by consumer)
-        self.tail = EndStats()   # arrivals (writes by producer)
+        self.arena = arena if arena is not None else default_arena()
+        self.head = EndStats(self.arena)   # departures (reads by consumer)
+        self.tail = EndStats(self.arena)   # arrivals (writes by producer)
         self._resize_lock = threading.Lock()
 
     # ---------------- producer ----------------------------------------------
     def try_push(self, item) -> bool:
-        if self._tail - self._head >= self._cap:
-            self.tail.blocked = True
-            return False
-        self._buf[self._tail % self._cap] = item
-        self._tail += 1
-        self.tail.tc += 1
-        if self.item_bytes:
-            self.tail.bytes_count += self.item_bytes
+        end = self.tail
+        # the resize lock serializes the index/buffer update against a
+        # live controller resize rebasing _head/_tail (try_pop ditto)
+        with self._resize_lock:
+            tail = self._tail
+            if tail - self._head >= self._cap:
+                end._blk[end._slot] = True
+                return False
+            mask = self._mask
+            i = (tail & mask) if mask >= 0 else (tail % self._cap)
+            self._buf[i] = item
+            self._tail = tail + 1
+        slot = end._slot
+        end._tc[slot] += 1.0
+        nbytes = self.item_bytes
+        if nbytes:
+            end._byt[slot] += nbytes
         return True
 
     def push(self, item, timeout: Optional[float] = None) -> bool:
@@ -79,25 +92,36 @@ class InstrumentedQueue:
         return True
 
     # ---------------- consumer ----------------------------------------------
-    def try_pop(self):
+    def try_pop(self, default=None):
+        """Pop the next item, or ``default`` when the queue is empty.
+        Pass a private sentinel as ``default`` to distinguish a stored
+        ``None`` payload from emptiness (``pop`` does exactly that)."""
+        end = self.head
         if self._head >= self._tail:
-            self.head.blocked = True
-            return None
+            end._blk[end._slot] = True
+            return default
         with self._resize_lock:
-            item = self._buf[self._head % self._cap]
-            self._buf[self._head % self._cap] = None
-            self._head += 1
-        self.head.tc += 1
-        if self.item_bytes:
-            self.head.bytes_count += self.item_bytes
+            head = self._head
+            mask = self._mask
+            i = (head & mask) if mask >= 0 else (head % self._cap)
+            item = self._buf[i]
+            self._buf[i] = None
+            self._head = head + 1
+        slot = end._slot
+        end._tc[slot] += 1.0
+        nbytes = self.item_bytes
+        if nbytes:
+            end._byt[slot] += nbytes
         return item
 
     def pop(self, timeout: Optional[float] = None):
+        """Blocking pop; returns the item (which may itself be ``None``)
+        or ``None`` on timeout."""
         deadline = None if timeout is None else time.monotonic() + timeout
         backoff = 1e-6
         while True:
-            item = self.try_pop()
-            if item is not None:
+            item = self.try_pop(_EMPTY)
+            if item is not _EMPTY:
                 return item
             if deadline is not None and time.monotonic() > deadline:
                 return None
@@ -110,21 +134,35 @@ class InstrumentedQueue:
         return self._cap
 
     def __len__(self) -> int:
-        return self._tail - self._head
+        # unsynchronized reads: a pop or resize rebase between loading
+        # _tail and _head can make the difference momentarily negative
+        return max(self._tail - self._head, 0)
 
-    def resize(self, new_capacity: int) -> None:
+    def resize(self, new_capacity: int) -> bool:
         """Controller-driven re-allocation (the paper resizes out-bound
-        queues both to tune and to create observation windows)."""
+        queues both to tune and to create observation windows).  Returns
+        False for rejected requests — capacity < 1, or a shrink below
+        the number of queued items (items are never dropped)."""
         if new_capacity < 1:
-            return
+            return False
         with self._resize_lock:
             items = [self._buf[i % self._cap]
                      for i in range(self._head, self._tail)]
             if len(items) > new_capacity:
-                return  # never drop
+                return False  # never drop
             self._buf = items + [None] * (new_capacity - len(items))
             self._cap = new_capacity
-            self._tail = self._tail - self._head
+            self._mask = _mask_for(new_capacity)
+            self._tail = len(items)
             self._head = 0
-            # re-pack indices (buffer re-based)
-            self._buf = (self._buf + [None] * 0)
+        return True
+
+    def close(self) -> None:
+        """Retire both ends' arena slots (idempotent).  The queue must
+        not be used afterwards — the slots may back new queues.  Raises
+        while a live ``FleetMonitorService`` still monitors the queue.
+        Slots are also auto-released when the queue is garbage collected
+        (the service holds the ends alive, so monitored slots never get
+        recycled under a live collector)."""
+        self.head.release()
+        self.tail.release()

@@ -1,0 +1,190 @@
+"""Shared counter arena + zero-loop vectorized collector (PR 3).
+
+Covers arena slot alloc/retire/reuse and growth-rebinding, the
+vectorized ``FleetMonitorService.sample()`` path under scrambled
+(non-contiguous, unsorted) slot layouts, ``warmup()``'s counter
+discard, double-``flush()`` being a no-op, and the one-arena-per-fleet
+contract.
+"""
+
+import gc
+
+import numpy as np
+import pytest
+
+from repro.core.monitor import MonitorConfig, run_monitor_fleet
+from repro.streams import (CounterArena, EndStats, FleetMonitorService,
+                           InstrumentedQueue)
+
+
+def _drive(svc, queues, tc, blocked=None):
+    Q, T = tc.shape
+    for t in range(T):
+        for qi, q in enumerate(queues):
+            q.head.tc = float(tc[qi, t])
+            if blocked is not None:
+                q.head.blocked = bool(blocked[qi, t])
+        svc.sample()
+    svc.flush()
+
+
+def test_arena_slot_reuse_after_queue_retirement():
+    """Satellite: a closed queue's slots go back to the arena and back
+    the next queue, instead of growing the arena forever."""
+    arena = CounterArena(capacity=8)
+    q = InstrumentedQueue(2, arena=arena)
+    slots = {q.head.slot, q.tail.slot}
+    assert len(arena) == 2
+    q.close()
+    q.close()                         # idempotent
+    assert len(arena) == 0
+    q2 = InstrumentedQueue(2, arena=arena)
+    assert {q2.head.slot, q2.tail.slot} == slots
+    assert arena.capacity == 8        # no growth
+
+
+def test_arena_slots_released_on_gc():
+    arena = CounterArena(capacity=4)
+    q = InstrumentedQueue(2, arena=arena)
+    slots = {q.head.slot, q.tail.slot}
+    del q
+    gc.collect()
+    assert len(arena) == 0
+    q2 = InstrumentedQueue(2, arena=arena)
+    assert {q2.head.slot, q2.tail.slot} == slots
+
+
+def test_arena_growth_rebinds_live_views():
+    """Growing the arena replaces the arrays; live EndStats views must
+    keep their values and keep writing to the *new* arrays."""
+    arena = CounterArena(capacity=2)
+    e = arena.alloc()
+    e.tc = 7
+    e.bytes_count = 40
+    keep = [arena.alloc() for _ in range(9)]    # forces growth
+    assert arena.capacity >= 10
+    assert e.tc == 7 and e.bytes_count == 40
+    e.tc += 1
+    assert arena.tc[e.slot] == 8                # writes land in new array
+    assert len(keep) == 9
+
+
+def test_fleet_requires_single_arena():
+    q1 = InstrumentedQueue(2, arena=CounterArena(4))
+    q2 = InstrumentedQueue(2, arena=CounterArena(4))
+    with pytest.raises(ValueError, match="one CounterArena"):
+        FleetMonitorService([q1, q2], MonitorConfig())
+
+
+def test_vectorized_sample_with_scrambled_slots_matches_oracle():
+    """The zero-loop collector must be exact under non-contiguous,
+    unsorted slot layouts (retired slots, out-of-order queue lists) —
+    the fancy-index + permutation path, not just the slice fast path."""
+    cfg = MonitorConfig()
+    rng = np.random.default_rng(5)
+    arena = CounterArena(capacity=8)
+    made, holes = [], []
+    for _ in range(5):
+        made.append(InstrumentedQueue(4, arena=arena))
+        holes.append(EndStats(arena))  # punch holes between queue slots
+    made[1].close()                    # retire one mid-range queue
+    queues = [made[4], made[0], made[3], made[2]]   # scrambled order
+    slots = [q.head.slot for q in queues]
+    assert slots != sorted(slots)                      # unsorted
+    assert sorted(slots) != list(range(min(slots),
+                                       min(slots) + 4))  # with gaps
+
+    Q, T = 4, 480
+    tc = rng.poisson(rng.uniform(100, 400, (Q, 1)), (Q, T)).astype(float)
+    blocked = rng.random((Q, T)) < 0.05
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=32,
+                              scale_to_period=False)
+    _drive(svc, queues, tc, blocked)
+
+    st, _ = run_monitor_fleet(cfg, tc, blocked, impl="scan", mode="state")
+    np.testing.assert_array_equal(svc.epochs(), np.asarray(st.epoch))
+    conv = svc.epochs() > 0
+    assert conv.any()
+    got = svc.service_rates() * svc.period_s
+    want = np.asarray(st.last_qbar)
+    np.testing.assert_allclose(got[conv], want[conv], rtol=1e-4)
+
+
+def test_warmup_discards_accumulated_counters():
+    """Satellite: whatever the queues counted while warmup() compiled
+    must be dropped — the first real tick must not fold the compile
+    interval as one nominal period."""
+    cfg = MonitorConfig(window=8, min_q_samples=8)
+    arena = CounterArena(capacity=8)
+    queues = [InstrumentedQueue(4, arena=arena) for _ in range(2)]
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=8,
+                              scale_to_period=False, ends="both")
+    for q in queues:
+        q.head.tc = 123.0
+        q.head.blocked = True
+        q.tail.tc = 7.0
+        q.tail.bytes_count = 99
+    svc.warmup()
+    for q in queues:
+        assert q.head.tc == 0 and q.tail.tc == 0
+        assert not q.head.blocked
+        assert q.tail.bytes_count == 0
+    assert svc._last_t is not None
+    # the discarded counts never reach the estimator
+    assert not svc.sample()
+    np.testing.assert_array_equal(svc._tc_shadow, 0.0)
+    np.testing.assert_array_equal(svc._tc[0], 0.0)
+
+
+def test_flush_twice_is_no_op():
+    """Satellite: a second flush() must not double-harvest — no new
+    dispatch, no epoch movement, no repeated convergence callbacks."""
+    cfg = MonitorConfig(window=8, min_q_samples=8)
+    arena = CounterArena(capacity=8)
+    queues = [InstrumentedQueue(4, arena=arena) for _ in range(2)]
+    emits = []
+    svc = FleetMonitorService(
+        queues, cfg, period_s=1e-3, chunk_t=8, scale_to_period=False,
+        on_fleet=lambda idx, rates: emits.append((idx.copy(),
+                                                  rates.copy())))
+    for _ in range(60):
+        for q in queues:
+            q.head.tc = 10.0
+        svc.sample()
+    svc.flush()
+    assert svc.epochs().min() >= 1          # converged at least once
+    dispatches = svc.dispatches
+    epochs = svc.epochs()
+    n_emits = len(emits)
+
+    svc.flush()
+    assert svc.dispatches == dispatches
+    np.testing.assert_array_equal(svc.epochs(), epochs)
+    assert len(emits) == n_emits
+
+
+def test_close_refused_while_monitored():
+    """Releasing a monitored slot would recycle it under a live
+    collector that keeps zeroing it — close() must refuse until the
+    service is gone."""
+    arena = CounterArena(capacity=8)
+    queues = [InstrumentedQueue(4, arena=arena) for _ in range(2)]
+    svc = FleetMonitorService(queues, MonitorConfig(), period_s=1e-3,
+                              chunk_t=4, ends="both")
+    with pytest.raises(ValueError, match="monitors it"):
+        queues[0].close()
+    del svc
+    gc.collect()                      # dead service un-pins (WeakSet)
+    queues[0].close()
+    assert len(arena) == 2            # only queues[1]'s ends remain
+
+
+def test_default_arena_shared_across_queues():
+    """Queues without an explicit arena share the process-wide default,
+    so any ad-hoc mix of them can ride one FleetMonitorService."""
+    q1 = InstrumentedQueue(2)
+    q2 = InstrumentedQueue(2)
+    assert q1.arena is q2.arena
+    svc = FleetMonitorService([q1, q2], MonitorConfig(), period_s=1e-3,
+                              chunk_t=4, ends="both")
+    assert svc.n_streams == 4

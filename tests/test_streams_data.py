@@ -35,9 +35,94 @@ def test_queue_resize_preserves_items():
     q = InstrumentedQueue(4)
     for i in range(4):
         q.try_push(i)
-    q.resize(16)
+    assert q.resize(16) is True
     assert q.capacity == 16
     assert [q.try_pop() for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_queue_resize_rejections_return_false():
+    """Satellite: rejected resizes (capacity < 1, shrink below the
+    queued-item count) report False and leave the queue intact."""
+    q = InstrumentedQueue(4)
+    for i in range(3):
+        q.try_push(i)
+    assert q.resize(0) is False
+    assert q.resize(2) is False           # would drop an item
+    assert q.capacity == 4
+    assert q.resize(3) is True            # exact fit is allowed
+    assert q.capacity == 3
+    assert [q.try_pop() for _ in range(3)] == [0, 1, 2]
+
+
+def test_queue_resize_to_non_pow2_wraps_correctly():
+    """Bitmask indexing must be dropped when a resize lands on a
+    non-power-of-two capacity (and picked back up on a pow2 one)."""
+    q = InstrumentedQueue(4)
+    assert q.resize(6) is True
+    for rounds in range(5):               # force index wrap-around
+        for i in range(6):
+            assert q.try_push((rounds, i))
+        assert not q.try_push("overflow")
+        assert [q.try_pop() for _ in range(6)] == \
+            [(rounds, i) for i in range(6)]
+    assert q.resize(8) is True
+    for i in range(8):
+        assert q.try_push(i)
+    assert [q.try_pop() for _ in range(8)] == list(range(8))
+
+
+def test_queue_resize_concurrent_with_push_pop():
+    """Regression: a controller resize rebases _head/_tail while a
+    producer is mid-push — both ends must serialize buffer/index
+    updates against resize, or items are lost/duplicated."""
+    q = InstrumentedQueue(8)
+    n = 20_000
+    out = []
+    stop = threading.Event()
+
+    def producer():
+        for i in range(n):
+            q.push(i)
+
+    def consumer():
+        while len(out) < n:
+            item = q.pop(timeout=5.0)
+            if item is not None:
+                out.append(item)
+
+    def resizer():
+        caps = [5, 16, 7, 64, 9, 32]
+        i = 0
+        while not stop.is_set():
+            q.resize(caps[i % len(caps)])
+            i += 1
+            time.sleep(2e-4)
+
+    tp = threading.Thread(target=producer)
+    tc_ = threading.Thread(target=consumer)
+    tr = threading.Thread(target=resizer, daemon=True)
+    tp.start(); tc_.start(); tr.start()
+    tp.join(30); tc_.join(30)
+    stop.set(); tr.join(5)
+    assert out == list(range(n))      # SPSC ordering + no loss
+
+
+def test_queue_none_payload_roundtrips():
+    """Satellite regression: a stored None is an item, not emptiness —
+    pop must return it immediately and in order instead of spinning
+    until timeout."""
+    q = InstrumentedQueue(4)
+    q.push(None)
+    q.push(5)
+    t0 = time.monotonic()
+    assert q.pop(timeout=5.0) is None     # the payload, not a timeout
+    assert time.monotonic() - t0 < 1.0    # ...returned immediately
+    assert q.pop(timeout=5.0) == 5
+    # try_pop distinguishes via a caller-supplied default
+    sentinel = object()
+    q.try_push(None)
+    assert q.try_pop(sentinel) is None    # stored None comes out
+    assert q.try_pop(sentinel) is sentinel  # now actually empty
 
 
 def test_queue_threaded_integrity():

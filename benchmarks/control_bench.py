@@ -1,0 +1,530 @@
+"""Closed-loop control benchmark: does acting on the online estimates
+actually recover throughput?
+
+The paper's stated purpose for run-time service-rate approximation is
+"continuously re-tune an application during run time in response to
+changing conditions"; PRs 1-3 built the estimator, this suite measures
+the *loop*.  Each scenario runs the same discrete-time tandem
+(producer -> finite queue -> replicated consumer, poisson per-period
+counts — the same abstraction as ``core.simulate``'s event-driven
+tandem, folded to the per-period granularity the monitor samples at)
+three ways:
+
+* **static** — the seed configuration, never re-tuned;
+* **closed** — a real ``FleetMonitorService`` + ``ControlLoop`` +
+  policy stack senses the simulated counters and actuates the simulated
+  stage (replicas / capacity / admission) through the same adapter
+  protocol ``streams.Pipeline`` uses;
+* **oracle** — the hand-tuned post-change configuration from t=0 (the
+  upper bound a clairvoyant operator reaches).
+
+Scenarios: a mid-run step change in per-item kernel cost (the
+acceptance gate: closed >= 2x static sustained throughput and >= 80% of
+oracle), a slow drift in service cost, bursty arrivals (a robustness
+gate: hysteresis must hold the configuration still and lose nothing),
+and a service-rate collapse under a replica ceiling (admission gate
+sheds to keep occupancy bounded).  ``control_parity`` replays the
+closed-loop run's recorded sample stream through the sequential scan
+oracle — actuation must not perturb the estimates (<= 1e-4).
+``control_tick_overhead`` measures a full sense->decide tick against
+the S=8192 monitor tick; amortized per monitor tick (one decision per
+fused dispatch) it must stay <= 10%.
+
+Everything lands in ``BENCH_control.json``; ``REPRO_BENCH_QUICK=1``
+shortens the scenario windows (gates still checked).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+import numpy as np
+
+from repro.control import (AdmissionPolicy, BufferPolicy, ControlLoop,
+                           PolicySet, ReplicaPolicy)
+from repro.core.controller import BufferAutotuner, ParallelismController
+from repro.core.monitor import MonitorConfig, run_monitor_fleet
+from repro.streams import CounterArena, FleetMonitorService, InstrumentedQueue
+
+BENCH_CONTROL_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "BENCH_control.json"
+
+PERIOD_S = 1e-3
+MCFG = MonitorConfig(window=16, min_q_samples=16)
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _update_report(section: str, payload) -> None:
+    report = {}
+    if BENCH_CONTROL_JSON.exists():
+        try:
+            report = json.loads(BENCH_CONTROL_JSON.read_text())
+        except json.JSONDecodeError:
+            report = {}
+    report[section] = payload
+    report["quick_mode"] = _quick()
+    BENCH_CONTROL_JSON.write_text(json.dumps(report, indent=2))
+
+
+class _SimTandem:
+    """Per-period tandem: poisson arrivals into a finite queue drained
+    by ``replicas`` copies of a stage costing ``1/mu_r`` periods/item.
+    Mirrors what the real instrumentation sees: accepted/served counts
+    as tc, blocked flags at the ends, occupancy for admission."""
+
+    def __init__(self, seed, lam, mu_r, replicas, capacity):
+        self.rng = np.random.default_rng(seed)
+        self.lam = lam
+        self.mu_r = mu_r
+        self.replicas = replicas
+        self.capacity = capacity
+        self.backlog = 0
+        self.shedding = False
+        self.served_total = 0
+        self.offered_total = 0
+        self.shed_total = 0
+
+    def step(self):
+        """One period; returns (tail_tc, tail_blk, head_tc, head_blk)."""
+        arrivals = int(self.rng.poisson(self.lam))
+        self.offered_total += arrivals
+        if self.shedding:
+            self.shed_total += arrivals
+            arrivals = 0
+        space = self.capacity - self.backlog
+        acc = min(arrivals, space)
+        tail_blk = arrivals > acc          # producer hit a full queue
+        self.backlog += acc
+        # high-water occupancy (what an instantaneous probe mid-period
+        # would see) — the admission gate's input
+        self.occ_high = self.backlog / max(self.capacity, 1)
+        can_serve = int(self.rng.poisson(self.replicas * self.mu_r))
+        srv = min(self.backlog, can_serve)
+        head_blk = can_serve > srv         # consumer starved this period
+        self.backlog -= srv
+        self.served_total += srv
+        return float(acc), tail_blk, float(srv), head_blk
+
+    @property
+    def occupancy(self) -> float:
+        return self.backlog / max(self.capacity, 1)
+
+
+class _SimActuator:
+    """``ControlLoop`` adapter over the simulated stage — same protocol
+    ``streams.Pipeline``'s adapter implements, same rejection contract
+    (a shrink below the backlog is refused, items are never dropped)."""
+
+    def __init__(self, sim: _SimTandem):
+        self.sim = sim
+        self.actions = []
+
+    def replicas(self):
+        return np.array([self.sim.replicas], np.int64)
+
+    def capacities(self):
+        return np.array([self.sim.capacity], np.int64)
+
+    def occupancy(self):
+        return np.array([getattr(self.sim, "occ_high", 0.0)])
+
+    def scale(self, i, n):
+        self.actions.append(("scale", n))
+        self.sim.replicas = int(n)
+        return "applied"
+
+    def resize(self, i, cap):
+        if cap < self.sim.backlog:
+            self.actions.append(("resize-rejected", cap))
+            return "rejected"
+        self.actions.append(("resize", cap))
+        self.sim.capacity = int(cap)
+        return "applied"
+
+    def admit(self, i, shed):
+        self.actions.append(("shed" if shed else "admit", int(shed)))
+        self.sim.shedding = bool(shed)
+        return "applied"
+
+
+def _run_sim(sim, T, policies=None, mutate=None, record=None,
+             decide_every=16):
+    """Drive the sim through a real monitor service (+ optional control
+    loop) for T periods; returns per-period served counts."""
+    arena = CounterArena(4)
+    q = InstrumentedQueue(8, arena=arena)
+    svc = FleetMonitorService([q], MCFG, period_s=PERIOD_S,
+                              chunk_t=decide_every,
+                              scale_to_period=False, ends="both")
+    loop = None
+    if policies is not None:
+        loop = ControlLoop(svc, policies, _SimActuator(sim))
+        loop.warmup()
+    served = np.zeros(T)
+    for t in range(T):
+        if mutate is not None:
+            mutate(sim, t)
+        acc, tail_blk, srv, head_blk = sim.step()
+        q.tail.tc = acc
+        q.tail.blocked = tail_blk
+        q.head.tc = srv
+        q.head.blocked = head_blk
+        if record is not None:
+            record(t, (srv, head_blk))
+        svc.sample()
+        served[t] = srv
+        if loop is not None and t % decide_every == decide_every - 1:
+            loop.tick()
+    svc.flush()
+    return served, svc, loop
+
+
+def _replica_policies(max_replicas=16, confirm=2, cooldown=4):
+    return PolicySet(
+        replica=ReplicaPolicy(ParallelismController(
+            max_replicas=max_replicas)),
+        confirm_ticks=confirm, cooldown_ticks=cooldown, block_q=8)
+
+
+def closed_loop_step_change():
+    """Acceptance scenario: per-item kernel cost quadruples mid-run.
+    Sustained post-change throughput: closed >= 2x static and >= 80% of
+    the hand-tuned oracle; recorded estimates must match the scan
+    oracle exactly (parity checked by control_parity below)."""
+    T = 3000 if _quick() else 6000
+    change = T // 3
+    settle = change + (300 if _quick() else 500)
+    lam, mu0, mu1, r0 = 100.0, 60.0, 15.0, 2
+    r_oracle = int(np.ceil(1.2 * lam / mu1))        # hand-tuned: 8
+
+    def mutate(sim, t):
+        if t == change:
+            sim.mu_r = mu1
+
+    trace = {}
+
+    def record(t, row):
+        trace[t] = row
+
+    runs = {}
+    runs["static"], _, _ = _run_sim(
+        _SimTandem(0, lam, mu0, r0, 256), T, mutate=mutate)
+    runs["closed"], svc, loop = _run_sim(
+        _SimTandem(0, lam, mu0, r0, 256), T,
+        policies=_replica_policies(), mutate=mutate, record=record)
+    runs["oracle"], _, _ = _run_sim(
+        _SimTandem(0, lam, mu1 * 0 + mu0, r_oracle, 256), T,
+        mutate=mutate)
+
+    sus = {k: float(v[settle:].mean()) for k, v in runs.items()}
+    vs_static = sus["closed"] / max(sus["static"], 1e-9)
+    vs_oracle = sus["closed"] / max(sus["oracle"], 1e-9)
+    # recovery: first post-change tick where the 100-period rolling
+    # closed throughput re-reaches 80% of the oracle's sustained level
+    roll = np.convolve(runs["closed"], np.ones(100) / 100, mode="valid")
+    above = np.nonzero(roll[change:] >= 0.8 * sus["oracle"])[0]
+    recovery = int(above[0]) if above.size else -1
+    scale_actions = [r for r in loop.log.by_policy("replicas")]
+    section = {
+        "periods": T, "change_at": change, "settle_at": settle,
+        "lam": lam, "mu_r_before": mu0, "mu_r_after": mu1,
+        "replicas_start": r0, "replicas_oracle": r_oracle,
+        "replicas_final": int(loop.actuator.sim.replicas),
+        "sustained_items_per_period": sus,
+        "closed_over_static": vs_static,
+        "closed_over_oracle": vs_oracle,
+        "recovery_periods": recovery,
+        "scale_decisions": [(r.tick, r.value, r.outcome)
+                            for r in scale_actions],
+        "target": {"closed_over_static": 2.0,
+                   "closed_over_oracle": 0.8,
+                   "met": vs_static >= 2.0 and vs_oracle >= 0.8},
+    }
+    _update_report("step_change", section)
+    # stash the recorded stream for the parity benchmark
+    tc = np.array([[trace[t][0] for t in range(T)]])
+    blk = np.array([[trace[t][1] for t in range(T)]])
+    closed_loop_step_change._replay = (tc, blk, svc)
+    rows = [f"control_step/static,{0},{sus['static']:.1f}_items_per_T",
+            f"control_step/closed,{0},{sus['closed']:.1f}_items_per_T",
+            f"control_step/oracle,{0},{sus['oracle']:.1f}_items_per_T"]
+    return rows, (f"step-change recovery: closed {vs_static:.1f}x static "
+                  f"(target >=2x), {vs_oracle * 100:.0f}% of oracle "
+                  f"(target >=80%), recovered in {recovery} periods")
+
+
+def closed_loop_slow_drift():
+    """Per-item cost drifts up 3.3x over the run; the loop tracks it
+    with a few confirmed scale-ups while static decays."""
+    T = 3000 if _quick() else 6000
+    t0, t1 = T // 6, 5 * T // 6
+    lam, mu0, mu1, r0 = 100.0, 60.0, 18.0, 2
+    r_oracle = int(np.ceil(1.2 * lam / mu1))
+
+    def mutate(sim, t):
+        if t0 <= t < t1:
+            sim.mu_r = mu0 + (mu1 - mu0) * (t - t0) / (t1 - t0)
+
+    runs = {}
+    runs["static"], _, _ = _run_sim(
+        _SimTandem(1, lam, mu0, r0, 256), T, mutate=mutate)
+    runs["closed"], _, loop = _run_sim(
+        _SimTandem(1, lam, mu0, r0, 256), T,
+        policies=_replica_policies(), mutate=mutate)
+    runs["oracle"], _, _ = _run_sim(
+        _SimTandem(1, lam, mu0, r_oracle, 256), T, mutate=mutate)
+
+    tail = slice(t1, T)
+    sus = {k: float(v[tail].mean()) for k, v in runs.items()}
+    vs_static = sus["closed"] / max(sus["static"], 1e-9)
+    vs_oracle = sus["closed"] / max(sus["oracle"], 1e-9)
+    n_scales = len(loop.log.by_policy("replicas"))
+    section = {
+        "periods": T, "drift_window": [t0, t1], "lam": lam,
+        "mu_r_path": [mu0, mu1], "replicas_oracle": r_oracle,
+        "replicas_final": int(loop.actuator.sim.replicas),
+        "sustained_items_per_period": sus,
+        "closed_over_static": vs_static,
+        "closed_over_oracle": vs_oracle,
+        "scale_decisions": n_scales,
+        "target": {"closed_over_static": 2.0,
+                   "closed_over_oracle": 0.8,
+                   "met": vs_static >= 2.0 and vs_oracle >= 0.8},
+    }
+    _update_report("slow_drift", section)
+    rows = [f"control_drift/{k},0,{v:.1f}_items_per_T"
+            for k, v in sus.items()]
+    return rows, (f"slow-drift tracking: closed {vs_static:.1f}x static, "
+                  f"{vs_oracle * 100:.0f}% of oracle, "
+                  f"{n_scales} scale decisions")
+
+
+def closed_loop_bursty_arrivals():
+    """Bursty offered load around a feasible mean: the confirmation /
+    hysteresis gates must hold the configuration still (no thrash) and
+    give up nothing vs static."""
+    T = 2400 if _quick() else 4800
+    lam_hi, lam_lo, burst = 160.0, 40.0, 100
+    mu_r, r0 = 60.0, 2
+
+    def mutate(sim, t):
+        sim.lam = lam_hi if (t // burst) % 2 == 0 else lam_lo
+
+    runs = {}
+    runs["static"], _, _ = _run_sim(
+        _SimTandem(2, lam_hi, mu_r, r0, 64), T, mutate=mutate)
+    runs["closed"], _, loop = _run_sim(
+        _SimTandem(2, lam_hi, mu_r, r0, 64), T,
+        policies=PolicySet(
+            replica=ReplicaPolicy(ParallelismController(max_replicas=16)),
+            buffer=BufferPolicy(BufferAutotuner(current=64)),
+            confirm_ticks=2, cooldown_ticks=4, block_q=8),
+        mutate=mutate)
+    thr = {k: float(v.mean()) for k, v in runs.items()}
+    ratio = thr["closed"] / max(thr["static"], 1e-9)
+    n_actions = loop.log.total
+    section = {
+        "periods": T, "lam_burst": [lam_hi, lam_lo],
+        "burst_periods": burst, "mu_r": mu_r,
+        "throughput_items_per_period": thr,
+        "closed_over_static": ratio,
+        "control_actions": n_actions,
+        "replicas_final": int(loop.actuator.sim.replicas),
+        "target": {"no_harm_ratio": 0.95, "max_actions": 12,
+                   "met": ratio >= 0.95 and n_actions <= 12},
+    }
+    _update_report("bursty", section)
+    rows = [f"control_bursty/{k},0,{v:.1f}_items_per_T"
+            for k, v in thr.items()]
+    return rows, (f"bursty robustness: closed/static = {ratio:.2f} "
+                  f"(target >=0.95), {n_actions} actions "
+                  f"(target <=12)")
+
+
+def closed_loop_admission_collapse():
+    """Service collapses with replicas capped: the admission gate sheds
+    offered load to keep occupancy (queueing delay) bounded instead of
+    pinning the queue at 100%."""
+    T = 2400 if _quick() else 4800
+    change = T // 3
+    lam, mu0, mu1, r0, cap = 100.0, 60.0, 10.0, 2, 64
+
+    def mutate(sim, t):
+        if t == change:
+            sim.mu_r = mu1
+
+    occ_static = np.zeros(T)
+    occ_closed = np.zeros(T)
+    sim_s = _SimTandem(3, lam, mu0, r0, cap)
+    sim_c = _SimTandem(3, lam, mu0, r0, cap)
+
+    def run(sim, policies, occ_out):
+        def record(t, row):
+            occ_out[t] = sim.occupancy
+        return _run_sim(sim, T, policies=policies, mutate=mutate,
+                        record=record)
+
+    run(sim_s, None, occ_static)
+    _, _, loop = run(sim_c, PolicySet(
+        replica=ReplicaPolicy(ParallelismController(max_replicas=2)),
+        admission=AdmissionPolicy(),
+        confirm_ticks=2, cooldown_ticks=4, block_q=8), occ_closed)
+
+    post = slice(change + 200, T)
+    occ_s = float(occ_static[post].mean())
+    occ_c = float(occ_closed[post].mean())
+    shed_events = [r for r in loop.log.by_policy("admission")
+                   if r.action == "shed"]
+    shed_frac = sim_c.shed_total / max(sim_c.offered_total, 1)
+    section = {
+        "periods": T, "collapse_at": change, "lam": lam,
+        "mu_r_after": mu1, "max_replicas": 2,
+        "occupancy_static": occ_s, "occupancy_admission": occ_c,
+        "shed_events": len(shed_events),
+        "shed_fraction": shed_frac,
+        "target": {"gate_activated": len(shed_events) > 0,
+                   "occupancy_ratio": 0.85,
+                   "met": len(shed_events) > 0 and occ_c < 0.85 * occ_s},
+    }
+    _update_report("admission_collapse", section)
+    rows = [f"control_admission/occ_static,0,{occ_s:.2f}",
+            f"control_admission/occ_admission,0,{occ_c:.2f}"]
+    return rows, (f"admission under collapse: occupancy {occ_c:.2f} vs "
+                  f"{occ_s:.2f} static (target <0.85x), "
+                  f"{len(shed_events)} shed events, "
+                  f"{shed_frac * 100:.0f}% load shed")
+
+
+def control_parity():
+    """Actuation must not perturb estimation: replay the step-change
+    closed-loop run's recorded head stream through the sequential scan
+    oracle and compare the gated service estimates (<= 1e-4)."""
+    from repro.core.monitor import fleet_rate_readout
+
+    if not hasattr(closed_loop_step_change, "_replay"):
+        closed_loop_step_change()
+    tc, blk, svc = closed_loop_step_change._replay
+    st, _ = run_monitor_fleet(MCFG, tc, blk, impl="scan", mode="state")
+    got_epoch = int(svc.epochs()[0])
+    want_epoch = int(np.asarray(st.epoch)[0])
+    # compare the same quantity the control loop consumed: the gated
+    # readout (converged estimate, else the count-gated running q-bar)
+    got = float(svc.service_rates()[0])
+    want = float(fleet_rate_readout(MCFG, st, svc.period_s)[0])
+    rel = abs(got - want) / max(abs(want), 1e-12)
+    ok = got_epoch == want_epoch and want > 0 and rel < 1e-4
+    _update_report("parity", {
+        "rtol_target": 1e-4, "max_rel_err": rel,
+        "epochs": [got_epoch, want_epoch], "ok": ok})
+    rows = [f"control_parity/q=1,0,max_rel_err={rel:.2e}_ok={ok}"]
+    return rows, (f"closed-loop gated estimates vs scan oracle: rel err "
+                  f"{rel:.2e} (epochs {got_epoch}=={want_epoch}), "
+                  f"ok={ok}")
+
+
+def control_tick_overhead():
+    """A full sense->decide control tick at S=8192 monitored ends vs the
+    monitor tick itself.
+
+    One decision fires per fused monitor dispatch (= ``chunk_t``
+    collector ticks), so the honest comparison is amortized: control
+    cost per monitor tick vs what monitoring itself costs per tick
+    *including* its amortized Algorithm-1 dispatch (measured over whole
+    chunks; on this container the exact-semantics XLA dispatch dominates
+    — see BENCH_monitor.json — where on a TPU the fused kernel shrinks
+    it).  The pure-collector tick and that stricter ratio are reported
+    alongside; the <=10% gate is on the dispatch-inclusive ratio."""
+    S = 8192
+    Q = S // 2
+    chunk_t = 32
+    warm, meas = (4, 12) if _quick() else (6, 30)
+    arena = CounterArena(capacity=S)
+    queues = [InstrumentedQueue(2, arena=arena) for _ in range(Q)]
+    svc = FleetMonitorService(queues, MonitorConfig(), period_s=PERIOD_S,
+                              chunk_t=chunk_t, ends="both")
+
+    class _NullActuator:
+        def replicas(self):
+            return np.ones(Q, np.int64)
+
+        def capacities(self):
+            return np.full(Q, 64, np.int64)
+
+        def occupancy(self):
+            return np.zeros(Q)
+
+        def scale(self, i, n):
+            return "noop"
+
+        def resize(self, i, cap):
+            return "noop"
+
+        def admit(self, i, shed):
+            return "noop"
+
+    loop = ControlLoop(svc, PolicySet(
+        replica=ReplicaPolicy(), buffer=BufferPolicy(),
+        admission=AdmissionPolicy()), _NullActuator())
+    svc.warmup()
+    loop.warmup()
+
+    # full monitoring cost per tick: whole chunks, dispatch included
+    n_full = 2 * chunk_t
+    for _ in range(chunk_t):
+        svc.sample()
+    t0 = time.perf_counter()
+    for _ in range(n_full):
+        svc.sample()
+    svc.flush()
+    t_monitor_full = (time.perf_counter() - t0) / n_full
+
+    # pure collector tick: a fresh chunk, no dispatch inside the window
+    for _ in range(warm):
+        svc.sample()
+    t0 = time.perf_counter()
+    for _ in range(meas):
+        svc.sample()
+    t_collector = (time.perf_counter() - t0) / meas
+
+    for _ in range(warm):
+        loop.tick()
+    t0 = time.perf_counter()
+    for _ in range(meas):
+        loop.tick()
+    t_control = (time.perf_counter() - t0) / meas
+
+    amortized = t_control / chunk_t
+    pct_full = amortized / max(t_monitor_full, 1e-12) * 100.0
+    pct_collector = amortized / max(t_collector, 1e-12) * 100.0
+    section = {
+        "streams": S, "chunk_t": chunk_t, "impl": loop.impl,
+        "monitor_tick_us_with_dispatch": t_monitor_full * 1e6,
+        "collector_tick_us": t_collector * 1e6,
+        "control_tick_us": t_control * 1e6,
+        "control_us_amortized_per_monitor_tick": amortized * 1e6,
+        "overhead_pct_of_monitor_tick": pct_full,
+        "overhead_pct_of_collector_tick": pct_collector,
+        "target": {"overhead_pct": 10.0, "met": pct_full <= 10.0},
+    }
+    _update_report("overhead", section)
+    rows = [f"control_tick/s={S},{t_control * 1e6:.1f},"
+            f"{pct_full:.1f}%_of_monitor_tick_amortized",
+            f"monitor_tick/s={S},{t_monitor_full * 1e6:.1f},"
+            f"with_dispatch",
+            f"collector_tick/s={S},{t_collector * 1e6:.1f},"
+            f"collector_only_{pct_collector:.0f}%"]
+    return rows, (f"control tick {t_control * 1e6:.0f} us at S={S} = "
+                  f"{pct_full:.1f}% of a monitor tick (dispatch incl., "
+                  f"target <=10%; {pct_collector:.0f}% of the bare "
+                  f"collector tick), amortized over chunk_t={chunk_t}")
+
+
+ALL = [closed_loop_step_change, closed_loop_slow_drift,
+       closed_loop_bursty_arrivals, closed_loop_admission_collapse,
+       control_parity, control_tick_overhead]

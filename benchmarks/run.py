@@ -21,18 +21,20 @@ def main(argv=None) -> None:
                     help="substring filter on benchmark names")
     ap.add_argument("--suite", default=None,
                     choices=["paper", "apps", "kernels", "roofline",
-                             "pipeline", "collector"],
+                             "pipeline", "collector", "control"],
                     help="run only one suite (default: all)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (apps, collector_bench, kernel_bench,
-                            paper_figs, pipeline_bench, roofline_table)
+    from benchmarks import (apps, collector_bench, control_bench,
+                            kernel_bench, paper_figs, pipeline_bench,
+                            roofline_table)
 
     suites = [("paper", paper_figs.ALL), ("apps", apps.ALL),
               ("kernels", kernel_bench.ALL),
               ("roofline", roofline_table.ALL),
               ("pipeline", pipeline_bench.ALL),
-              ("collector", collector_bench.ALL)]
+              ("collector", collector_bench.ALL),
+              ("control", control_bench.ALL)]
     if args.suite:
         suites = [s for s in suites if s[0] == args.suite]
     print("name,us_per_call,derived")

@@ -21,6 +21,8 @@ def fleet_control_demo():
                      Stage("tag", fn=lambda x: (x, x % 7))],
                     capacity=64, base_period_s=1e-3,
                     monitor_cfg=MonitorConfig(window=16, min_q_samples=16))
+    pipe.fleet.warmup()      # jit-compile before items flow: on this
+    # box the first compile outlasts a short demo's whole run
     out = pipe.run_collect(timeout_s=120)
     print(f"== fleet_control_demo ({len(out)} items, "
           f"{pipe.fleet.dispatches} fused monitor dispatches)")
@@ -32,6 +34,41 @@ def fleet_control_demo():
     print("   recommended replicas:", pipe.recommended_replicas())
 
 
+def closed_loop_demo():
+    """Closed-loop elastic actuation (PR 4): the same pipeline with
+    ``control=True`` runs a ``repro.control`` ControlLoop — replica and
+    buffer policies evaluated against the gated fleet estimates once
+    per fused dispatch, actuated live through ``scale_stage`` /
+    ``resize``, every decision audited in the ControlLog ring."""
+    import time
+
+    from repro.core.monitor import MonitorConfig
+    from repro.streams import Pipeline, Stage
+
+    def slowish(x):
+        # a deliberately heavy (I/O-shaped) stage: one replica caps the
+        # pipeline at ~2500 items/s, so the loop should want replicas
+        time.sleep(4e-4)
+        return x + 1
+
+    pipe = Pipeline([Stage("src", source=range(12_000)),
+                     Stage("heavy", fn=slowish)],
+                    capacity=64, base_period_s=1e-3, control=True,
+                    monitor_cfg=MonitorConfig(window=16, min_q_samples=16))
+    pipe.fleet.warmup()      # compile off the run so sampling starts
+    pipe.control.warmup()    # with the first items
+    out = pipe.run_collect(timeout_s=120)
+    log = pipe.control.log
+    print(f"== closed_loop_demo ({len(out)} items)")
+    print(f"   live replicas of 'heavy': {pipe.live_replicas('heavy')}"
+          f"  (advisory: {pipe.recommended_replicas()})")
+    print(f"   control decisions: {log.counts() or 'none fired'}")
+    for rec in log.tail(4):
+        print(f"   [{rec.tick}] {rec.policy}/{rec.action} q{rec.queue} "
+              f"-> {rec.value} ({rec.outcome}; mu={rec.observed_mu:.0f}/s"
+              f" lam={rec.observed_lam:.0f}/s)")
+
+
 def main():
     for fn in (fig16_matmul_app, fig17_rabin_karp):
         rows, verdict = fn()
@@ -40,6 +77,7 @@ def main():
             print("  ", r)
         print("  verdict:", verdict)
     fleet_control_demo()
+    closed_loop_demo()
 
 
 if __name__ == "__main__":

@@ -46,4 +46,25 @@ print(f"smoke: arena/PR-2-loop collector ratio at S=8192 = {ratio:.1f}x "
 assert ratio >= 10.0, "collector bench below acceptance"
 assert parity["ok"], "arena-path estimate parity regression vs scan oracle"
 EOF
+
+REPRO_BENCH_QUICK=1 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/run.py --suite control \
+    --json BENCH_control.run.json
+
+python - <<'EOF'
+import json
+rep = json.load(open("BENCH_control.json"))
+sc = rep["step_change"]
+ov = rep["overhead"]
+pa = rep["parity"]
+print(f"smoke: step-change closed loop = {sc['closed_over_static']:.1f}x "
+      f"static (target >= 2x), {sc['closed_over_oracle'] * 100:.0f}% of "
+      f"oracle (target >= 80%); control-tick overhead = "
+      f"{ov['overhead_pct_of_monitor_tick']:.1f}% of a monitor tick "
+      f"(target <= 10%); parity rel err = {pa['max_rel_err']:.2e}")
+assert sc["closed_over_static"] >= 2.0, "closed loop below 2x static"
+assert sc["closed_over_oracle"] >= 0.8, "closed loop below 80% of oracle"
+assert ov["target"]["met"], "control-tick overhead above 10%"
+assert pa["ok"], "closed-loop estimate parity regression vs scan oracle"
+EOF
 echo "smoke: OK"

@@ -1,0 +1,13 @@
+from repro.control.log import ControlLog, ControlRecord
+from repro.control.loop import ControlLoop
+from repro.control.policy import (AdmissionPolicy, BufferPolicy,
+                                  ControlConfig, ControlState, Decision,
+                                  PolicySet, ReplicaPolicy, control_decide,
+                                  control_decide_trace_count, control_init)
+
+__all__ = [
+    "ControlLog", "ControlRecord", "ControlLoop",
+    "AdmissionPolicy", "BufferPolicy", "ReplicaPolicy", "PolicySet",
+    "ControlConfig", "ControlState", "Decision",
+    "control_decide", "control_decide_trace_count", "control_init",
+]

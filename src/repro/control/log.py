@@ -1,0 +1,91 @@
+"""Decision audit ring: every actuation the control loop takes (or has
+refused by an actuator) is recorded for post-hoc analysis.
+
+Re-tuning a live system from noisy online estimates is exactly the kind
+of loop that needs a flight recorder: when throughput moves, the first
+question is *which policy acted, on what evidence, and did the actuator
+accept it*.  ``ControlLog`` is a fixed-capacity ring (old records fall
+off), append is O(1) under a lock and happens only when a decision
+fires — never on the per-tick fast path, which is a single fused
+dispatch regardless of fleet size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterator, Optional
+
+__all__ = ["ControlRecord", "ControlLog"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlRecord:
+    """One decision: what was observed, what was done, what came of it.
+
+    ``outcome`` is ``"applied"`` when the actuator took the action,
+    ``"rejected"`` when it refused (e.g. a shrink below the queued item
+    count — retried once the queue drains), ``"noop"`` when the decision
+    matched the live configuration already.
+    """
+    tick: int                  # control-loop tick counter
+    t: float                   # time.monotonic() at decision time
+    queue: int                 # public stream/queue index
+    policy: str                # 'replicas' | 'capacity' | 'admission'
+    observed_lam: float
+    observed_mu: float
+    action: str                # e.g. 'scale', 'resize', 'shed', 'admit'
+    value: int                 # target replicas / capacity / gate state
+    outcome: str               # 'applied' | 'rejected' | 'noop'
+
+
+class ControlLog:
+    """Thread-safe fixed-size decision ring."""
+
+    def __init__(self, capacity: int = 1024):
+        self.capacity = max(int(capacity), 1)
+        self._buf: list[Optional[ControlRecord]] = [None] * self.capacity
+        self._n = 0                     # total appended, ever
+        self._lock = threading.Lock()
+
+    def append(self, rec: ControlRecord) -> None:
+        with self._lock:
+            self._buf[self._n % self.capacity] = rec
+            self._n += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return min(self._n, self.capacity)
+
+    @property
+    def total(self) -> int:
+        """Records ever appended (>= len once the ring has wrapped)."""
+        with self._lock:
+            return self._n
+
+    def records(self) -> list[ControlRecord]:
+        """Chronological snapshot of the retained window."""
+        with self._lock:
+            n, cap = self._n, self.capacity
+            if n <= cap:
+                return [r for r in self._buf[:n]]
+            start = n % cap
+            return self._buf[start:] + self._buf[:start]   # type: ignore
+
+    def tail(self, k: int = 16) -> list[ControlRecord]:
+        recs = self.records()
+        return recs[-k:]
+
+    def __iter__(self) -> Iterator[ControlRecord]:
+        return iter(self.records())
+
+    def by_policy(self, policy: str) -> list[ControlRecord]:
+        return [r for r in self.records() if r.policy == policy]
+
+    def counts(self) -> dict[str, int]:
+        """{policy/outcome: count} summary over the retained window."""
+        out: dict[str, int] = {}
+        for r in self.records():
+            key = f"{r.policy}/{r.outcome}"
+            out[key] = out.get(key, 0) + 1
+        return out

@@ -1,0 +1,206 @@
+"""The control loop: sense -> decide -> actuate, one fused decision per
+tick.
+
+``ControlLoop`` closes the loop the paper's monitoring opens: a
+``FleetMonitorService`` continuously estimates every queue's
+non-blocking service rate; the loop periodically reads the gated (Q,)
+estimate arrays, evaluates the ``PolicySet`` for the whole fleet in
+**one** jitted decision dispatch (targets + confirmation counters +
+hysteresis + cooldown + admission state machine — see
+``control.policy``), and drives the few queues whose decisions fired
+through an *actuator* adapter.  Everything per-tick is O(1) python plus
+vectorized array math; the python loop runs only over the (typically
+empty) set of fired actions.
+
+The loop runs as its own timer thread, one tick per fused monitor
+dispatch by default (``service.period_s * service.chunk_t`` — deciding
+faster than estimates refresh would only chase noise), or is ticked
+manually (``tick()``) by tests, benchmarks and simulation harnesses.
+
+Actuator adapters are owned by the actuated layer (``streams.Pipeline``
+and ``serve.Engine`` each build their own), keeping this package free
+of upward dependencies.  An adapter provides:
+
+* ``replicas()`` / ``capacities()`` -> (Q,) current configuration;
+* ``occupancy()`` -> (Q,) queue fill fractions (admission only);
+* ``scale(i, n)`` / ``resize(i, cap)`` / ``admit(i, shed)`` ->
+  outcome string (``'applied'`` | ``'rejected'`` | ``'noop'``) — a
+  rejection (e.g. a shrink below the queued item count) is recorded and
+  retried naturally on a later tick.
+
+Lock ordering (deadlock audit): a tick takes ``ControlLoop._lock``
+outermost, then reads the service (``service._lock`` -> ``arena.lock``,
+released before deciding), then actuates (``queue._resize_lock`` /
+``Stage._stop_lock``, each a leaf).  No actuator path re-enters the
+service, so ``FleetMonitorService.stop()``/``flush()`` from any other
+thread can only interleave between — never deadlock against — a tick
+mid-actuation.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.control.log import ControlLog, ControlRecord
+from repro.control.policy import (ControlState, Decision, PolicySet,
+                                  control_decide, control_init)
+
+__all__ = ["ControlLoop"]
+
+
+class ControlLoop(threading.Thread):
+    """Closed-loop elastic actuation over one fleet monitor service."""
+
+    def __init__(self, service, policies: PolicySet, actuator, *,
+                 log: Optional[ControlLog] = None,
+                 period_s: Optional[float] = None,
+                 impl: str = "auto", min_sleep_s: float = 2e-4):
+        super().__init__(daemon=True, name="repro-control")
+        self.service = service
+        self.policies = policies
+        self.actuator = actuator
+        self.impl = impl
+        self.cfg = policies.control_config()
+        self.log = log if log is not None else ControlLog()
+        # one decision per fused monitor dispatch: estimates only move
+        # when a chunk lands, so deciding faster only chases noise
+        self.period_s = (period_s if period_s is not None
+                         else service.period_s * service.chunk_t)
+        self.min_sleep_s = min_sleep_s
+        q = len(service.queues)
+        self.n_queues = q
+        self.state: ControlState = control_init(self.cfg, q)
+        self.ticks = 0
+        self._shed = np.zeros(q, bool)     # last applied admission gates
+        # per-queue replica count each mu estimate was measured at: a
+        # frozen estimate (starved consumer after a scale-up folds no
+        # new samples) keeps its old basis, so the per-copy rate the
+        # decision normalizes by cannot drift with the actuation itself
+        self._mu_basis = np.ones(q, np.int64)
+        self._last_mu = np.full(q, np.nan)
+        # cumulative tail blocked/total periods at the previous tick:
+        # differenced to detect saturation (demand unobservable)
+        self._last_blk = np.zeros(q, np.int64)
+        self._last_tot = np.zeros(q, np.int64)
+        self._lock = threading.Lock()      # serializes tick()/stop()
+        self._stop_evt = threading.Event()
+
+    # -- sense -> decide -> actuate ---------------------------------------
+    def warmup(self) -> None:
+        """Compile the decision dispatch off the tick path (same padded
+        shape and config, so it lands in the same jit cache entry)."""
+        q = self.n_queues
+        z = np.zeros(q)
+        control_decide(self.cfg, control_init(self.cfg, q), lam=z, mu=z,
+                       ready=np.zeros(q, bool), replicas=np.ones(q),
+                       caps=np.ones(q), impl=self.impl, donate=True)
+
+    def tick(self) -> Decision:
+        """One sense->decide->actuate pass; safe from any thread."""
+        with self._lock:
+            return self._tick_locked()
+
+    def _tick_locked(self) -> Decision:
+        svc = self.service
+        # -- sense: one gated readout for both ends ----------------------
+        rates = svc.gated_rates()
+        q = self.n_queues
+        mu, lam = rates[:q], rates[q:]
+        ready = mu > 0                     # head estimate usable
+        # saturation: the tail leg blocked (queue full) for nearly every
+        # period since the last tick — demand is dark, escalate instead
+        nb, nt = svc.blocked_counts()
+        tails = slice(q, None)
+        if lam.shape[0] == 0:              # ends="head" service: no
+            lam = np.zeros(q)              # arrival leg, replica/cap
+            saturated = np.zeros(q, bool)
+        else:
+            d_blk = nb[tails] - self._last_blk
+            d_tot = nt[tails] - self._last_tot
+            self._last_blk, self._last_tot = nb[tails], nt[tails]
+            saturated = (d_tot > 0) & (
+                d_blk >= self.cfg.saturation_frac * d_tot)
+        cv2 = svc.cv2s()
+        act = self.actuator
+        replicas = np.asarray(act.replicas(), np.int64)
+        # queues whose consumer cannot be duplicated (e.g. the pipeline
+        # sink drain) are masked out of the replica leg entirely
+        scalable = (np.asarray(act.scalable(), bool)
+                    if hasattr(act, "scalable") else None)
+        caps = np.asarray(act.capacities(), np.int64)
+        occ = (np.asarray(act.occupancy(), float)
+               if self.policies.admission is not None else 0.0)
+        # an estimate that moved since last tick was measured under the
+        # *current* replica count; a frozen one keeps its old basis
+        moved = mu != self._last_mu
+        self._mu_basis = np.where(moved, replicas, self._mu_basis)
+        self._last_mu = mu.copy()
+
+        # -- decide: one fused dispatch for every policy x queue ---------
+        self.state, dec = control_decide(
+            self.cfg, self.state, lam=lam, mu=mu, ready=ready,
+            replicas=replicas, rep_basis=self._mu_basis, caps=caps,
+            cv2=cv2, occupancy=occ, saturated=saturated,
+            scalable=scalable, impl=self.impl, donate=True)
+        self.ticks += 1
+        self._actuate(dec, lam, mu, replicas, caps)
+        return dec
+
+    def _actuate(self, dec: Decision, lam, mu, replicas, caps) -> None:
+        now = time.monotonic()
+        act, log = self.actuator, self.log
+
+        def record(i, policy, action, value, outcome):
+            log.append(ControlRecord(
+                tick=self.ticks, t=now, queue=int(i), policy=policy,
+                observed_lam=float(lam[i]), observed_mu=float(mu[i]),
+                action=action, value=int(value), outcome=outcome))
+
+        if self.policies.replica is not None:
+            targets = np.asarray(dec.target_replicas)
+            for i in np.nonzero(np.asarray(dec.scale_mask))[0]:
+                n = int(targets[i])
+                if n == int(replicas[i]):
+                    continue
+                outcome = act.scale(int(i), n)
+                record(i, "replicas", "scale", n, outcome)
+        if self.policies.buffer is not None:
+            targets = np.asarray(dec.target_caps)
+            for i in np.nonzero(np.asarray(dec.resize_mask))[0]:
+                cap = int(targets[i])
+                if cap == int(caps[i]):
+                    continue
+                outcome = act.resize(int(i), cap)
+                record(i, "capacity", "resize", cap, outcome)
+        if self.policies.admission is not None:
+            shed = np.asarray(dec.shed)
+            for i in np.nonzero(shed != self._shed)[0]:
+                outcome = act.admit(int(i), bool(shed[i]))
+                record(i, "admission", "shed" if shed[i] else "admit",
+                       int(shed[i]), outcome)
+            self._shed = shed.copy()
+
+    # -- thread plumbing ---------------------------------------------------
+    def run(self) -> None:
+        self.warmup()
+        next_due = time.monotonic()
+        while not self._stop_evt.is_set():
+            now = time.monotonic()
+            if now < next_due:
+                self._stop_evt.wait(max(next_due - now, self.min_sleep_s))
+                continue
+            self.tick()
+            next_due = now + self.period_s
+
+    def stop(self) -> None:
+        """Stop ticking (idempotent).  In-flight actuation completes —
+        the tick lock is never held across ``stop`` itself, so a
+        concurrent ``FleetMonitorService.stop()``/``flush()`` cannot
+        deadlock against a mid-actuation tick."""
+        self._stop_evt.set()
+        if self.is_alive():
+            self.join(timeout=10)

@@ -1,0 +1,515 @@
+"""Control policies: one fused decision step for the whole fleet.
+
+The paper measures non-blocking service rates online so the run-time can
+*re-tune the application while it runs*; the policies here turn the
+gated (Q,) fleet estimates into actuation decisions.  Three policy
+families ride one evaluation:
+
+* **replicas** — how many copies of each consumer stage keep up with the
+  offered load (``ceil(headroom * lambda / mu)``, Gordon et al. / Li et
+  al., the same formula ``ParallelismController`` exposes);
+* **capacity** — the smallest queue capacity reaching ``target_frac`` of
+  saturation throughput (the analytic M/M/1/K / M/D/1/K inversion from
+  ``core.queueing``, shared with ``BufferAutotuner``);
+* **admission** — shed or defer offered load when a stream's service
+  rate collapses (below ``collapse_frac`` of its decayed peak, or below
+  the straggler threshold vs. the fleet median) while its queue runs
+  hot.
+
+Raw targets are deliberately *not* actions.  Re-tuning perturbs the
+system (the paper resizes sparingly, §V), so the decision step wraps the
+targets in a gating state machine — per-queue readiness, a confirmation
+counter (a change must be wanted ``confirm_ticks`` consecutive ticks),
+capacity hysteresis (the ``resize_factor`` band ``BufferAutotuner``
+uses), and a post-actuation cooldown — and the whole thing (targets +
+gates, every queue) is **one jitted dispatch per control tick**,
+cached per (config, block_q) with queue-axis padding exactly like
+``run_monitor_fleet`` so ragged fleets never retrace.
+
+The same jnp target functions back the *advisory* readouts
+(``Pipeline.recommended_replicas`` / ``Engine.recommended_queue_capacity``
+delegate to the policy objects below), so advice and actuation cannot
+disagree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import (BufferAutotuner, ParallelismController,
+                                   StragglerDetector)
+
+__all__ = [
+    "ControlConfig", "ControlState", "Decision",
+    "control_init", "control_decide", "control_decide_trace_count",
+    "ReplicaPolicy", "BufferPolicy", "AdmissionPolicy", "PolicySet",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlConfig:
+    """Static decision knobs (hashable: part of the jit cache key).
+
+    The replica / capacity knobs mirror ``ParallelismController`` and
+    ``BufferAutotuner`` so a policy built from existing controllers
+    decides exactly what the advisory APIs recommend.
+    """
+    # replicas (ParallelismController knobs)
+    headroom: float = 1.2
+    max_replicas: int = 64
+    # capacity (BufferAutotuner knobs)
+    target_frac: float = 0.99
+    resize_factor: float = 1.5
+    min_capacity: int = 4
+    max_capacity: int = 1 << 20
+    search_max_k: int = 1 << 16
+    # admission (shed/defer state machine)
+    collapse_frac: float = 0.5     # mu below this x decayed peak => collapsed
+    recover_frac: float = 0.75     # mu above this x peak re-opens the gate
+    occupancy_hi: float = 0.9      # queue fill fraction that arms shedding
+    occupancy_lo: float = 0.5      # fill fraction that (with recovery) reopens
+    straggler_frac: float = 0.8    # mu below this x fleet median => straggler
+    min_ready: int = 4             # streams needed before the median is used
+    peak_decay: float = 0.995      # per-tick decay of the tracked peak rate
+    # saturation escalation: a persistently full queue blocks the
+    # producer, so true demand is unobservable (the paper's Pr[WRITE]
+    # collapses and arrival periods are discarded) — the only sound
+    # move is multiplicative scale-up until demand becomes visible
+    saturation_frac: float = 0.8   # tail blocked fraction => saturated
+    saturation_growth: float = 2.0  # replica multiplier while saturated
+    # gating
+    confirm_ticks: int = 2         # consecutive agreeing ticks before acting
+    cooldown_ticks: int = 4        # ticks a queue rests after an actuation
+    block_q: int = 256             # queue-axis padding block (jit cache key)
+    # which policy legs are live (PolicySet sets these): a disabled
+    # leg's phantom decisions must not fire or burn cooldown — an
+    # admission-only engine under overload would otherwise have its
+    # resizes throttled by replica decisions nobody actuates
+    replica_enabled: bool = True
+    buffer_enabled: bool = True
+    admission_enabled: bool = True
+
+
+class ControlState(NamedTuple):
+    """Per-queue gating state carried across control ticks (jax arrays,
+    donated into each decision dispatch like ``FleetMonitorState``)."""
+    cooldown: jnp.ndarray      # (Q,) i32  ticks until the queue may act again
+    rep_agree: jnp.ndarray     # (Q,) i32  signed consecutive-want counter
+    cap_agree: jnp.ndarray     # (Q,) i32  signed consecutive-want counter
+    shedding: jnp.ndarray      # (Q,) bool admission gate currently shut
+    peak_mu: jnp.ndarray       # (Q,) f32  decayed peak service rate seen
+
+
+class Decision(NamedTuple):
+    """One control tick's verdict for every queue (numpy on readout)."""
+    target_replicas: jnp.ndarray   # (Q,) i32
+    scale_mask: jnp.ndarray        # (Q,) bool  apply target_replicas now
+    target_caps: jnp.ndarray       # (Q,) i32
+    resize_mask: jnp.ndarray       # (Q,) bool  apply target_caps now
+    shed: jnp.ndarray              # (Q,) bool  admission gate shut
+    straggler: jnp.ndarray         # (Q,) bool  below fleet-median threshold
+
+
+def control_init(cfg: ControlConfig, n: int) -> ControlState:
+    return ControlState(
+        cooldown=jnp.zeros((n,), jnp.int32),
+        rep_agree=jnp.zeros((n,), jnp.int32),
+        cap_agree=jnp.zeros((n,), jnp.int32),
+        shedding=jnp.zeros((n,), bool),
+        peak_mu=jnp.zeros((n,), jnp.float32),
+    )
+
+
+_TRACE_COUNT = [0]
+
+
+def control_decide_trace_count() -> int:
+    """(Re)trace count of the cached decision dispatch — the ragged-fleet
+    no-retrace regression hook, mirroring ``fleet_dispatch_trace_count``."""
+    return _TRACE_COUNT[0]
+
+
+# -- shared target functions (advice == actuation) ---------------------------
+#
+# Every formula below is written against an ``xp`` array namespace and
+# evaluated two ways from the SAME source: traced with xp=jnp into the
+# cached jitted dispatch (the accelerator contract), or executed
+# directly with xp=np (the host fast path — this box's ~150 us
+# per-dispatch XLA floor dwarfs the ~40 us the whole fleet's decision
+# costs in numpy).  Parity between the forms is regression-tested.
+
+def _replica_targets(cfg: ControlConfig, lam, mu, replicas, xp=jnp):
+    """``ParallelismController.replicas_fleet``, normalized by the live
+    replica count: the monitored ``mu`` is the *aggregate* consumption
+    rate of all current replicas, so one replica is worth
+    ``mu / replicas`` and the stage needs ``ceil(headroom * lam /
+    (mu / replicas))`` copies (identical to the scalar formula when
+    replicas == 1).  ``max_replicas`` when the rate is unobservable."""
+    mu_per = mu / xp.maximum(replicas.astype(xp.float32), 1.0)
+    n = xp.ceil(cfg.headroom * lam / xp.where(mu_per > 0, mu_per, 1.0))
+    n = xp.where(mu_per <= 0, cfg.max_replicas, n)
+    return xp.clip(n, 1, cfg.max_replicas).astype(xp.int32)
+
+
+def _capacity_targets(cfg: ControlConfig, lam, mu, cv2, current, xp=jnp):
+    """``optimal_buffer_size``'s answer in closed form: the smallest K
+    whose M/M/1/K (or, for cv2 < 0.5, M/D/1/K) accepted throughput
+    reaches ``target_frac * min(lam, mu)``.
+
+    The search in ``core.queueing`` brackets the monotone throughput
+    curve with ~33 gallop+bisect evaluations — fine per resize event,
+    but ~70 pow-heavy passes over (Q,) inside a per-tick decision (the
+    dominant 11 ms at Q=4096).  The blocking condition inverts exactly
+    instead: with f = target_frac, b = 1 - f*min(lam,mu)/lam and
+    x = rho^K, ``P_K <= b`` is linear in x, giving x* = (1-f)/(1-f*rho)
+    for rho < 1 and (1 - f/rho)/(1-f) for rho > 1, so
+
+        K* = ceil(log(x*) / log(rho))        (rho -> 1: K* = f/(1-f))
+
+    and the M/D/1/K case maps through its K_eff = 2K - 1 exponent
+    correction.  Agrees with the search everywhere except occasional
+    +/-1-slot float boundaries (regression-tested); unobservable-rate
+    queues keep their current capacity."""
+    f = cfg.target_frac
+    rho = lam / xp.where(mu > 0, mu, 1.0)
+    near1 = xp.abs(rho - 1.0) < 1e-6
+    # floor keeps the (masked-out) rho=0 lane finite so the numpy form
+    # computes warning-free; selected lanes are never floored
+    safe_rho = xp.where(near1, 0.5,
+                        xp.maximum(rho, 1e-30)).astype(xp.float32)
+    xstar = xp.where(rho < 1.0,
+                     (1.0 - f) / (1.0 - f * safe_rho),
+                     (1.0 - f / safe_rho) / (1.0 - f))
+    ke = xp.log(xstar) / xp.log(safe_rho)      # continuous exponent K
+    ke = xp.where(near1, f / (1.0 - f), ke)
+    k_mm = xp.ceil(ke)
+    k_md = xp.ceil((ke + 1.0) / 2.0)           # K_eff = 2K - 1
+    k = xp.where(cv2 >= 0.5, k_mm, k_md)
+    k = xp.clip(k, cfg.min_capacity, cfg.max_capacity)
+    return xp.where((lam > 0) & (mu > 0), k,
+                    current).astype(xp.int32)
+
+
+def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
+               ready, replicas, rep_basis, caps, cv2, occupancy,
+               saturated, scalable, fleet_med):
+    """The fused decision, once, against either array namespace."""
+    lam = lam.astype(xp.float32)
+    mu = mu.astype(xp.float32)
+    cv2 = cv2.astype(xp.float32)
+    occ = occupancy.astype(xp.float32)
+    # ready == the head (service-rate) estimate is usable; demand is
+    # usable only when the arrival leg also reports (a saturated
+    # queue blocks the producer, so lam goes dark under overload)
+    known = ready & (lam > 0)
+
+    # -- targets (identical math to the advisory readouts).  mu is
+    # normalized by rep_basis — the replica count in effect when the
+    # estimate was *produced*, not the current one: after a scale-up
+    # the consumer often starves (service rate unobservable), the
+    # estimate freezes, and dividing the frozen aggregate by the new
+    # replica count would spiral the target upward every tick.
+    rep_formula = _replica_targets(cfg, lam, mu, rep_basis, xp)
+    escalated = xp.clip(
+        xp.ceil(replicas.astype(xp.float32) * cfg.saturation_growth),
+        1, cfg.max_replicas).astype(xp.int32)
+    # saturated => demand is at least capacity and unobservable:
+    # escalate multiplicatively until the queue unblocks and the
+    # formula can take over (then any overshoot scales back down)
+    rep_t = xp.where(saturated & ready, escalated,
+                     xp.where(known, rep_formula, replicas))
+    cap_t = _capacity_targets(cfg, lam, mu, cv2, caps, xp)
+
+    # -- replica gating: confirmation counter + cooldown.  The leg is
+    #    statically off when the PolicySet has no replica policy, and
+    #    per-queue off for unscalable queues (e.g. the pipeline's sink
+    #    drain) — phantom wants there would only burn cooldown ---------
+    can_scale = scalable & cfg.replica_enabled
+    want_up = (rep_t > replicas) & (known | (saturated & ready)) \
+        & can_scale
+    want_dn = (rep_t < replicas) & known & ~saturated & can_scale
+    rep_agree = xp.where(
+        want_up, xp.maximum(state.rep_agree, 0) + 1,
+        xp.where(want_dn, xp.minimum(state.rep_agree, 0) - 1, 0))
+    scale = (xp.abs(rep_agree) >= cfg.confirm_ticks) \
+        & (state.cooldown <= 0)
+
+    # -- capacity gating: BufferAutotuner's hysteresis band, then the
+    #    same confirmation + cooldown schedule.  A saturated queue is
+    #    a replica problem, not a sizing problem: its stale rates
+    #    would advise shrinking a full queue (always rejected) -----------
+    ratio = cap_t.astype(xp.float32) \
+        / xp.maximum(caps.astype(xp.float32), 1.0)
+    outside = (ratio >= cfg.resize_factor) \
+        | (ratio <= 1.0 / cfg.resize_factor)
+    want_grow = known & outside & (cap_t > caps) & ~saturated \
+        & cfg.buffer_enabled
+    want_shrink = known & outside & (cap_t < caps) & ~saturated \
+        & cfg.buffer_enabled
+    cap_agree = xp.where(
+        want_grow, xp.maximum(state.cap_agree, 0) + 1,
+        xp.where(want_shrink, xp.minimum(state.cap_agree, 0) - 1, 0))
+    resize = (xp.abs(cap_agree) >= cfg.confirm_ticks) \
+        & (state.cooldown <= 0)
+
+    # -- admission: peak-collapse + fleet-median straggler signal
+    #    (the median of the ready rates arrives as an operand —
+    #    np.median's introselect beats a full XLA CPU sort ~30x, and a
+    #    scalar operand keeps the dispatch shape-stable) -----------------
+    peak = xp.maximum(state.peak_mu * cfg.peak_decay,
+                      xp.where(ready, mu, 0.0))
+    n_ready = xp.sum(ready)
+    straggler = ready & (n_ready >= cfg.min_ready) \
+        & (mu < cfg.straggler_frac * fleet_med)
+    collapsed = ready & (mu < cfg.collapse_frac * peak)
+    # a saturated queue whose replica leg is maxed out cannot grow
+    # its way back: shedding is the only lever left
+    exhausted = saturated & ready & (replicas >= cfg.max_replicas)
+    arm = (collapsed | straggler | exhausted) \
+        & (occ >= cfg.occupancy_hi)
+    recovered = (mu >= cfg.recover_frac * peak) & ~straggler \
+        & ~exhausted
+    disarm = recovered | (occ <= cfg.occupancy_lo)
+    shed = xp.where(state.shedding, ~disarm, arm) \
+        & cfg.admission_enabled
+
+    acted = scale | resize
+    cooldown = xp.where(acted, cfg.cooldown_ticks,
+                        xp.maximum(state.cooldown - 1, 0))
+    new_state = ControlState(
+        cooldown=cooldown.astype(xp.int32),
+        rep_agree=xp.where(scale, 0, rep_agree).astype(xp.int32),
+        cap_agree=xp.where(resize, 0, cap_agree).astype(xp.int32),
+        shedding=shed, peak_mu=peak.astype(xp.float32))
+    return new_state, Decision(rep_t, scale, cap_t, resize, shed,
+                               straggler)
+
+
+@functools.lru_cache(maxsize=None)
+def _decide_step(cfg: ControlConfig, donate: bool):
+    """Jitted fused decision step, cached per config.  Shape-polymorphic
+    through jit's shape cache: callers pad the queue axis to a
+    ``cfg.block_q`` multiple, so ragged fleets share one trace."""
+
+    def step(state: ControlState, **operands):
+        _TRACE_COUNT[0] += 1       # python body runs at trace time only
+        return _step_math(jnp, cfg, state, **operands)
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+_AUTO_IMPL: list = [None]
+
+
+def _auto_impl() -> str:
+    """numpy on CPU backends (the ~150 us per-dispatch XLA CPU floor
+    dwarfs the decision itself), jit wherever an accelerator backs
+    jax — the same host-vs-device split the monitor's rounds/pallas
+    forms make."""
+    if _AUTO_IMPL[0] is None:
+        _AUTO_IMPL[0] = ("numpy" if jax.default_backend() == "cpu"
+                         else "jit")
+    return _AUTO_IMPL[0]
+
+
+def control_decide(cfg: ControlConfig, state: ControlState, *,
+                   lam, mu, ready, replicas, caps, cv2=1.0, occupancy=0.0,
+                   rep_basis=None, saturated=None, scalable=None,
+                   impl: str = "auto", donate: bool = True
+                   ) -> tuple[ControlState, Decision]:
+    """Evaluate every policy for the whole fleet in one fused pass.
+
+    All per-queue operands are (Q,).  ``impl`` selects the execution
+    form of the *same* ``_step_math`` source: ``"jit"`` pads the queue
+    axis to a ``cfg.block_q`` multiple with never-ready rows so ragged
+    fleet sizes share one trace (padded rows decide nothing) and runs
+    the cached jitted dispatch; ``"numpy"`` executes it directly (the
+    host fast path); ``"auto"`` picks by jax backend.  ``rep_basis`` is
+    the per-queue replica count each ``mu`` estimate was measured at
+    (the ``ControlLoop`` tracks it; defaults to ``replicas``).
+    ``saturated`` marks queues whose producer end blocked persistently —
+    demand there is unobservable and the replica leg escalates
+    multiplicatively instead of trusting stale rates (default: none).
+    Under ``"jit"`` the ``state`` is donated by default — callers keep
+    only the returned state, exactly like the fleet monitor dispatch.
+    """
+    lam = np.asarray(lam, np.float32)
+    q = lam.shape[0]
+    if rep_basis is None:
+        rep_basis = replicas
+    if saturated is None:
+        saturated = np.zeros(q, bool)
+    if scalable is None:
+        scalable = np.ones(q, bool)
+    # fleet median of the ready service rates, for the straggler leg
+    # (numpy introselect off-dispatch: XLA CPU would sort, ~30x slower)
+    mu_np = np.asarray(mu, np.float32)
+    ready_np = np.asarray(ready, bool)
+    fleet_med = (float(np.median(mu_np[ready_np]))
+                 if ready_np.any() else 0.0)
+    if impl == "auto":
+        impl = _auto_impl()
+
+    if impl == "numpy":
+        def npa(a, dt):
+            a = np.asarray(a, dt)
+            return np.broadcast_to(a, (q,)) if a.ndim == 0 else a
+
+        st = ControlState(*(np.asarray(leaf) for leaf in state))
+        # masked-out lanes (mu <= 0 etc.) compute garbage by design and
+        # are discarded by the final where — same as under XLA, minus
+        # the numpy warnings
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return _step_math(
+                np, cfg, st, lam=lam, mu=npa(mu, np.float32),
+                ready=npa(ready, bool), replicas=npa(replicas, np.int32),
+                rep_basis=npa(rep_basis, np.int32),
+                caps=npa(caps, np.int32), cv2=npa(cv2, np.float32),
+                occupancy=npa(occupancy, np.float32),
+                saturated=npa(saturated, bool),
+                scalable=npa(scalable, bool),
+                fleet_med=np.float32(fleet_med))
+    if impl != "jit":
+        raise ValueError(f"bad impl {impl!r}")
+
+    b = cfg.block_q
+    rpad = -(-q // b) * b - q
+
+    def pad(a, fill=0):
+        a = jnp.asarray(a)
+        a = jnp.broadcast_to(a, (q,)) if a.ndim == 0 else a
+        return jnp.pad(a, (0, rpad), constant_values=fill) if rpad else a
+
+    operands = dict(
+        lam=pad(jnp.asarray(lam)), mu=pad(jnp.asarray(mu, jnp.float32)),
+        ready=pad(jnp.asarray(ready, bool), False),
+        replicas=pad(jnp.asarray(replicas, jnp.int32), 1),
+        rep_basis=pad(jnp.asarray(rep_basis, jnp.int32), 1),
+        caps=pad(jnp.asarray(caps, jnp.int32), 1),
+        cv2=pad(jnp.asarray(cv2, jnp.float32), 1.0),
+        occupancy=pad(jnp.asarray(occupancy, jnp.float32)),
+        saturated=pad(jnp.asarray(saturated, bool), False),
+        scalable=pad(jnp.asarray(scalable, bool), False),
+        fleet_med=jnp.float32(fleet_med))
+    state = ControlState(*(jnp.asarray(leaf) for leaf in state))
+    if rpad:
+        state = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, (0, rpad)), state)
+    state, dec = _decide_step(cfg, donate)(state, **operands)
+    if rpad:
+        state = jax.tree_util.tree_map(lambda a: a[:q], state)
+        dec = jax.tree_util.tree_map(lambda a: a[:q], dec)
+    return state, dec
+
+
+# -- policy objects: the advisory surface over the same math -----------------
+
+class ReplicaPolicy:
+    """Stage-duplication policy.  ``targets`` is the advisory readout;
+    the control loop's fused decision computes the identical jnp
+    expression, so ``Pipeline.recommended_replicas`` can never disagree
+    with what the loop actuates.  Knobs come from (and stay in sync
+    with) a ``ParallelismController``."""
+
+    def __init__(self, ctrl: Optional[ParallelismController] = None):
+        self.ctrl = ctrl or ParallelismController()
+
+    def config_kwargs(self) -> dict:
+        return {"headroom": self.ctrl.headroom,
+                "max_replicas": self.ctrl.max_replicas}
+
+    def targets(self, lam, mu, replicas=1) -> np.ndarray:
+        """(Q,) replica targets.  ``mu`` is the measured aggregate stage
+        rate; pass the live ``replicas`` it was measured at (default 1,
+        the scalar-formula case) so the per-copy rate normalizes.
+        Evaluated in numpy — an advisory poll must not pay eager XLA
+        dispatches; the jitted decision traces the same function."""
+        cfg = ControlConfig(**self.config_kwargs())
+        q = np.shape(np.asarray(lam))[0]
+        reps = np.broadcast_to(np.asarray(replicas, np.int32), (q,))
+        return _replica_targets(
+            cfg, np.asarray(lam, np.float32),
+            np.asarray(mu, np.float32), reps, np)
+
+
+class BufferPolicy:
+    """Queue-capacity policy over ``BufferAutotuner``'s analytic sizing
+    (and its hysteresis band, applied inside the fused decision)."""
+
+    def __init__(self, tuner: Optional[BufferAutotuner] = None):
+        self.tuner = tuner or BufferAutotuner()
+
+    def config_kwargs(self) -> dict:
+        t = self.tuner
+        return {"target_frac": t.target_frac,
+                "resize_factor": t.resize_factor,
+                "min_capacity": t.min_capacity,
+                "max_capacity": t.max_capacity}
+
+    def targets(self, lam, mu, current, cv2=1.0) -> np.ndarray:
+        cfg = ControlConfig(**self.config_kwargs())
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return _capacity_targets(
+                cfg, np.asarray(lam, np.float32),
+                np.asarray(mu, np.float32),
+                np.asarray(cv2, np.float32),
+                np.asarray(current, np.int32), np)
+
+
+class AdmissionPolicy:
+    """Admission gate policy: shed (reject now) or defer (block until
+    the gate reopens) when a stream's service rate collapses while its
+    queue runs hot.  The straggler leg shares ``StragglerDetector``'s
+    threshold semantics (below ``straggler_frac`` x fleet median)."""
+
+    def __init__(self, detector: Optional[StragglerDetector] = None, *,
+                 mode: str = "shed", collapse_frac: float = 0.5,
+                 recover_frac: float = 0.75, occupancy_hi: float = 0.9,
+                 occupancy_lo: float = 0.5):
+        if mode not in ("shed", "defer"):
+            raise ValueError(f"bad admission mode {mode!r}")
+        self.detector = detector or StragglerDetector()
+        self.mode = mode
+        self.collapse_frac = collapse_frac
+        self.recover_frac = recover_frac
+        self.occupancy_hi = occupancy_hi
+        self.occupancy_lo = occupancy_lo
+
+    def config_kwargs(self) -> dict:
+        return {"collapse_frac": self.collapse_frac,
+                "recover_frac": self.recover_frac,
+                "occupancy_hi": self.occupancy_hi,
+                "occupancy_lo": self.occupancy_lo,
+                "straggler_frac": self.detector.threshold,
+                "min_ready": self.detector.min_hosts}
+
+
+@dataclasses.dataclass
+class PolicySet:
+    """The policies one control loop evaluates (any may be None).  The
+    merged ``ControlConfig`` is the decision dispatch's cache key, so
+    every loop with the same knobs shares one compiled step."""
+    replica: Optional[ReplicaPolicy] = None
+    buffer: Optional[BufferPolicy] = None
+    admission: Optional[AdmissionPolicy] = None
+    confirm_ticks: int = 2
+    cooldown_ticks: int = 4
+    block_q: int = 256
+
+    def control_config(self) -> ControlConfig:
+        kw: dict = {"confirm_ticks": self.confirm_ticks,
+                    "cooldown_ticks": self.cooldown_ticks,
+                    "block_q": self.block_q,
+                    "replica_enabled": self.replica is not None,
+                    "buffer_enabled": self.buffer is not None,
+                    "admission_enabled": self.admission is not None}
+        for p in (self.replica, self.buffer, self.admission):
+            if p is not None:
+                kw.update(p.config_kwargs())
+        return ControlConfig(**kw)

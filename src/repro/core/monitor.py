@@ -447,6 +447,19 @@ def run_monitor_fleet(cfg: MonitorConfig, tc_seq, blocked_seq=None, *,
     return state, merged
 
 
+def gated_rate_arrays(cfg: MonitorConfig, epoch, count, mean, last,
+                      period_s: float = 1.0) -> np.ndarray:
+    """The readiness-gate formula on bare arrays: the last converged
+    q-bar, else the running q-bar once ``min_q_samples`` folds
+    accumulated, else 0 — one definition shared by the state readout
+    below and the monitoring service's harvest-time mirrors, so the
+    advisory and control-loop sense paths cannot drift."""
+    est = np.where(np.asarray(epoch) > 0, np.asarray(last),
+                   np.where(np.asarray(count) >= cfg.min_q_samples,
+                            np.asarray(mean), 0.0))
+    return est / period_s if period_s > 0 else np.zeros_like(est)
+
+
 def fleet_rate_readout(cfg: MonitorConfig, state: FleetMonitorState,
                        period_s: float = 1.0) -> np.ndarray:
     """Per-queue service-rate readout (items/s) with the Welford-count
@@ -458,13 +471,8 @@ def fleet_rate_readout(cfg: MonitorConfig, state: FleetMonitorState,
     never a raw partial-window sample, which is exactly the noise the
     paper's Algorithm 1 exists to filter out.  Unready queues report 0.
     """
-    epoch = np.asarray(state.epoch)
-    count = np.asarray(state.count)
-    mean = np.asarray(state.mean)
-    last = np.asarray(state.last_qbar)
-    est = np.where(epoch > 0, last,
-                   np.where(count >= cfg.min_q_samples, mean, 0.0))
-    return est / period_s if period_s > 0 else np.zeros_like(est)
+    return gated_rate_arrays(cfg, state.epoch, state.count, state.mean,
+                             state.last_qbar, period_s)
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,18 @@ Monitoring rides the fleet path (``FleetMonitorService`` +
 tile and Algorithm 1 advances in one fused dispatch per chunk, the same
 hot path ``streams.Pipeline`` uses — so an engine process serving many
 models/queues shares a single monitoring dispatch per tick.
+
+``control=True`` closes the admission loop: a ``repro.control``
+``ControlLoop`` watches the gated request-queue estimates and shuts an
+*admission gate* when the engine's service rate collapses (below the
+policy's fraction of its decayed peak, or below the straggler threshold
+vs. the fleet median when several engines share one loop) while the
+queue runs hot.  A shut gate **sheds** (``submit`` returns False
+immediately) or **defers** (``submit`` blocks until the gate reopens or
+the timeout lapses) per the ``AdmissionPolicy`` mode, and reopens
+through the same hysteresis state machine.  Queue capacity rides the
+``BufferPolicy`` leg of the same loop, and
+``recommended_queue_capacity()`` delegates to that very policy object.
 """
 
 from __future__ import annotations
@@ -22,13 +34,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.control import (AdmissionPolicy, BufferPolicy, ControlLog,
+                           ControlLoop, PolicySet)
+from repro.core.controller import BufferAutotuner
 from repro.core.monitor import MonitorConfig
-from repro.core.queueing import optimal_buffer_size
 from repro.models.api import Model
 from repro.streams import (CounterArena, FleetMonitorService,
                            FleetMonitorThread, InstrumentedQueue)
 
-__all__ = ["Request", "ServeConfig", "Engine"]
+__all__ = ["Request", "ServeConfig", "Engine", "AdmissionGate"]
 
 
 @dataclasses.dataclass
@@ -48,12 +62,82 @@ class ServeConfig:
     queue_capacity: int = 64
 
 
+class AdmissionGate:
+    """The actuated admission state: open admits, shut sheds or defers.
+
+    The gate itself is dumb on purpose — *when* it moves is the
+    ``AdmissionPolicy``'s call (made inside the control loop's fused
+    decision step); the gate only enforces the verdict on ``submit``.
+    """
+
+    def __init__(self, mode: str = "shed"):
+        if mode not in ("shed", "defer"):
+            raise ValueError(f"bad admission mode {mode!r}")
+        self.mode = mode
+        self._open = threading.Event()
+        self._open.set()
+        self.shed_count = 0      # submits rejected while shut
+        self.defer_count = 0     # submits that waited on a shut gate
+
+    @property
+    def shedding(self) -> bool:
+        return not self._open.is_set()
+
+    def set_shed(self, shed: bool) -> None:
+        if shed:
+            self._open.clear()
+        else:
+            self._open.set()
+
+    def allow(self, timeout: float) -> bool:
+        """Gate one submit.  ``shed`` rejects immediately while shut;
+        ``defer`` blocks until the gate reopens or the timeout lapses."""
+        if self._open.is_set():
+            return True
+        if self.mode == "shed":
+            self.shed_count += 1
+            return False
+        self.defer_count += 1
+        return self._open.wait(timeout)
+
+
+class _EngineActuator:
+    """``ControlLoop`` adapter for one engine (a single-queue fleet)."""
+
+    def __init__(self, eng: "Engine"):
+        self.eng = eng
+
+    def replicas(self) -> np.ndarray:
+        return np.ones(1, np.int64)
+
+    def capacities(self) -> np.ndarray:
+        return np.array([self.eng.queue.capacity], np.int64)
+
+    def occupancy(self) -> np.ndarray:
+        q = self.eng.queue
+        return np.array([len(q) / max(q.capacity, 1)])
+
+    def scale(self, i: int, n: int) -> str:
+        return "noop"              # engine replicas live above this layer
+
+    def resize(self, i: int, cap: int) -> str:
+        return ("applied" if self.eng.queue.resize(int(cap))
+                else "rejected")
+
+    def admit(self, i: int, shed: bool) -> str:
+        self.eng.gate.set_shed(shed)
+        return "applied"
+
+
 class Engine:
     """Continuous-batching engine (static batch per generation round)."""
 
     def __init__(self, model: Model, params, scfg: ServeConfig,
                  monitor_cfg: Optional[MonitorConfig] = None,
-                 arena: Optional[CounterArena] = None):
+                 arena: Optional[CounterArena] = None,
+                 control: bool = False,
+                 admission: Optional[AdmissionPolicy] = None,
+                 control_log: Optional[ControlLog] = None):
         self.model = model
         self.params = params
         self.scfg = scfg
@@ -66,6 +150,19 @@ class Engine:
             monitor_cfg or MonitorConfig(window=16, min_q_samples=16),
             period_s=10e-3, chunk_t=16, ends="both")
         self.monitor_thread = FleetMonitorThread(self.fleet)
+        # capacity advice and (under control=True) capacity actuation
+        # share this policy object — they cannot disagree
+        self.buffer_policy = BufferPolicy(
+            BufferAutotuner(current=scfg.queue_capacity))
+        self.admission_policy = admission or AdmissionPolicy()
+        self.gate = AdmissionGate(self.admission_policy.mode)
+        self.control: Optional[ControlLoop] = None
+        if control:
+            self.control = ControlLoop(
+                self.fleet,
+                PolicySet(buffer=self.buffer_policy,
+                          admission=self.admission_policy),
+                _EngineActuator(self), log=control_log)
         self._stop = threading.Event()
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._prefill = jax.jit(model.prefill)
@@ -74,16 +171,29 @@ class Engine:
 
     # ---------------- client API --------------------------------------------
     def submit(self, req: Request, timeout: float = 10.0) -> bool:
-        return self.queue.push(req, timeout=timeout)
+        """Enqueue one request.  Returns False when the request queue is
+        full past the timeout — or, with the control loop shedding,
+        immediately (mode 'shed') / after waiting out a shut admission
+        gate (mode 'defer').  One deadline covers both waits: time spent
+        deferring on the gate is not paid again at the queue."""
+        deadline = time.monotonic() + timeout
+        if not self.gate.allow(timeout):
+            return False
+        return self.queue.push(
+            req, timeout=max(deadline - time.monotonic(), 0.0))
 
     def start(self):
         self.monitor_thread.start()
+        if self.control is not None:
+            self.control.start()
         self._worker.start()
         return self
 
     def stop(self):
         self._stop.set()
         self._worker.join(timeout=30)
+        if self.control is not None:
+            self.control.stop()
         self.monitor_thread.stop()
 
     # ---------------- engine loop --------------------------------------------
@@ -147,11 +257,20 @@ class Engine:
 
     # ---------------- monitor-driven tuning ---------------------------------
     def recommended_queue_capacity(self) -> int:
-        lam = float(self.fleet.arrival_rates()[0])
-        mu = float(self.fleet.service_rates()[0])
-        if lam <= 0 or mu <= 0:
-            return self.queue.capacity
-        return optimal_buffer_size(lam, mu, target_frac=0.99)
+        """Analytic capacity advice, delegated to the same
+        ``BufferPolicy`` a ``control=True`` engine's loop actuates —
+        advice and actuation share one implementation.  Unobservable
+        rates (pre-convergence gate) keep the current capacity."""
+        lam = self.fleet.arrival_rates()
+        mu = self.fleet.service_rates()
+        return int(self.buffer_policy.targets(
+            lam, mu, current=[self.queue.capacity])[0])
+
+    def admission_state(self) -> dict:
+        """Gate readout: shedding flag, mode, shed/defer counters."""
+        g = self.gate
+        return {"shedding": g.shedding, "mode": g.mode,
+                "shed_count": g.shed_count, "defer_count": g.defer_count}
 
     def service_rate(self) -> float:
         """Requests/s from the fleet state, readiness-gated: 0 until the

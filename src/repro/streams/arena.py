@@ -26,6 +26,19 @@ Slots are recycled: an ``EndStats`` returns its slot when explicitly
 collected, so churning fleets reuse low slots instead of growing the
 arena without bound.  A released end must no longer be written — its
 slot may already back a new queue.
+
+Long-lived churning fleets fragment: retiring the middle of a
+co-allocated run leaves holes, and every service whose slots are no
+longer one contiguous ascending run falls off the slice fast path onto
+the gather path.  The arena therefore *defragments on retire*: when the
+live-slot span's hole fraction passes ``defrag_threshold`` the live
+ends are compacted (order-preserving) into the lowest slots and every
+view is rebound, growth-style — fresh arrays are installed so an
+increment racing the move lands on the abandoned arrays and is dropped,
+never misattributed (the same benign single-period race as ``_grow``).
+``layout_version`` is bumped on every slot move; monitoring services
+compare it each tick and re-derive their slot index (and slice-ness)
+when it changes.
 """
 
 from __future__ import annotations
@@ -61,7 +74,14 @@ class EndStats:
 
     def _bind(self, arena: "CounterArena", slot: int) -> None:
         """(Re)point the view at the arena's current arrays — called at
-        attach time and again whenever the arena grows."""
+        attach time and again on arena growth or defragmentation.
+
+        Write order is a contract with the lock-free hot paths: ``_slot``
+        first, array refs after.  Readers load the array ref before the
+        slot, so a read pair torn by a concurrent rebind always indexes
+        the *abandoned* array (a dropped increment — the paper's benign
+        single-period race) and can never land a count in another live
+        end's cell of the fresh array."""
         self._arena = arena
         self._slot = slot
         self._tc = arena.tc
@@ -104,11 +124,12 @@ class EndStats:
     def sample_and_reset(self) -> tuple[float, bool, int]:
         """Monitor-side copy-and-zero of one end (non-locking) — the
         scalar form; fleet collection goes through the arena arrays."""
-        s = self._slot
-        tc, blk, nb = self._tc[s], self._blk[s], self._byt[s]
-        self._tc[s] = 0.0
-        self._blk[s] = False
-        self._byt[s] = 0
+        tc_a, blk_a, byt_a = self._tc, self._blk, self._byt
+        s = self._slot       # array refs before slot: see _bind
+        tc, blk, nb = tc_a[s], blk_a[s], byt_a[s]
+        tc_a[s] = 0.0
+        blk_a[s] = False
+        byt_a[s] = 0
         return float(tc), bool(blk), int(nb)
 
     def release(self) -> None:
@@ -121,6 +142,10 @@ class EndStats:
                 "cannot release a queue end while a live "
                 "FleetMonitorService monitors it")
         self._finalizer()
+        # explicit release is a structural op: recycle now and compact
+        # if the retire pushed fragmentation over the threshold (the
+        # GC-finalizer path defers both to the next structural op)
+        self._arena._after_release()
 
 
 class CounterArena:
@@ -129,12 +154,20 @@ class CounterArena:
     arrays — replaced wholesale on growth, with every attached
     ``EndStats`` view rebound under the lock."""
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256, *,
+                 defrag_threshold: float = 0.5):
         capacity = max(int(capacity), 1)
         self.lock = threading.Lock()
         self.tc = np.zeros(capacity)
         self.blocked = np.zeros(capacity, bool)
         self.bytes_count = np.zeros(capacity, np.int64)
+        # compact when holes exceed this fraction of the live span
+        # (<= 0 disables; 1.0 compacts only a fully-dead span)
+        self.defrag_threshold = float(defrag_threshold)
+        # bumped whenever live slots MOVE (defragmentation) — services
+        # re-derive their cached slot index when this changes.  Growth
+        # does not bump it: slots keep their numbers across _grow.
+        self.layout_version = 0
         # low slots first, so co-allocated fleets land contiguously
         self._free = list(range(capacity - 1, -1, -1))
         self._ends: dict[int, weakref.ref] = {}
@@ -158,6 +191,9 @@ class CounterArena:
     def _attach(self, end: EndStats) -> None:
         with self.lock:
             self._drain_pending_locked()
+            # GC-path retirements surface here: compact before
+            # allocating so new fleets co-allocate low and contiguous
+            self._maybe_defragment_locked()
             if not self._free:
                 self._grow()
             slot = self._free.pop()
@@ -202,6 +238,87 @@ class CounterArena:
             live = ref()
             if live is not None:
                 live._bind(self, slot)
+
+    # -- defragmentation ---------------------------------------------------
+    def _after_release(self) -> None:
+        """Structural follow-up to an explicit ``release()``: drain the
+        pending-free list and compact if the retire fragmented the live
+        span past the threshold."""
+        with self.lock:
+            self._drain_pending_locked()
+            self._maybe_defragment_locked()
+
+    def fragmentation(self) -> float:
+        """Hole fraction of the live-slot span: 0.0 when the live slots
+        are exactly 0..n-1 (every co-allocated service sees a slice),
+        approaching 1.0 as retirements hollow the span out."""
+        with self.lock:
+            self._drain_pending_locked()
+            return self._fragmentation_locked()
+
+    def _fragmentation_locked(self) -> float:
+        if not self._ends:
+            return 0.0
+        span = max(self._ends) + 1
+        return 1.0 - len(self._ends) / span
+
+    def defragment(self) -> bool:
+        """Compact live slots to 0..n-1 now (order-preserving); returns
+        True if any slot moved.  Runs automatically on explicit release
+        and on attach when ``fragmentation() >= defrag_threshold``."""
+        with self.lock:
+            self._drain_pending_locked()
+            return self._defragment_locked()
+
+    def _maybe_defragment_locked(self) -> None:
+        if (self.defrag_threshold > 0.0
+                and self._fragmentation_locked() >= self.defrag_threshold):
+            self._defragment_locked()
+
+    def _defragment_locked(self) -> bool:
+        """Order-preserving compaction (lock held).  Installs fresh
+        arrays like ``_grow`` so a cell increment racing the move lands
+        on the abandoned arrays and is dropped — never misattributed to
+        a slot's next owner.  Every live end is materialized as a STRONG
+        reference up front: an end whose weakref already died (finalizer
+        not yet fired) is unmovable — its finalizer will release its
+        *recorded* slot number — so compaction backs off and retries
+        after that finalizer lands; the strong refs pin everything else
+        alive through the whole move, closing the die-mid-compaction
+        window."""
+        live = sorted(self._ends)
+        ends = []
+        for slot in live:
+            end = self._ends[slot]()
+            if end is None:
+                return False
+            ends.append(end)
+        target = {s: t for t, s in enumerate(live)}
+        if all(s == t for s, t in target.items()):
+            return False
+        cap = self.capacity
+        arrays = {}
+        for name in ("tc", "blocked", "bytes_count"):
+            old = getattr(self, name)
+            arrays[name] = (old, np.zeros(cap, old.dtype))
+        for slot in live:
+            t = target[slot]
+            for old, new in arrays.values():
+                new[t] = old[slot]
+        for name, (_, new) in arrays.items():
+            setattr(self, name, new)
+        new_ends: dict[int, weakref.ref] = {}
+        for slot, end in zip(live, ends):
+            t = target[slot]
+            end._finalizer.detach()
+            end._finalizer = weakref.finalize(end, self._release_slot, t)
+            end._bind(self, t)
+            new_ends[t] = self._ends[slot]
+        self._ends = new_ends
+        self._free = [s for s in range(cap - 1, -1, -1)
+                      if s not in new_ends]
+        self.layout_version += 1
+        return True
 
 
 _DEFAULT: Optional[CounterArena] = None

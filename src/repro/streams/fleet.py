@@ -48,6 +48,15 @@ replicas.  Estimates come back through the Welford-count-gated
 ``service_rates()`` / ``arrival_rates()`` readouts and the batched
 ``on_fleet(indices, rates)`` convergence callback (a scalar per-stream
 ``on_converged(i, rate)`` is kept for compatibility).
+
+Lock ordering (deadlock audit, also see ``control.loop``): the
+collector tick takes ``self._lock`` then ``arena.lock`` and releases
+both before firing callbacks; readouts take ``self._lock`` alone;
+``queue._resize_lock`` and ``Stage._stop_lock`` are leaves never held
+while acquiring either.  A ``ControlLoop`` tick mid-actuation holds
+only its own lock plus (briefly) a leaf, so ``stop()``/``flush()`` from
+any thread serialize cleanly against it — they can interleave with an
+actuation but never deadlock or observe a half-written staging row.
 """
 
 from __future__ import annotations
@@ -61,7 +70,7 @@ import numpy as np
 from repro.core.controller import DistributionClassifier
 from repro.core.monitor import (FleetMonitorState, MonitorConfig,
                                 fleet_monitor_init, fleet_rate_readout,
-                                run_monitor_fleet)
+                                gated_rate_arrays, run_monitor_fleet)
 from repro.streams.arena import default_arena
 from repro.streams.queue import InstrumentedQueue
 
@@ -132,7 +141,15 @@ class FleetMonitorService:
         # would hand it to a new owner whose counters we then zero
         for end in self._end_stats:
             end._pins.add(self)
-        slots = np.array([end.slot for end in self._end_stats], np.intp)
+        # slot numbers and layout_version must be one consistent read:
+        # a concurrent defragmentation (another pipeline churning the
+        # shared default arena) moving slots between the two would leave
+        # us gathering the old cells while already holding the new
+        # version, so the tick-time rebind check could never fire
+        with self._arena.lock:
+            slots = np.array([end.slot for end in self._end_stats],
+                             np.intp)
+            self._layout_version = self._arena.layout_version
         # internal row order = slot-sorted: row r stages the stream
         # _stream_of_row[r], stream i lives at row _row_of_stream[i].
         # A co-allocated fleet's sorted slots form one contiguous run,
@@ -141,13 +158,7 @@ class FleetMonitorService:
         self._stream_of_row = perm
         self._row_of_stream = np.argsort(perm, kind="stable")
         sorted_slots = slots[perm]
-        if s and np.array_equal(sorted_slots,
-                                np.arange(sorted_slots[0],
-                                          sorted_slots[0] + s)):
-            self._slots = slice(int(sorted_slots[0]),
-                                int(sorted_slots[0]) + s)
-        else:
-            self._slots = sorted_slots
+        self._slots = self._slice_or_index(sorted_slots)
 
         self._state: FleetMonitorState = fleet_monitor_init(self.cfg, s)
         # pinned double-buffered (chunk_t, S) staging, row-major so each
@@ -160,14 +171,47 @@ class FleetMonitorService:
         self._col = 0
         self._pending = False          # a dispatch awaits harvest
         self._epochs = np.zeros((s,), np.int64)
+        # numpy mirrors of the gate leaves, refreshed at harvest time:
+        # the control loop's sense step reads these instead of paying
+        # per-tick jax->host conversions (estimates only move when a
+        # dispatch harvests anyway)
+        self._count_np = np.zeros((s,))
+        self._mean_np = np.zeros((s,))
+        self._qbar_np = np.zeros((s,))
+        self._nblk_np = np.zeros((s,), np.int64)
+        self._ntot_np = np.zeros((s,), np.int64)
         self.dispatches = 0
         # per-queue service-process moments (cv^2 feeds buffer sizing)
         self.classifier = DistributionClassifier(n_streams=q)
         self._lock = threading.Lock()
         self._last_t: Optional[float] = None   # set on first sample()
+        self._stopped = False
 
     def __len__(self) -> int:
         return len(self.queues)
+
+    @staticmethod
+    def _slice_or_index(sorted_slots: np.ndarray):
+        """A contiguous ascending slot run collapses the per-tick
+        gather/zero to plain slice views; anything else gathers."""
+        s = len(sorted_slots)
+        if s and np.array_equal(sorted_slots,
+                                np.arange(sorted_slots[0],
+                                          sorted_slots[0] + s)):
+            return slice(int(sorted_slots[0]), int(sorted_slots[0]) + s)
+        return sorted_slots
+
+    def _rebind_slots_locked(self) -> None:
+        """Re-derive the cached slot index after the arena moved slots
+        (defragmentation).  Called with ``arena.lock`` held, so the new
+        layout cannot shift again mid-rebind.  Compaction is
+        order-preserving, so the public<->row permutation is invariant —
+        only the slot numbers (and slice-ness) change; a fleet that
+        regained contiguity rides the slice fast path from this tick on.
+        """
+        slots = np.array([end.slot for end in self._end_stats], np.intp)
+        self._slots = self._slice_or_index(slots[self._stream_of_row])
+        self._layout_version = self._arena.layout_version
 
     def warmup(self) -> None:
         """Compile the fused dispatch on a throwaway state (same padded
@@ -185,9 +229,12 @@ class FleetMonitorService:
         # discard whatever the queues accumulated during the compile:
         # the first real tick must not fold a multi-second interval as
         # if it were one nominal period
-        arena, idx = self._arena, self._slots
+        arena = self._arena
         with self._lock:
             with arena.lock:
+                if arena.layout_version != self._layout_version:
+                    self._rebind_slots_locked()
+                idx = self._slots
                 arena.tc[idx] = 0.0
                 arena.blocked[idx] = False
                 arena.bytes_count[idx] = 0
@@ -207,8 +254,10 @@ class FleetMonitorService:
         if self.scale_to_period and realized is not None and realized > 0:
             scale = self.period_s / realized
         emit = ()
-        arena, idx = self._arena, self._slots
+        arena = self._arena
         with self._lock:
+            if self._stopped:
+                return False
             col = self._col
             tc_row = self._tc[col]
             blk_row = self._blocked[col]
@@ -220,6 +269,9 @@ class FleetMonitorService:
             # structural growth; cell increments stay lock-free (the
             # paper's tolerated single-period race).
             with arena.lock:
+                if arena.layout_version != self._layout_version:
+                    self._rebind_slots_locked()   # slots moved (defrag)
+                idx = self._slots
                 np.multiply(arena.tc[idx], scale, out=tc_row)
                 np.copyto(blk_row, arena.blocked[idx])
                 arena.tc[idx] = 0.0
@@ -233,7 +285,11 @@ class FleetMonitorService:
         return any_blocked
 
     def flush(self) -> None:
-        """Dispatch any buffered partial chunk and harvest everything."""
+        """Dispatch any buffered partial chunk and harvest everything.
+        Idempotent, and safe to call from any thread at any time — in
+        particular while a ``ControlLoop`` tick is mid-actuation (the
+        tick holds no service lock during actuation; see the module
+        docstring's lock-ordering audit)."""
         emits = []
         with self._lock:
             if self._col:
@@ -241,6 +297,20 @@ class FleetMonitorService:
             emits.append(self._harvest_locked())
         for emit in emits:
             self._fire(emit)
+
+    def stop(self) -> None:
+        """Flush, then permanently quiesce the service (idempotent).
+
+        After ``stop()`` the collector tick is a no-op, readouts keep
+        serving the final state, and the monitored ends are un-pinned so
+        their queues may ``close()`` and recycle their arena slots.
+        Safe concurrently with a control tick mid-actuation: actuators
+        touch only leaf locks, never the service lock this takes."""
+        self.flush()
+        with self._lock:
+            self._stopped = True
+        for end in self._end_stats:
+            end._pins.discard(self)
 
     def _dispatch_locked(self) -> tuple:
         cols = self._col
@@ -283,10 +353,18 @@ class FleetMonitorService:
         if not self._pending:
             return ()
         self._pending = False
-        epochs = np.asarray(self._state.epoch, np.int64)
-        ests = np.asarray(self._state.last_qbar)
+        st = self._state
+        epochs = np.asarray(st.epoch, np.int64)
+        ests = np.asarray(st.last_qbar)
         newly = np.nonzero(epochs > self._epochs)[0]    # staging rows
         self._epochs = epochs
+        # refresh the numpy gate mirrors (array replacement, not
+        # mutation — readers holding the old arrays stay consistent)
+        self._qbar_np = ests
+        self._count_np = np.asarray(st.count)
+        self._mean_np = np.asarray(st.mean)
+        self._nblk_np = np.asarray(st.n_blocked, np.int64)
+        self._ntot_np = np.asarray(st.n_total, np.int64)
         streams = self._stream_of_row[newly]
         return tuple((int(si), float(ests[r]) / self.period_s)
                      for si, r in zip(streams, newly))
@@ -326,6 +404,35 @@ class FleetMonitorService:
         q-bar once ``min_q_samples`` folds accumulated, else 0."""
         return fleet_rate_readout(self.cfg, self.state_snapshot(),
                                   self.period_s)
+
+    def gated_rates(self) -> np.ndarray:
+        """(S,) gated items/s in public stream order — heads 0..Q-1,
+        then tails when ``ends='both'``.
+
+        This is the control loop's sense step, so it is deliberately
+        lean: it reads the numpy gate mirrors refreshed at harvest time
+        (one fused dispatch behind, which is when estimates move at all)
+        and applies ``fleet_rate_readout``'s formula — no jax traffic,
+        no (S, window) ring materialization.  One call serves both rate
+        legs."""
+        with self._lock:
+            epoch, count = self._epochs, self._count_np
+            mean, last = self._mean_np, self._qbar_np
+        rates = gated_rate_arrays(self.cfg, epoch, count, mean, last,
+                                  self.period_s)
+        return rates[self._row_of_stream]
+
+    def blocked_counts(self) -> tuple[np.ndarray, np.ndarray]:
+        """(S,) cumulative ``(n_blocked, n_total)`` period counts in
+        public stream order, from the harvest-time mirrors.  The control
+        loop differences consecutive readings to detect *saturation*: a
+        tail leg blocking nearly every recent period means the producer
+        cannot push — demand exceeds capacity and is unobservable, the
+        paper's Pr[WRITE] -> 0 regime."""
+        with self._lock:
+            nb, nt = self._nblk_np, self._ntot_np
+        rows = self._row_of_stream
+        return nb[rows], nt[rows]
 
     def service_rates(self) -> np.ndarray:
         """(Q,) consumer non-blocking service rates, items/s (gated)."""

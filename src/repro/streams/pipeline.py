@@ -10,6 +10,16 @@ plane is vectorized to match: buffer autotuning and replica
 recommendations consume the (Q,) fleet estimate arrays directly instead
 of one scalar callback per queue.
 
+With ``control=True`` the loop is *closed*: a ``repro.control``
+``ControlLoop`` evaluates the replica/buffer policies against the gated
+fleet estimates once per fused dispatch and actuates them live —
+``scale_stage`` spawns or retires stage workers while items flow
+(retiring workers finish their in-flight item and exit; queued items
+stay for the surviving siblings, so nothing is lost), and queue
+capacities are re-sized through the same hysteresis the advisory path
+reports.  ``recommended_replicas()`` delegates to the *same* policy
+object the loop actuates, so advice and actuation cannot disagree.
+
 This is the substrate both the paper's applications (matrix multiply,
 Rabin-Karp — examples/streaming_apps.py) and the training data pipeline
 (repro.data) are built on.
@@ -18,16 +28,19 @@ Rabin-Karp — examples/streaming_apps.py) and the training data pipeline
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, Iterable, Optional
 
 import numpy as np
 
+from repro.control import (BufferPolicy, ControlLog, ControlLoop, PolicySet,
+                           ReplicaPolicy)
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig
 from repro.streams.arena import CounterArena, default_arena
 from repro.streams.fleet import FleetMonitorService
 from repro.streams.monitor_thread import FleetMonitorThread
-from repro.streams.queue import InstrumentedQueue
+from repro.streams.queue import InstrumentedQueue, _EMPTY
 
 __all__ = ["Stage", "Pipeline", "STOP"]
 
@@ -47,13 +60,31 @@ class Stage:
         self.replicas = replicas
         self.processed = 0
         self._stop_left = replicas
+        self._stop_seen = False
         self._stop_lock = threading.Lock()
 
 
 class _Worker(threading.Thread):
-    def __init__(self, stage: Stage, in_q, out_q, barrier_count=None):
+    """One replica of a stage.  ``retire.set()`` asks the worker to exit
+    between items: the in-flight item always completes and queued items
+    stay for the surviving siblings — scale-down never drops work."""
+
+    def __init__(self, stage: Stage, in_q, out_q):
         super().__init__(daemon=True, name=f"repro-{stage.name}")
         self.stage, self.in_q, self.out_q = stage, in_q, out_q
+        self.retire = threading.Event()
+
+    def _exit_retired(self) -> None:
+        """Leave the stage's STOP countdown coherent: a retired worker
+        will never pop the STOP it was counted for.  If STOP was already
+        in flight and we are the last worker out, forward it downstream
+        — the re-pushed token in our in-queue has no consumer left."""
+        st = self.stage
+        with st._stop_lock:
+            st._stop_left -= 1
+            last = st._stop_left == 0 and st._stop_seen
+        if last and self.out_q is not None:
+            self.out_q.push(STOP)
 
     def run(self):
         st = self.stage
@@ -62,11 +93,23 @@ class _Worker(threading.Thread):
                 self.out_q.push(item)
             self.out_q.push(STOP)
             return
+        backoff = 1e-6
         while True:
-            item = self.in_q.pop()
+            if self.retire.is_set():
+                self._exit_retired()
+                return
+            # non-blocking pop + backoff (instead of a blocking pop) so
+            # a retire request is honored within ~1 ms even when idle
+            item = self.in_q.try_pop(_EMPTY)
+            if item is _EMPTY:
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 1e-3)
+                continue
+            backoff = 1e-6
             if item is STOP:
                 # countdown: only the LAST replica forwards STOP downstream
                 with st._stop_lock:
+                    st._stop_seen = True
                     st._stop_left -= 1
                     last = st._stop_left == 0
                 if not last:
@@ -80,13 +123,58 @@ class _Worker(threading.Thread):
                 self.out_q.push(out)
 
 
+class _PipelineActuator:
+    """The ``ControlLoop`` adapter: queue index -> consumer stage.  All
+    methods return an outcome string the loop records in its
+    ``ControlLog`` (``'applied'`` | ``'rejected'`` | ``'noop'``)."""
+
+    def __init__(self, pipe: "Pipeline"):
+        self.pipe = pipe
+
+    def replicas(self) -> np.ndarray:
+        return self.pipe._live_replica_array()
+
+    def scalable(self) -> np.ndarray:
+        p = self.pipe
+        return np.array([i + 1 < len(p.stages) for i in
+                         range(len(p.queues))], bool)
+
+    def capacities(self) -> np.ndarray:
+        return np.array([q.capacity for q in self.pipe.queues], np.int64)
+
+    def occupancy(self) -> np.ndarray:
+        return np.array([len(q) / max(q.capacity, 1)
+                         for q in self.pipe.queues])
+
+    def scale(self, i: int, n: int) -> str:
+        if i + 1 >= len(self.pipe.stages):
+            return "noop"          # the sink drainer is not a stage
+        return self.pipe.scale_stage(i + 1, n)
+
+    def resize(self, i: int, cap: int) -> str:
+        p = self.pipe
+        ok = p.queues[i].resize(int(cap))
+        p._capacities[i] = p.queues[i].capacity
+        return "applied" if ok else "rejected"
+
+    def admit(self, i: int, shed: bool) -> str:
+        return "noop"              # pipelines shed at the source, not here
+
+
 class Pipeline:
-    """Linear pipeline with fleet monitoring + optional autotuning.
+    """Linear pipeline with fleet monitoring + optional closed-loop
+    elastic actuation.
 
     >>> pipe = Pipeline([Stage("src", source=range(1000)),
     ...                  Stage("work", fn=lambda x: x * 2)],
     ...                 capacity=64)
     >>> results = pipe.run_collect()
+
+    ``autotune=True`` keeps the PR-2 advisory-callback resizing;
+    ``control=True`` runs the full ``repro.control`` loop (replica +
+    buffer policies, hysteresis/cooldown, decision audit in
+    ``pipe.control.log``) and supersedes ``autotune`` — exactly one
+    party may own actuation.
     """
 
     def __init__(self, stages: list[Stage], capacity: int = 64,
@@ -94,10 +182,12 @@ class Pipeline:
                  monitor_cfg: Optional[MonitorConfig] = None,
                  base_period_s: float = 1e-3,
                  autotune: bool = False, chunk_t: int = 32,
-                 arena: Optional[CounterArena] = None):
+                 arena: Optional[CounterArena] = None,
+                 control: bool = False,
+                 policies: Optional[PolicySet] = None,
+                 control_log: Optional[ControlLog] = None):
         self.stages = stages
         self.queues: list[InstrumentedQueue] = []
-        self.autotune = autotune
         self.sink: list[Any] = []
         self._sink_lock = threading.Lock()
         # every link's counters back into one arena, so the collector
@@ -121,32 +211,123 @@ class Pipeline:
         self.tuner = BufferAutotuner(current=capacity)
         self._capacities = np.full(len(self.queues), capacity, np.int64)
         self.parallelism = ParallelismController()
+        # the advisory readouts and the control loop share these policy
+        # objects — recommended_replicas() can never disagree with what
+        # scale_stage is asked to apply
+        self.replica_policy = ReplicaPolicy(self.parallelism)
+        self.buffer_policy = BufferPolicy(self.tuner)
+        self._workers: list[list[_Worker]] = []
+        self._started = False
+        self._scale_lock = threading.Lock()
+        self.control: Optional[ControlLoop] = None
+        if control or policies is not None:
+            self.policies = policies if policies is not None else PolicySet(
+                replica=self.replica_policy, buffer=self.buffer_policy)
+            self.control = ControlLoop(self.fleet, self.policies,
+                                       _PipelineActuator(self),
+                                       log=control_log)
+            autotune = False       # the loop owns actuation
+        self.autotune = autotune
 
     def _on_fleet(self, idx: np.ndarray, rates: np.ndarray) -> None:
-        """Batched convergence callback: one vectorized control-plane
-        evaluation re-sizes every queue whose converged rates moved the
-        recommendation outside the hysteresis band."""
+        """Batched convergence callback (legacy advisory autotuning):
+        one vectorized control-plane evaluation re-sizes every queue
+        whose converged rates moved the recommendation outside the
+        hysteresis band — now through the tuner's actuator form, which
+        applies ``resize()`` itself and honors rejected shrinks."""
         if not self.autotune:
             return
         lam = self.fleet.arrival_rates()
         mu = self.fleet.service_rates()
-        new_caps, resized = self.tuner.maybe_resize_fleet(
-            lam, mu, self._capacities, cv2=self.fleet.cv2s())
-        for i in np.nonzero(resized)[0]:
-            if not self.queues[i].resize(int(new_caps[i])):
-                # rejected (shrink below queued items): keep tracking
-                # the real capacity so the shrink is retried once the
-                # queue drains
-                new_caps[i] = self._capacities[i]
-        self._capacities = new_caps
+        self._capacities, _, _ = self.tuner.actuate_fleet(
+            self.queues, lam, mu, self._capacities,
+            cv2=self.fleet.cv2s())
+
+    # elastic actuation ------------------------------------------------------
+    def _live_replica_array(self) -> np.ndarray:
+        """(Q,) live replicas of each queue's consumer (the sink drain
+        counts as 1) — the one expression both the actuator's sense
+        input and the advisory readout normalize by."""
+        return np.array(
+            [self.live_replicas(i + 1) if i + 1 < len(self.stages) else 1
+             for i in range(len(self.queues))], np.int64)
+
+    def live_replicas(self, stage: int | str) -> int:
+        """Current live (non-retiring) worker count of one stage."""
+        idx = self._stage_index(stage)
+        with self._scale_lock:
+            if not self._started:
+                return self.stages[idx].replicas
+            return len([w for w in self._workers[idx]
+                        if not w.retire.is_set()])
+
+    def _stage_index(self, stage: int | str) -> int:
+        if isinstance(stage, int):
+            return stage
+        for i, st in enumerate(self.stages):
+            if st.name == stage:
+                return i
+        raise KeyError(stage)
+
+    def scale_stage(self, stage: int | str, n: int) -> str:
+        """Live replica actuation: spawn or retire workers of one stage
+        while items flow.  Returns ``'applied'``, ``'noop'`` (already at
+        n) or ``'rejected'`` (source stages, n < 1, or the stage already
+        saw STOP — a late spawn would hang on a drained queue).
+
+        Retired workers finish their in-flight item and exit between
+        items; queued items remain for the surviving replicas, so
+        scale-down never loses work.  Before ``run_collect`` starts the
+        workers this just re-sets the stage's initial replica count."""
+        idx = self._stage_index(stage)
+        st = self.stages[idx]
+        n = int(n)
+        if st.source is not None or idx == 0 or n < 1:
+            return "rejected"
+        with self._scale_lock:
+            if not self._started:
+                if n == st.replicas:
+                    return "noop"
+                st.replicas = n
+                st._stop_left = n
+                return "applied"
+            ws = self._workers[idx]
+            live = [w for w in ws if not w.retire.is_set()]
+            cur = len(live)
+            if n == cur:
+                return "noop"
+            if n > cur:
+                # the STOP countdown and the spawn must agree on the
+                # live-worker count, so both move under the stop lock
+                with st._stop_lock:
+                    if st._stop_seen:
+                        return "rejected"
+                    st._stop_left += n - cur
+                    st.replicas = n
+                new = [_Worker(st, self.queues[idx - 1], self.queues[idx])
+                       for _ in range(n - cur)]
+                ws.extend(new)
+                for w in new:
+                    w.start()
+            else:
+                for w in live[n:]:
+                    w.retire.set()
+                ws[:] = [w for w in ws if not w.retire.is_set()]
+                with st._stop_lock:
+                    st.replicas = n
+            return "applied"
 
     def run_collect(self, timeout_s: float = 300.0) -> list:
-        workers: list[_Worker] = []
-        for i, st in enumerate(self.stages):
-            in_q = self.queues[i - 1] if i > 0 else None
-            out_q = self.queues[i]
-            for _ in range(st.replicas):
-                workers.append(_Worker(st, in_q, out_q))
+        with self._scale_lock:
+            self._workers = []
+            for i, st in enumerate(self.stages):
+                in_q = self.queues[i - 1] if i > 0 else None
+                out_q = self.queues[i]
+                st._stop_left = st.replicas
+                st._stop_seen = False
+                self._workers.append(
+                    [_Worker(st, in_q, out_q) for _ in range(st.replicas)])
+            self._started = True
 
         def drain():
             q = self.queues[-1]
@@ -159,10 +340,16 @@ class Pipeline:
 
         drainer = threading.Thread(target=drain, daemon=True)
         self.monitor.start()
+        if self.control is not None:
+            self.control.start()
+        with self._scale_lock:
+            workers = [w for ws in self._workers for w in ws]
         for w in workers:
             w.start()
         drainer.start()
         drainer.join(timeout_s)
+        if self.control is not None:
+            self.control.stop()
         self.monitor.stop()            # flushes the partial chunk
         return self.sink
 
@@ -191,9 +378,12 @@ class Pipeline:
     def recommended_replicas(self) -> dict:
         """Vectorized duplication decision (Gordon et al., Li et al.):
         ceil(headroom * offered load / stage service rate) for every
-        consumer stage in one fleet evaluation."""
+        consumer stage in one fleet evaluation.  Delegates to the same
+        ``ReplicaPolicy`` the control loop actuates — the advice here
+        IS the target a ``control=True`` pipeline converges to."""
         lam = self.fleet.arrival_rates()
         mu = self.fleet.service_rates()
-        reps = self.parallelism.replicas_fleet(lam, mu)
+        reps = self.replica_policy.targets(
+            lam, mu, replicas=self._live_replica_array())
         return {self.stages[i + 1].name: int(reps[i])
                 for i in range(len(self.stages) - 1)}

@@ -16,7 +16,10 @@ in locals (rebound by the arena on growth, never mid-call in a way that
 loses more than the benign single-period race) and use bitmask indexing
 when the capacity is a power of two.  Buffer/index updates on both ends
 serialize against a live controller ``resize`` through the queue's
-resize lock; the counter increments themselves stay lock-free.
+resize lock; the counter increments themselves stay lock-free.  Both
+ends re-validate their index under that lock, so the queue is also safe
+with *duplicated* producers/consumers — live replica scaling
+(``Pipeline.scale_stage``) pops one queue from several workers.
 """
 
 from __future__ import annotations
@@ -74,11 +77,17 @@ class InstrumentedQueue:
             i = (tail & mask) if mask >= 0 else (tail % self._cap)
             self._buf[i] = item
             self._tail = tail + 1
+        # array ref BEFORE slot: _bind writes the slot first, so any
+        # torn read pair lands in the abandoned pre-defrag array (a
+        # dropped sample — the benign race) and never in another live
+        # end's cell of the fresh array
+        tc_arr = end._tc
+        byt_arr = end._byt
         slot = end._slot
-        end._tc[slot] += 1.0
+        tc_arr[slot] += 1.0
         nbytes = self.item_bytes
         if nbytes:
-            end._byt[slot] += nbytes
+            byt_arr[slot] += nbytes
         return True
 
     def push(self, item, timeout: Optional[float] = None) -> bool:
@@ -102,16 +111,26 @@ class InstrumentedQueue:
             return default
         with self._resize_lock:
             head = self._head
+            if head >= self._tail:
+                # re-check under the lock: with a duplicated consumer
+                # stage (live replica scaling) a sibling may have taken
+                # the last item between the fast-path check and here —
+                # popping anyway would hand out an empty cell and push
+                # _head past _tail
+                end._blk[end._slot] = True
+                return default
             mask = self._mask
             i = (head & mask) if mask >= 0 else (head % self._cap)
             item = self._buf[i]
             self._buf[i] = None
             self._head = head + 1
+        tc_arr = end._tc     # array ref before slot (see try_push)
+        byt_arr = end._byt
         slot = end._slot
-        end._tc[slot] += 1.0
+        tc_arr[slot] += 1.0
         nbytes = self.item_bytes
         if nbytes:
-            end._byt[slot] += nbytes
+            byt_arr[slot] += nbytes
         return item
 
     def pop(self, timeout: Optional[float] = None):

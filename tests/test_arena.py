@@ -188,3 +188,92 @@ def test_default_arena_shared_across_queues():
     svc = FleetMonitorService([q1, q2], MonitorConfig(), period_s=1e-3,
                               chunk_t=4, ends="both")
     assert svc.n_streams == 4
+
+
+def test_fragmentation_metric_and_explicit_defrag():
+    """Satellite (PR 4): holes left by retired slots are measurable and
+    compactable; counter values ride along and views rebind."""
+    arena = CounterArena(capacity=16, defrag_threshold=2.0)  # manual only
+    qs = [InstrumentedQueue(2, arena=arena) for _ in range(4)]  # slots 0..7
+    assert arena.fragmentation() == 0.0
+    qs[3].head.tc = 5.0
+    qs[3].tail.bytes_count = 77
+    qs[1].close()
+    qs[2].close()
+    # live slots {0,1,6,7}: span 8, 4 live -> half the span is holes
+    assert arena.fragmentation() == pytest.approx(0.5)
+    v0 = arena.layout_version
+    assert arena.defragment() is True
+    assert arena.layout_version == v0 + 1
+    assert arena.fragmentation() == 0.0
+    assert sorted([qs[0].head.slot, qs[0].tail.slot,
+                   qs[3].head.slot, qs[3].tail.slot]) == [0, 1, 2, 3]
+    # values moved with the ends, and live views write to the new cells
+    assert qs[3].head.tc == 5.0 and qs[3].tail.bytes_count == 77
+    qs[3].head.tc += 1.0
+    assert arena.tc[qs[3].head.slot] == 6.0
+    assert arena.defragment() is False           # already compact
+    # retire-after-defrag recycles the *new* slot numbers (finalizers
+    # were rebuilt): allocating again reuses the low compacted range
+    qs[0].close()
+    q_new = InstrumentedQueue(2, arena=arena)
+    assert {q_new.head.slot, q_new.tail.slot} <= set(range(4))
+
+
+def test_auto_defrag_on_retire_regains_contiguity():
+    """Retiring most of a fleet auto-compacts once fragmentation passes
+    the threshold, so the survivors co-allocate low and a fresh service
+    over them rides the slice fast path again."""
+    arena = CounterArena(capacity=32, defrag_threshold=0.3)
+    old = [InstrumentedQueue(2, arena=arena) for _ in range(6)]
+    keep = old[5]                      # starts at slots 10, 11
+    assert keep.head.slot == 10
+    for q in old[:5]:
+        q.close()
+    assert keep.head.slot == 0 and keep.tail.slot == 1
+    assert arena.fragmentation() == 0.0
+    svc = FleetMonitorService([keep], MonitorConfig(), period_s=1e-3,
+                              chunk_t=4, ends="both",
+                              scale_to_period=False)
+    assert isinstance(svc._slots, slice)         # slice fast path
+
+
+def test_live_service_survives_defrag_mid_stream():
+    """Defrag moves monitored (pinned) slots; a live service re-derives
+    its slot index from layout_version on the next tick and the
+    estimates stay exact vs the scan oracle across the move."""
+    cfg = MonitorConfig()
+    rng = np.random.default_rng(9)
+    arena = CounterArena(capacity=32, defrag_threshold=2.0)
+    junk = [InstrumentedQueue(2, arena=arena) for _ in range(3)]
+    queues = [InstrumentedQueue(4, arena=arena) for _ in range(4)]
+    svc = FleetMonitorService(queues, cfg, period_s=1e-3, chunk_t=32,
+                              scale_to_period=False, ends="both")
+    assert svc._slots == slice(6, 14)
+
+    Q, T = 4, 480
+    tc = rng.poisson(rng.uniform(100, 400, (Q, 1)), (Q, T)).astype(float)
+    blocked = rng.random((Q, T)) < 0.05
+
+    def drive(t0, t1):
+        for t in range(t0, t1):
+            for qi, q in enumerate(queues):
+                q.head.tc = float(tc[qi, t])
+                q.head.blocked = bool(blocked[qi, t])
+            svc.sample()
+
+    drive(0, T // 2)
+    for q in junk:
+        q.close()                      # punch 6 holes below the fleet
+    assert arena.defragment() is True  # monitored slots move
+    drive(T // 2, T)
+    svc.flush()
+    assert svc._slots == slice(0, 8)   # slice fast path regained live
+
+    st, _ = run_monitor_fleet(cfg, tc, blocked, impl="scan", mode="state")
+    np.testing.assert_array_equal(svc.epochs()[:Q], np.asarray(st.epoch))
+    conv = svc.epochs()[:Q] > 0
+    assert conv.any()
+    got = svc.service_rates() * svc.period_s
+    want = np.asarray(st.last_qbar)
+    np.testing.assert_allclose(got[:Q][conv], want[conv], rtol=1e-4)

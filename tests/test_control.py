@@ -1,0 +1,515 @@
+"""Closed-loop elastic actuation (repro.control) — PR 4.
+
+Covers the fused decision step's gating state machine (pre-convergence
+quiescence, confirmation/hysteresis on noisy signals, cooldown,
+admission arm/disarm), advisory/actuation agreement, the no-retrace
+contract for ragged fleets, live stage-worker scaling (spawn + retire
+draining without loss), rejected-shrink retry, stop()/flush() safety
+mid-actuation, and the engine admission gate.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.control import (AdmissionPolicy, BufferPolicy, ControlConfig,
+                           ControlLog, ControlLoop, ControlRecord, PolicySet,
+                           ReplicaPolicy, control_decide,
+                           control_decide_trace_count, control_init)
+from repro.core.monitor import MonitorConfig
+from repro.streams import (CounterArena, FleetMonitorService,
+                           InstrumentedQueue, Pipeline, Stage)
+
+CFG = MonitorConfig(window=16, min_q_samples=16)
+
+
+class _FakeActuator:
+    """Records every actuation; outcomes are scriptable per-call."""
+
+    def __init__(self, q, caps=64, reps=1):
+        self.reps = np.full(q, reps, np.int64)
+        self.caps = np.full(q, caps, np.int64)
+        self.occ = np.zeros(q)
+        self.calls = []
+        self.resize_outcome = "applied"
+
+    def replicas(self):
+        return self.reps.copy()
+
+    def capacities(self):
+        return self.caps.copy()
+
+    def occupancy(self):
+        return self.occ
+
+    def scale(self, i, n):
+        self.calls.append(("scale", i, n))
+        self.reps[i] = n
+        return "applied"
+
+    def resize(self, i, cap):
+        self.calls.append(("resize", i, cap))
+        if self.resize_outcome == "applied":
+            self.caps[i] = cap
+        return self.resize_outcome
+
+    def admit(self, i, shed):
+        self.calls.append(("admit", i, shed))
+        return "applied"
+
+
+def _service(Q, chunk_t=16):
+    arena = CounterArena(2 * Q)
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(Q)]
+    svc = FleetMonitorService(queues, CFG, period_s=1e-3, chunk_t=chunk_t,
+                              scale_to_period=False, ends="both")
+    return svc, queues
+
+
+def _feed(svc, queues, head_tc, tail_tc, n):
+    """Replay n constant-rate periods through the batched collector."""
+    for _ in range(n):
+        for q in queues:
+            q.head.tc = float(head_tc)
+            q.tail.tc = float(tail_tc)
+        svc.sample()
+    svc.flush()
+
+
+def test_pre_convergence_gate_no_actuation():
+    """Edge case 1: before the Welford-count readiness gate opens, the
+    loop must not actuate — a handful of q-folds is a raw sample."""
+    svc, queues = _service(3)
+    act = _FakeActuator(3)
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy(),
+                                      buffer=BufferPolicy()), act)
+    _feed(svc, queues, head_tc=50.0, tail_tc=100.0, n=8)   # < min_q_samples
+    for _ in range(4):
+        loop.tick()
+    assert act.calls == []
+    assert len(loop.log) == 0
+
+
+def test_replica_scaling_actuates_after_confirmation():
+    """A converged 2x overload scales the consumer stage after
+    confirm_ticks agreeing decisions, and the decision is audited."""
+    svc, queues = _service(2)
+    act = _FakeActuator(2)
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy()), act)
+    _feed(svc, queues, head_tc=50.0, tail_tc=100.0, n=200)
+    assert (svc.gated_rates() > 0).all()
+    for _ in range(loop.cfg.confirm_ticks + 1):
+        loop.tick()
+    scales = [c for c in act.calls if c[0] == "scale"]
+    assert scales, "overloaded stages must be scaled"
+    # ceil(1.2 * 100/50) = 3 replicas
+    assert all(c[2] == 3 for c in scales)
+    recs = loop.log.by_policy("replicas")
+    assert recs and recs[0].outcome == "applied" and recs[0].value == 3
+
+
+def test_hysteresis_prevents_oscillation_on_noisy_signal():
+    """Edge case 2: a rate signal oscillating across a replica boundary
+    every tick never accumulates confirm_ticks agreeing decisions, so
+    the loop holds still instead of thrashing scale up/down."""
+    cfg = ControlConfig(confirm_ticks=2, cooldown_ticks=2, block_q=8)
+    state = control_init(cfg, 1)
+    fired = 0
+    for t in range(40):
+        # aggregate mu at 2 live replicas: per-copy mu/2, so the target
+        # ceil(1.2*120/(mu/2)) = ceil(288/mu) flips 3 <-> 2 every tick
+        mu = 100.0 if t % 2 == 0 else 150.0
+        state, dec = control_decide(
+            cfg, state, lam=[120.0], mu=[mu], ready=[True],
+            replicas=[2], caps=[64], donate=True)
+        fired += int(np.asarray(dec.scale_mask)[0]
+                     and int(np.asarray(dec.target_replicas)[0]) != 2)
+    assert fired == 0
+
+    # the same config DOES act on a persistent signal
+    state = control_init(cfg, 1)
+    fired = 0
+    for _ in range(6):
+        state, dec = control_decide(
+            cfg, state, lam=[120.0], mu=[45.0], ready=[True],
+            replicas=[2], caps=[64], donate=True)
+        fired += int(np.asarray(dec.scale_mask)[0])
+    assert fired >= 1
+
+
+def test_cooldown_spaces_consecutive_actuations():
+    """After an actuation the queue rests cooldown_ticks even though the
+    (changing) signal keeps confirming new targets every tick."""
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=4, block_q=8)
+    state = control_init(cfg, 1)
+    reps, fire_ticks = 1, []
+    for t in range(12):
+        # aggregate mu making ceil(1.2*lam*reps/mu) land on reps+1:
+        # the signal always wants one replica more than we have
+        mu = 1.2 * 100.0 * reps / (reps + 0.5)
+        state, dec = control_decide(
+            cfg, state, lam=[100.0], mu=[mu], ready=[True],
+            replicas=[reps], caps=[64], donate=True)
+        if bool(np.asarray(dec.scale_mask)[0]):
+            fire_ticks.append(t)
+            reps = int(np.asarray(dec.target_replicas)[0])
+    assert len(fire_ticks) >= 2
+    gaps = np.diff(fire_ticks)
+    assert (gaps >= cfg.cooldown_ticks).all()
+
+
+def test_admission_arm_disarm_state_machine():
+    """Admission leg: a collapsed-rate + hot-queue stream sheds, and the
+    gate reopens only through the recovery hysteresis."""
+    cfg = ControlConfig(confirm_ticks=1, block_q=8, min_ready=4)
+    Q = 6
+    state = control_init(cfg, Q)
+    lam = np.full(Q, 100.0)
+    mu = np.full(Q, 100.0)
+    occ = np.full(Q, 0.2)
+
+    def tick():
+        nonlocal state
+        state, dec = control_decide(
+            cfg, state, lam=lam, mu=mu, ready=np.ones(Q, bool),
+            replicas=np.ones(Q), caps=np.full(Q, 64), occupancy=occ,
+            donate=True)
+        return np.asarray(dec.shed), np.asarray(dec.straggler)
+
+    for _ in range(4):                  # build the peak at healthy rate
+        shed, _ = tick()
+    assert not shed.any()
+
+    mu[3] = 20.0                        # queue 3 collapses...
+    occ[3] = 0.95                       # ...while its queue runs hot
+    shed, straggler = tick()
+    assert shed[3] and not shed[[0, 1, 2, 4, 5]].any()
+    assert straggler[3]                 # below fleet-median threshold too
+
+    occ[3] = 0.8                        # still above occupancy_lo...
+    shed, _ = tick()
+    assert shed[3]                      # ...gate stays shut (hysteresis)
+
+    mu[3] = 100.0                       # service recovers
+    shed, _ = tick()
+    assert not shed[3]
+
+
+def test_advice_equals_actuation_targets():
+    """Satellite: the fused decision's targets are the very numbers the
+    advisory policy objects report — advice cannot disagree."""
+    rng = np.random.default_rng(5)
+    Q = 17
+    lam = rng.uniform(10, 500, Q)
+    mu = rng.uniform(10, 500, Q)
+    cv2 = rng.uniform(0.2, 2.0, Q)
+    caps = rng.integers(4, 256, Q)
+    rep_pol, buf_pol = ReplicaPolicy(), BufferPolicy()
+    ps = PolicySet(replica=rep_pol, buffer=buf_pol, block_q=32)
+    cfg = ps.control_config()
+    _, dec = control_decide(
+        cfg, control_init(cfg, Q), lam=lam, mu=mu,
+        ready=np.ones(Q, bool), replicas=np.ones(Q), caps=caps, cv2=cv2,
+        donate=True)
+    np.testing.assert_array_equal(np.asarray(dec.target_replicas),
+                                  rep_pol.targets(lam, mu))
+    np.testing.assert_array_equal(np.asarray(dec.target_caps),
+                                  buf_pol.targets(lam, mu, caps, cv2))
+
+
+def test_pipeline_advisory_delegates_to_policy():
+    pipe = Pipeline([Stage("src", source=range(10)),
+                     Stage("id", fn=lambda x: x)], capacity=8)
+    lam = pipe.fleet.arrival_rates()
+    mu = pipe.fleet.service_rates()
+    want = pipe.replica_policy.targets(lam, mu)
+    got = pipe.recommended_replicas()
+    assert got == {"id": int(want[0])}
+
+
+def test_ragged_fleets_share_one_decision_trace():
+    """The jitted decision form (the accelerator contract) pads the
+    queue axis to block_q, so ragged fleet sizes never retrace."""
+    cfg = ControlConfig(confirm_ticks=1, block_q=16,
+                        cooldown_ticks=7)          # fresh cache key
+    def run(q):
+        control_decide(cfg, control_init(cfg, q),
+                       lam=np.full(q, 100.0), mu=np.full(q, 50.0),
+                       ready=np.ones(q, bool), replicas=np.ones(q),
+                       caps=np.full(q, 64), impl="jit", donate=True)
+    base = control_decide_trace_count()
+    run(3)
+    warm = control_decide_trace_count()
+    assert warm > base
+    for q in (5, 9, 16, 2, 11):
+        run(q)
+    assert control_decide_trace_count() == warm
+
+
+def test_numpy_and_jit_decision_forms_agree():
+    """The host numpy fast path and the jitted dispatch execute the same
+    ``_step_math`` source — every decision and every state leaf must
+    match over a random driven sequence."""
+    rng = np.random.default_rng(3)
+    cfg = ControlConfig(confirm_ticks=2, cooldown_ticks=3, block_q=16,
+                        min_ready=4)
+    Q = 13
+    st_n, st_j = control_init(cfg, Q), control_init(cfg, Q)
+    for t in range(40):
+        ops = dict(lam=rng.uniform(0, 300, Q), mu=rng.uniform(0, 300, Q),
+                   ready=rng.random(Q) > 0.2,
+                   replicas=rng.integers(1, 8, Q),
+                   caps=rng.integers(4, 256, Q),
+                   cv2=rng.uniform(0.1, 2, Q), occupancy=rng.random(Q),
+                   saturated=rng.random(Q) > 0.8)
+        st_n, dn = control_decide(cfg, st_n, impl="numpy", **ops)
+        st_j, dj = control_decide(cfg, st_j, impl="jit", donate=False,
+                                  **ops)
+        for name, a, b in zip(dn._fields, dn, dj):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"tick {t} {name}")
+        for name, a, b in zip(st_n._fields, st_n, st_j):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6,
+                                       err_msg=f"tick {t} state {name}")
+
+
+def test_saturation_escalates_when_demand_unobservable():
+    """A queue whose producer end blocks persistently has unobservable
+    demand (lam gated to 0): the loop must still scale — multiplicative
+    escalation until the queue unblocks — instead of sitting quiet on a
+    dark signal."""
+    cfg = ControlConfig(confirm_ticks=2, cooldown_ticks=0, block_q=8,
+                        saturation_growth=2.0, max_replicas=16)
+    state = control_init(cfg, 1)
+    reps = 2
+    for _ in range(3):
+        state, dec = control_decide(
+            cfg, state, lam=[0.0], mu=[120.0], ready=[True],
+            replicas=[reps], caps=[64], saturated=[True], donate=True)
+        if bool(np.asarray(dec.scale_mask)[0]):
+            reps = int(np.asarray(dec.target_replicas)[0])
+    assert reps == 4                    # 2 -> ceil(2 * 2.0)
+    # without the saturation flag the same dark signal does nothing
+    state = control_init(cfg, 1)
+    for _ in range(4):
+        state, dec = control_decide(
+            cfg, state, lam=[0.0], mu=[120.0], ready=[True],
+            replicas=[2], caps=[64], saturated=[False], donate=True)
+        assert not np.asarray(dec.scale_mask)[0]
+
+
+def test_rejected_shrink_is_logged_and_retried():
+    """Edge case 3: a shrink the queue refuses (items still queued) is
+    recorded as rejected and retried after the cooldown, succeeding
+    once the queue drained."""
+    svc, queues = _service(1)
+    act = _FakeActuator(1, caps=64)
+    act.resize_outcome = "rejected"
+    ps = PolicySet(buffer=BufferPolicy(), confirm_ticks=1,
+                   cooldown_ticks=2)
+    loop = ControlLoop(svc, ps, act)
+    # converged low-traffic rates: tiny recommended capacity
+    _feed(svc, queues, head_tc=100.0, tail_tc=50.0, n=200)
+    for _ in range(3):
+        loop.tick()
+    rej = [r for r in loop.log.by_policy("capacity")
+           if r.outcome == "rejected"]
+    assert rej, "refused shrink must be audited"
+    assert act.caps[0] == 64            # capacity unchanged
+    act.resize_outcome = "applied"      # queue drained
+    for _ in range(2 + ps.cooldown_ticks):
+        loop.tick()
+    applied = [r for r in loop.log.by_policy("capacity")
+               if r.outcome == "applied"]
+    assert applied
+    assert act.caps[0] == applied[-1].value < 64
+
+
+def test_queue_shrink_below_occupancy_refused_live():
+    """The actuator honors the queue's never-drop contract: a shrink
+    below the queued item count returns rejected and keeps capacity."""
+    q = InstrumentedQueue(16, arena=CounterArena(4))
+    for i in range(12):
+        q.push(i)
+    assert q.resize(8) is False
+    assert q.capacity == 16
+    for _ in range(8):
+        q.pop()
+    assert q.resize(8) is True
+    assert [q.pop() for _ in range(4)] == [8, 9, 10, 11]
+
+
+def test_scale_down_cannot_close_monitored_queue():
+    """Edge case: monitored (pinned) ends refuse release while the
+    service lives — scale-down retires workers, never the queue —
+    and close() works after FleetMonitorService.stop() unpins."""
+    svc, queues = _service(2)
+    with pytest.raises(ValueError, match="monitors"):
+        queues[0].close()
+    svc.stop()
+    queues[0].close()                   # unpinned now: slot recycles
+
+
+def test_live_scale_up_and_retire_drain_without_loss():
+    """Edge case 4: spawn extra workers mid-run, then retire most of
+    them mid-run; every item is processed exactly once."""
+    N = 6000
+    pipe = Pipeline([Stage("src", source=range(N)),
+                     Stage("work", fn=lambda x: x * 2, replicas=3)],
+                    capacity=32, arena=CounterArena(16))
+    got = {"ok": False}
+
+    def driver():
+        time.sleep(0.05)
+        assert pipe.scale_stage("work", 5) == "applied"
+        time.sleep(0.05)
+        assert pipe.scale_stage(1, 1) == "applied"
+        got["ok"] = True
+
+    t = threading.Thread(target=driver, daemon=True)
+    t.start()
+    out = pipe.run_collect(timeout_s=120)
+    t.join(timeout=10)
+    assert got["ok"]
+    assert sorted(out) == [2 * i for i in range(N)]
+    assert pipe.live_replicas("work") == 1
+
+
+def test_scale_stage_guards():
+    pipe = Pipeline([Stage("src", source=range(4)),
+                     Stage("id", fn=lambda x: x)], capacity=8,
+                    arena=CounterArena(8))
+    assert pipe.scale_stage("src", 2) == "rejected"   # source stage
+    assert pipe.scale_stage("id", 0) == "rejected"    # n < 1
+    assert pipe.scale_stage("id", 1) == "noop"        # already there
+    assert pipe.scale_stage("id", 4) == "applied"     # pre-start intent
+    assert pipe.live_replicas("id") == 4
+    out = pipe.run_collect(timeout_s=60)
+    assert sorted(out) == list(range(4))
+
+
+def test_closed_loop_pipeline_runs_end_to_end():
+    """A control=True pipeline runs the full sense->decide->actuate
+    stack live (loop thread + fused decision + actuator adapter) and
+    still produces exact results."""
+    pipe = Pipeline([Stage("src", source=range(3000)),
+                     Stage("x3", fn=lambda x: x * 3)], capacity=64,
+                    base_period_s=1e-3, control=True, monitor_cfg=CFG)
+    assert pipe.autotune is False       # the loop owns actuation
+    out = pipe.run_collect(timeout_s=120)
+    assert sorted(out) == [3 * i for i in range(3000)]
+    # every audited decision carries a real outcome
+    assert all(r.outcome in ("applied", "rejected", "noop")
+               for r in pipe.control.log)
+
+
+def test_stop_flush_safe_during_actuation():
+    """Bugfix satellite: FleetMonitorService.stop()/flush() must be
+    callable while a control tick is mid-actuation — lock ordering
+    guarantees interleaving, not deadlock."""
+    svc, queues = _service(2)
+
+    class _SlowActuator(_FakeActuator):
+        def resize(self, i, cap):
+            time.sleep(2e-3)            # hold the actuation window open
+            return super().resize(i, cap)
+
+    act = _SlowActuator(2, caps=64)
+    loop = ControlLoop(svc, PolicySet(buffer=BufferPolicy(),
+                                      confirm_ticks=1, cooldown_ticks=0),
+                       act)
+    _feed(svc, queues, head_tc=100.0, tail_tc=50.0, n=200)
+
+    stop_err = []
+
+    def hammer():
+        try:
+            for _ in range(50):
+                svc.flush()
+                time.sleep(5e-4)
+            svc.stop()
+        except Exception as e:          # noqa: BLE001
+            stop_err.append(e)
+
+    t = threading.Thread(target=hammer, daemon=True)
+    t.start()
+    for _ in range(30):
+        loop.tick()
+    t.join(timeout=30)
+    assert not t.is_alive() and not stop_err
+    assert svc.sample() is False        # quiesced, not crashed
+
+
+def test_control_log_ring_wraps():
+    log = ControlLog(capacity=4)
+    for k in range(10):
+        log.append(ControlRecord(tick=k, t=0.0, queue=0, policy="replicas",
+                                 observed_lam=1.0, observed_mu=1.0,
+                                 action="scale", value=k,
+                                 outcome="applied"))
+    assert len(log) == 4 and log.total == 10
+    assert [r.value for r in log.records()] == [6, 7, 8, 9]
+    assert log.tail(2)[-1].value == 9
+    assert log.counts() == {"replicas/applied": 4}
+
+
+def test_engine_admission_gate_shed_and_defer():
+    from repro.serve.engine import AdmissionGate
+
+    g = AdmissionGate("shed")
+    assert g.allow(1.0)
+    g.set_shed(True)
+    assert g.shedding and not g.allow(1.0)
+    g.set_shed(False)
+    assert g.allow(1.0) and g.shed_count == 1
+
+    g = AdmissionGate("defer")
+    g.set_shed(True)
+    t0 = time.monotonic()
+    assert not g.allow(0.05)            # waited, then timed out
+    assert time.monotonic() - t0 >= 0.04
+
+    def reopen():
+        time.sleep(0.02)
+        g.set_shed(False)
+    threading.Thread(target=reopen, daemon=True).start()
+    assert g.allow(2.0)                 # deferred submit goes through
+    assert g.defer_count == 2
+
+
+def test_engine_control_loop_sheds_submits():
+    """serve.Engine + control=True: a shut gate makes submit() reject
+    immediately; reopening admits again.  (Gate transitions are driven
+    directly — the collapse scenario itself is exercised in the
+    control benchmark's scenario suite.)"""
+    from repro.serve import Engine, Request, ServeConfig
+
+    class _Cfg:
+        vocab_size = 16
+
+    class _FakeModel:
+        cfg = _Cfg()
+
+        def prefill(self, params, batch):
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tok, pos):
+            raise NotImplementedError
+
+    eng = Engine(_FakeModel(), None,
+                 ServeConfig(batch_size=2, max_seq=32, queue_capacity=8),
+                 control=True)
+    assert eng.control is not None
+    assert eng.admission_state()["shedding"] is False
+    req = Request(rid=0, tokens=np.zeros(4, np.int32))
+    assert eng.submit(req)
+    eng.gate.set_shed(True)
+    assert not eng.submit(Request(rid=1, tokens=np.zeros(4, np.int32)))
+    assert eng.admission_state()["shed_count"] == 1
+    eng.gate.set_shed(False)
+    assert eng.submit(Request(rid=2, tokens=np.zeros(4, np.int32)))
+    # capacity advice delegates to the loop's own BufferPolicy
+    assert eng.recommended_queue_capacity() == 8

@@ -43,8 +43,9 @@ import time
 
 import numpy as np
 
-from repro.control import (AdmissionPolicy, BufferPolicy, ControlLoop,
-                           PolicySet, ReplicaPolicy)
+from repro.control import (AdmissionPolicy, BufferPolicy, ControlGroup,
+                           ControlLoop, PolicySet, ReplicaPolicy,
+                           control_decide_trace_count)
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig, run_monitor_fleet
 from repro.streams import CounterArena, FleetMonitorService, InstrumentedQueue
@@ -401,6 +402,126 @@ def closed_loop_admission_collapse():
                   f"{shed_frac * 100:.0f}% load shed")
 
 
+def closed_loop_multi_tenant():
+    """Acceptance scenario (PR 5): ONE ``ControlGroup`` — one monitor
+    service, one loop, one shared arena — spans two pipeline tenants
+    with anti-correlated offered load plus one engine tenant, all
+    driven through the real collector/decision stack (sim tandems
+    behind the same actuator protocol the pipeline adapter speaks).
+
+    The loop must *rebalance* replicas between the pipelines as the
+    load alternates (escalation + formula up on the hot tenant, fresh
+    re-convergence down on the cooling one) and beat the per-tenant
+    static seed configuration by >= 1.5x sustained total throughput.
+    The engine tenant attaches mid-run and is churned (detach +
+    re-attach) to prove the decision dispatch never retraces across
+    ragged tenant membership (``control_decide_trace_count`` flat), and
+    its per-tenant policy mask (buffer+admission only) must keep the
+    replica leg away from it entirely."""
+    T = 2400 if _quick() else 4800
+    phase = 300
+    decide_every = 16
+    lam_hi, lam_lo, mu_r, r0, cap = 160.0, 40.0, 30.0, 2, 256
+    attach_c_at, churn_at = T // 3, T // 2
+
+    def lam_a(t):
+        return lam_hi if (t // phase) % 2 == 0 else lam_lo
+
+    def lam_b(t):
+        return lam_lo if (t // phase) % 2 == 0 else lam_hi
+
+    # -- static baseline: the seed configuration, never re-tuned -------
+    sims_s = [_SimTandem(10, lam_hi, mu_r, r0, cap),
+              _SimTandem(11, lam_lo, mu_r, r0, cap),
+              _SimTandem(12, 50.0, 60.0, 1, 64)]
+    for t in range(T):
+        sims_s[0].lam, sims_s[1].lam = lam_a(t), lam_b(t)
+        for sim in sims_s[:2]:
+            sim.step()
+        if t >= attach_c_at:
+            sims_s[2].step()
+    static_total = sum(s.served_total for s in sims_s[:2])
+
+    # -- closed loop: one group over all tenants -----------------------
+    arena = CounterArena(16)
+    # the probe cycle must fit inside a load phase (300 periods = ~18
+    # ticks) or an escalated tenant whose stale gated lam never
+    # re-converges could not decay before its load returns
+    group = ControlGroup(
+        PolicySet(replica=ReplicaPolicy(ParallelismController(
+                      max_replicas=16)),
+                  buffer=BufferPolicy(BufferAutotuner(current=64)),
+                  admission=AdmissionPolicy(),
+                  confirm_ticks=2, cooldown_ticks=4, block_q=8,
+                  probe_period_ticks=6, probe_window_ticks=2),
+        arena=arena, monitor_cfg=MCFG, period_s=PERIOD_S,
+        chunk_t=decide_every, scale_to_period=False, impl="jit")
+    sims = [_SimTandem(10, lam_hi, mu_r, r0, cap),
+            _SimTandem(11, lam_lo, mu_r, r0, cap),
+            _SimTandem(12, 50.0, 60.0, 1, 64)]
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(3)]
+    acts = [_SimActuator(sim) for sim in sims]
+    rep_only = PolicySet(replica=ReplicaPolicy(ParallelismController(
+        max_replicas=16)), probe_period_ticks=6, probe_window_ticks=2)
+    handles = [group.attach(([queues[i]], acts[i]), policies=rep_only,
+                            name=f"pipe_{'ab'[i]}") for i in range(2)]
+    eng_policies = PolicySet(buffer=BufferPolicy(BufferAutotuner(
+        current=64)), admission=AdmissionPolicy())
+    h_eng = None                      # attach() warms the decision jit
+    base_traces = control_decide_trace_count()
+    reps_trace = {"a": [], "b": []}
+    for t in range(T):
+        sims[0].lam, sims[1].lam = lam_a(t), lam_b(t)
+        if t == attach_c_at:
+            h_eng = group.attach(([queues[2]], acts[2]),
+                                 policies=eng_policies, name="engine")
+        if t == churn_at:                 # ragged-membership churn
+            group.detach(h_eng)
+            h_eng = group.attach(([queues[2]], acts[2]),
+                                 policies=eng_policies, name="engine")
+        live = sims[:2] + ([sims[2]] if h_eng is not None else [])
+        for sim, q in zip(live, queues):
+            acc, tail_blk, srv, head_blk = sim.step()
+            q.tail.tc, q.tail.blocked = acc, tail_blk
+            q.head.tc, q.head.blocked = srv, head_blk
+        group.service.sample()
+        if t % decide_every == decide_every - 1:
+            group.tick()
+            reps_trace["a"].append(sims[0].replicas)
+            reps_trace["b"].append(sims[1].replicas)
+    group.service.flush()
+    retraces = control_decide_trace_count() - base_traces
+    closed_total = sum(s.served_total for s in sims[:2])
+    ratio = closed_total / max(static_total, 1)
+    eng_scales = [r for r in group.log.records()
+                  if r.policy == "replicas" and r.queue == 2]
+    section = {
+        "periods": T, "phase_periods": phase,
+        "lam_antiphase": [lam_hi, lam_lo], "mu_r": mu_r,
+        "replicas_start": r0, "tenants": 3,
+        "attach_engine_at": attach_c_at, "churn_at": churn_at,
+        "closed_total_items": int(closed_total),
+        "static_total_items": int(static_total),
+        "closed_over_static": ratio,
+        "decide_retraces_across_churn": int(retraces),
+        "replicas_max": {k: int(max(v)) for k, v in reps_trace.items()},
+        "replicas_final": {k: int(v[-1]) for k, v in reps_trace.items()},
+        "engine_scale_actions": len(eng_scales),
+        "target": {"closed_over_static": 1.5, "decide_retraces": 0,
+                   "met": ratio >= 1.5 and retraces == 0
+                   and not eng_scales},
+    }
+    _update_report("multi_tenant", section)
+    group.service.stop()
+    rows = [f"control_mt/static,0,{static_total}_items",
+            f"control_mt/closed,0,{closed_total}_items",
+            f"control_mt/retraces,0,{retraces}"]
+    return rows, (f"multi-tenant rebalance: closed {ratio:.2f}x static "
+                  f"(target >=1.5x), {retraces} decision retraces across "
+                  f"attach/detach (target 0), engine scale actions = "
+                  f"{len(eng_scales)} (target 0)")
+
+
 def control_parity():
     """Actuation must not perturb estimation: replay the step-change
     closed-loop run's recorded head stream through the sequential scan
@@ -527,4 +648,4 @@ def control_tick_overhead():
 
 ALL = [closed_loop_step_change, closed_loop_slow_drift,
        closed_loop_bursty_arrivals, closed_loop_admission_collapse,
-       control_parity, control_tick_overhead]
+       closed_loop_multi_tenant, control_parity, control_tick_overhead]

@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
-# One-command smoke: tier-1 tests + the pipeline-integration benchmark
-# + the collector benchmark in quick mode.
+# One-command smoke: tier-1 tests + the pipeline-integration, collector
+# and control benchmarks in quick mode.  The control block gates the
+# closed-loop scenarios (step-change recovery, estimate parity, tick
+# overhead) and the multi-tenant scenario (one ControlGroup over three
+# tenants: >=1.5x rebalance recovery, zero decision-dispatch retraces
+# across tenant attach/detach, per-tenant leg masks honored).
 #
 #   scripts/smoke.sh
 #
@@ -57,14 +61,26 @@ rep = json.load(open("BENCH_control.json"))
 sc = rep["step_change"]
 ov = rep["overhead"]
 pa = rep["parity"]
+mt = rep["multi_tenant"]
 print(f"smoke: step-change closed loop = {sc['closed_over_static']:.1f}x "
       f"static (target >= 2x), {sc['closed_over_oracle'] * 100:.0f}% of "
       f"oracle (target >= 80%); control-tick overhead = "
       f"{ov['overhead_pct_of_monitor_tick']:.1f}% of a monitor tick "
       f"(target <= 10%); parity rel err = {pa['max_rel_err']:.2e}")
+print(f"smoke: multi-tenant rebalance = {mt['closed_over_static']:.2f}x "
+      f"per-tenant static (target >= 1.5x), "
+      f"{mt['decide_retraces_across_churn']} decision retraces across "
+      f"attach/detach (target 0), engine replica-leg actions = "
+      f"{mt['engine_scale_actions']} (target 0)")
 assert sc["closed_over_static"] >= 2.0, "closed loop below 2x static"
 assert sc["closed_over_oracle"] >= 0.8, "closed loop below 80% of oracle"
 assert ov["target"]["met"], "control-tick overhead above 10%"
 assert pa["ok"], "closed-loop estimate parity regression vs scan oracle"
+assert mt["closed_over_static"] >= 1.5, \
+    "multi-tenant rebalance below 1.5x static"
+assert mt["decide_retraces_across_churn"] == 0, \
+    "tenant churn retraced the decision dispatch"
+assert mt["engine_scale_actions"] == 0, \
+    "per-tenant leg mask leaked the replica leg onto the engine tenant"
 EOF
 echo "smoke: OK"

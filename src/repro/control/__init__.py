@@ -7,7 +7,11 @@ from repro.control.policy import (AdmissionPolicy, BufferPolicy,
 
 __all__ = [
     "ControlLog", "ControlRecord", "ControlLoop",
+    "ControlGroup", "CompositeActuator", "TenantHandle",
     "AdmissionPolicy", "BufferPolicy", "ReplicaPolicy", "PolicySet",
     "ControlConfig", "ControlState", "Decision",
     "control_decide", "control_decide_trace_count", "control_init",
 ]
+
+from repro.control.group import (CompositeActuator, ControlGroup,  # noqa: E402
+                                 TenantHandle)

@@ -34,7 +34,12 @@ released before deciding), then actuates (``queue._resize_lock`` /
 ``Stage._stop_lock``, each a leaf).  No actuator path re-enters the
 service, so ``FleetMonitorService.stop()``/``flush()`` from any other
 thread can only interleave between — never deadlock against — a tick
-mid-actuation.
+mid-actuation.  Multi-tenant attach/detach (``control.group``) follows
+the same order one level up: the group holds ``ControlLoop._lock``
+across the whole restructure — ``FleetMonitorService.attach/detach``
+(service lock -> arena lock) then ``_remap_locked`` — so a tick can
+never observe a service whose stream set and the loop's per-queue
+state arrays disagree.
 """
 
 from __future__ import annotations
@@ -67,7 +72,13 @@ class ControlLoop(threading.Thread):
         self.cfg = policies.control_config()
         self.log = log if log is not None else ControlLog()
         # one decision per fused monitor dispatch: estimates only move
-        # when a chunk lands, so deciding faster only chases noise
+        # when a chunk lands, so deciding faster only chases noise.
+        # ``FleetMonitorThread`` adapts ``service.period_s`` every tick,
+        # so a derived period is re-read each run() iteration — freezing
+        # it at construction would drift off the one-decision-per-
+        # dispatch cadence (chasing noise when T widens, starving when
+        # it narrows).  Only an explicit ``period_s`` stays fixed.
+        self._explicit_period = period_s is not None
         self.period_s = (period_s if period_s is not None
                          else service.period_s * service.chunk_t)
         self.min_sleep_s = min_sleep_s
@@ -90,10 +101,20 @@ class ControlLoop(threading.Thread):
         self._stop_evt = threading.Event()
 
     # -- sense -> decide -> actuate ---------------------------------------
+    def _current_period(self) -> float:
+        """The live tick period: the explicit override, or one decision
+        per fused monitor dispatch at the service's *current* adaptive
+        sampling period."""
+        if not self._explicit_period:
+            self.period_s = self.service.period_s * self.service.chunk_t
+        return self.period_s
+
     def warmup(self) -> None:
         """Compile the decision dispatch off the tick path (same padded
         shape and config, so it lands in the same jit cache entry)."""
         q = self.n_queues
+        if q == 0:
+            return
         z = np.zeros(q)
         control_decide(self.cfg, control_init(self.cfg, q), lam=z, mu=z,
                        ready=np.zeros(q, bool), replicas=np.ones(q),
@@ -106,24 +127,39 @@ class ControlLoop(threading.Thread):
 
     def _tick_locked(self) -> Decision:
         svc = self.service
+        q = self.n_queues
+        if q == 0:                         # empty group: nothing to sense
+            self.ticks += 1
+            zi, zb = np.zeros(0, np.int32), np.zeros(0, bool)
+            return Decision(target_replicas=zi, scale_mask=zb,
+                            target_caps=zi, resize_mask=zb, shed=zb,
+                            straggler=zb, probing=zb)
         # -- sense: one gated readout for both ends ----------------------
         rates = svc.gated_rates()
-        q = self.n_queues
         mu, lam = rates[:q], rates[q:]
         ready = mu > 0                     # head estimate usable
-        # saturation: the tail leg blocked (queue full) for nearly every
-        # period since the last tick — demand is dark, escalate instead
-        nb, nt = svc.blocked_counts()
         tails = slice(q, None)
         if lam.shape[0] == 0:              # ends="head" service: no
             lam = np.zeros(q)              # arrival leg, replica/cap
             saturated = np.zeros(q, bool)
+            stale = np.zeros(q, bool)
         else:
+            # saturation: the tail leg blocked (queue full) for nearly
+            # every period since the last tick — demand is dark,
+            # escalate instead
+            nb, nt = svc.blocked_counts()
             d_blk = nb[tails] - self._last_blk
             d_tot = nt[tails] - self._last_tot
             self._last_blk, self._last_tot = nb[tails], nt[tails]
             saturated = (d_tot > 0) & (
                 d_blk >= self.cfg.saturation_frac * d_tot)
+            # staleness: a quiet stream never re-converges, so the gated
+            # arrival estimate freezes at its old level while fresh
+            # near-zero samples fold into the window — the window mean
+            # collapsing far below the gated estimate means the demand
+            # signal is stale and the probe (not the formula) owns it
+            recent = svc.recent_rates("tail")
+            stale = (lam > 0) & (recent < self.cfg.stale_frac * lam)
         cv2 = svc.cv2s()
         act = self.actuator
         replicas = np.asarray(act.replicas(), np.int64)
@@ -134,6 +170,10 @@ class ControlLoop(threading.Thread):
         caps = np.asarray(act.capacities(), np.int64)
         occ = (np.asarray(act.occupancy(), float)
                if self.policies.admission is not None else 0.0)
+        # multi-tenant per-queue overrides (leg masks, replica knobs) —
+        # a plain single-tenant actuator has none and the config rules
+        overrides = (act.policy_overrides()
+                     if hasattr(act, "policy_overrides") else {})
         # an estimate that moved since last tick was measured under the
         # *current* replica count; a frozen one keeps its old basis
         moved = mu != self._last_mu
@@ -145,7 +185,8 @@ class ControlLoop(threading.Thread):
             self.cfg, self.state, lam=lam, mu=mu, ready=ready,
             replicas=replicas, rep_basis=self._mu_basis, caps=caps,
             cv2=cv2, occupancy=occ, saturated=saturated,
-            scalable=scalable, impl=self.impl, donate=True)
+            scalable=scalable, stale=stale, impl=self.impl, donate=True,
+            **overrides)
         self.ticks += 1
         self._actuate(dec, lam, mu, replicas, caps)
         return dec
@@ -184,6 +225,47 @@ class ControlLoop(threading.Thread):
                        int(shed[i]), outcome)
             self._shed = shed.copy()
 
+    # -- fleet restructure (multi-tenant attach/detach) --------------------
+    def _remap_locked(self, old_index_of_new) -> None:
+        """Re-shape every per-queue array the loop carries across ticks
+        after the monitored fleet changed.  Caller holds ``_lock`` —
+        ``control.group`` invokes this while already holding the tick
+        lock so the service restructure and the remap are one atomic
+        step from a tick's point of view.  ``old_index_of_new[j]`` is
+        the previous queue index of the queue now at position ``j``, or
+        -1 for a freshly attached queue (which starts from the neutral
+        init state).  Retained queues keep their confirmation counters,
+        cooldowns, admission memory, probe timers and measurement
+        bases, so tenant churn never resets an unrelated tenant's
+        gating state."""
+        idx = np.asarray(old_index_of_new, np.int64)
+        nq = int(idx.shape[0])
+        keep = idx >= 0
+        src = idx[keep]
+
+        def take(a, fill, dtype=None):
+            a = np.asarray(a)
+            out = np.full(nq, fill, dtype or a.dtype)
+            if src.size:
+                out[keep] = a[src]
+            return out
+
+        st = ControlState(*(np.asarray(leaf) for leaf in self.state))
+        self.state = ControlState(
+            cooldown=take(st.cooldown, 0),
+            rep_agree=take(st.rep_agree, 0),
+            cap_agree=take(st.cap_agree, 0),
+            shedding=take(st.shedding, False),
+            peak_mu=take(st.peak_mu, 0.0),
+            escalated=take(st.escalated, False),
+            probe_timer=take(st.probe_timer, 0))
+        self._shed = take(self._shed, False)
+        self._mu_basis = take(self._mu_basis, 1)
+        self._last_mu = take(self._last_mu, np.nan)
+        self._last_blk = take(self._last_blk, 0)
+        self._last_tot = take(self._last_tot, 0)
+        self.n_queues = nq
+
     # -- thread plumbing ---------------------------------------------------
     def run(self) -> None:
         self.warmup()
@@ -194,7 +276,11 @@ class ControlLoop(threading.Thread):
                 self._stop_evt.wait(max(next_due - now, self.min_sleep_s))
                 continue
             self.tick()
-            next_due = now + self.period_s
+            # re-derive (unless explicit): the monitor thread adapts the
+            # shared sampling period live, and the loop must keep its
+            # one-decision-per-dispatch cadence relative to the *current*
+            # period, not the one frozen at construction
+            next_due = now + self._current_period()
 
     def stop(self) -> None:
         """Stop ticking (idempotent).  In-flight actuation completes —

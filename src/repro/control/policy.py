@@ -83,6 +83,19 @@ class ControlConfig:
     # move is multiplicative scale-up until demand becomes visible
     saturation_frac: float = 0.8   # tail blocked fraction => saturated
     saturation_growth: float = 2.0  # replica multiplier while saturated
+    # demand probe (scale-down of the escalated/stale regime): an
+    # arrival estimate whose stream went quiet never re-converges (the
+    # epoch freezes at the old high level while fresh near-zero samples
+    # fold into the window), so escalated replicas would ratchet.  A
+    # queue whose provision is escalation-driven or whose demand signal
+    # went stale probes: every ``probe_period_ticks`` the admission gate
+    # is forced open and capacity/replicas held for
+    # ``probe_window_ticks`` so real demand (if any) becomes observable
+    # again; a window that stays dark end-to-end decays replicas by
+    # ``saturation_growth`` (AIMD's multiplicative decrease).
+    stale_frac: float = 0.5        # window mean below this x gated lam => stale
+    probe_period_ticks: int = 16   # ticks between probe windows
+    probe_window_ticks: int = 4    # gate-open ticks per probe window
     # gating
     confirm_ticks: int = 2         # consecutive agreeing ticks before acting
     cooldown_ticks: int = 4        # ticks a queue rests after an actuation
@@ -104,6 +117,8 @@ class ControlState(NamedTuple):
     cap_agree: jnp.ndarray     # (Q,) i32  signed consecutive-want counter
     shedding: jnp.ndarray      # (Q,) bool admission gate currently shut
     peak_mu: jnp.ndarray       # (Q,) f32  decayed peak service rate seen
+    escalated: jnp.ndarray     # (Q,) bool provision last set by escalation
+    probe_timer: jnp.ndarray   # (Q,) i32  ticks into the probe cycle
 
 
 class Decision(NamedTuple):
@@ -114,6 +129,7 @@ class Decision(NamedTuple):
     resize_mask: jnp.ndarray       # (Q,) bool  apply target_caps now
     shed: jnp.ndarray              # (Q,) bool  admission gate shut
     straggler: jnp.ndarray         # (Q,) bool  below fleet-median threshold
+    probing: jnp.ndarray           # (Q,) bool  gate-open demand-probe window
 
 
 def control_init(cfg: ControlConfig, n: int) -> ControlState:
@@ -123,6 +139,8 @@ def control_init(cfg: ControlConfig, n: int) -> ControlState:
         cap_agree=jnp.zeros((n,), jnp.int32),
         shedding=jnp.zeros((n,), bool),
         peak_mu=jnp.zeros((n,), jnp.float32),
+        escalated=jnp.zeros((n,), bool),
+        probe_timer=jnp.zeros((n,), jnp.int32),
     )
 
 
@@ -144,17 +162,22 @@ def control_decide_trace_count() -> int:
 # per-dispatch XLA floor dwarfs the ~40 us the whole fleet's decision
 # costs in numpy).  Parity between the forms is regression-tested.
 
-def _replica_targets(cfg: ControlConfig, lam, mu, replicas, xp=jnp):
+def _replica_targets(cfg: ControlConfig, lam, mu, replicas, xp=jnp,
+                     headroom=None, max_reps=None):
     """``ParallelismController.replicas_fleet``, normalized by the live
     replica count: the monitored ``mu`` is the *aggregate* consumption
     rate of all current replicas, so one replica is worth
     ``mu / replicas`` and the stage needs ``ceil(headroom * lam /
     (mu / replicas))`` copies (identical to the scalar formula when
-    replicas == 1).  ``max_replicas`` when the rate is unobservable."""
+    replicas == 1).  ``max_replicas`` when the rate is unobservable.
+    ``headroom``/``max_reps`` may be (Q,) arrays — the multi-tenant
+    per-queue overrides — defaulting to the config scalars."""
+    hr = cfg.headroom if headroom is None else headroom
+    mr = cfg.max_replicas if max_reps is None else max_reps
     mu_per = mu / xp.maximum(replicas.astype(xp.float32), 1.0)
-    n = xp.ceil(cfg.headroom * lam / xp.where(mu_per > 0, mu_per, 1.0))
-    n = xp.where(mu_per <= 0, cfg.max_replicas, n)
-    return xp.clip(n, 1, cfg.max_replicas).astype(xp.int32)
+    n = xp.ceil(hr * lam / xp.where(mu_per > 0, mu_per, 1.0))
+    n = xp.where(mu_per <= 0, mr, n)
+    return xp.clip(n, 1, mr).astype(xp.int32)
 
 
 def _capacity_targets(cfg: ControlConfig, lam, mu, cv2, current, xp=jnp):
@@ -198,16 +221,28 @@ def _capacity_targets(cfg: ControlConfig, lam, mu, cv2, current, xp=jnp):
 
 def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
                ready, replicas, rep_basis, caps, cv2, occupancy,
-               saturated, scalable, fleet_med):
-    """The fused decision, once, against either array namespace."""
+               saturated, scalable, fleet_med, stale, leg_rep, leg_buf,
+               leg_adm, headroom, max_reps):
+    """The fused decision, once, against either array namespace.
+
+    ``leg_rep``/``leg_buf``/``leg_adm`` are the per-queue tenant masks
+    (they default to the config's static ``*_enabled`` flags when no
+    multi-tenant overrides are given); ``headroom``/``max_reps`` are the
+    per-queue replica-policy overrides.  ``stale`` marks queues whose
+    arrival estimate froze while the stream went quiet (the window mean
+    collapsed below ``stale_frac`` of the gated estimate) — a stale
+    ``lam`` is treated as unknown, and the demand probe takes over."""
     lam = lam.astype(xp.float32)
     mu = mu.astype(xp.float32)
     cv2 = cv2.astype(xp.float32)
     occ = occupancy.astype(xp.float32)
     # ready == the head (service-rate) estimate is usable; demand is
     # usable only when the arrival leg also reports (a saturated
-    # queue blocks the producer, so lam goes dark under overload)
-    known = ready & (lam > 0)
+    # queue blocks the producer, so lam goes dark under overload) AND
+    # the estimate is fresh (a quiet stream never re-converges, so the
+    # frozen high estimate would keep the formula wanting replicas
+    # nobody feeds)
+    known = ready & (lam > 0) & ~stale
 
     # -- targets (identical math to the advisory readouts).  mu is
     # normalized by rep_basis — the replica count in effect when the
@@ -215,43 +250,75 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     # the consumer often starves (service rate unobservable), the
     # estimate freezes, and dividing the frozen aggregate by the new
     # replica count would spiral the target upward every tick.
-    rep_formula = _replica_targets(cfg, lam, mu, rep_basis, xp)
+    rep_formula = _replica_targets(cfg, lam, mu, rep_basis, xp,
+                                   headroom, max_reps)
     escalated = xp.clip(
         xp.ceil(replicas.astype(xp.float32) * cfg.saturation_growth),
-        1, cfg.max_replicas).astype(xp.int32)
+        1, max_reps).astype(xp.int32)
+
+    # -- demand probe: scale-down for the escalated / stale regime ------
+    # provision counts as escalation-driven from the tick saturation
+    # fires until demand is observable again outside saturation
+    esc = (state.escalated | (saturated & ready)) & ~(known & ~saturated)
+    # a probe is useful only while demand is dark AND the queue is not
+    # actively saturated (a saturated queue just proved demand exists —
+    # that is the escalation leg's regime, and a probe window that
+    # re-saturates aborts the cycle instead of decaying)
+    elig = (esc | stale) & ~known & ~saturated & leg_rep & scalable \
+        & (replicas > 1)
+    timer = xp.where(elig, state.probe_timer + 1, 0)
+    window_end = cfg.probe_period_ticks + cfg.probe_window_ticks
+    # window open: the admission gate is forced open and the replica /
+    # capacity legs hold still so returning demand becomes observable
+    probing = elig & (timer > cfg.probe_period_ticks)
+    # the whole window stayed dark: there is no demand at this level —
+    # decay multiplicatively (AIMD's MD to the escalation's MI)
+    decay = elig & (timer >= window_end)
+    timer = xp.where(timer >= window_end, 0, timer)
+    decayed = xp.clip(
+        xp.ceil(replicas.astype(xp.float32) / cfg.saturation_growth),
+        1, max_reps).astype(xp.int32)
+
     # saturated => demand is at least capacity and unobservable:
     # escalate multiplicatively until the queue unblocks and the
     # formula can take over (then any overshoot scales back down)
-    rep_t = xp.where(saturated & ready, escalated,
-                     xp.where(known, rep_formula, replicas))
+    rep_t = xp.where(decay, decayed,
+                     xp.where(saturated & ready, escalated,
+                              xp.where(known, rep_formula, replicas)))
     cap_t = _capacity_targets(cfg, lam, mu, cv2, caps, xp)
 
     # -- replica gating: confirmation counter + cooldown.  The leg is
-    #    statically off when the PolicySet has no replica policy, and
-    #    per-queue off for unscalable queues (e.g. the pipeline's sink
-    #    drain) — phantom wants there would only burn cooldown ---------
-    can_scale = scalable & cfg.replica_enabled
+    #    statically off when the PolicySet has no replica policy,
+    #    per-tenant off through the leg mask, and per-queue off for
+    #    unscalable queues (e.g. the pipeline's sink drain) — phantom
+    #    wants there would only burn cooldown ---------------------------
+    can_scale = scalable & leg_rep
     want_up = (rep_t > replicas) & (known | (saturated & ready)) \
-        & can_scale
-    want_dn = (rep_t < replicas) & known & ~saturated & can_scale
+        & can_scale & ~probing
+    want_dn = (rep_t < replicas) & known & ~saturated & can_scale \
+        & ~probing
     rep_agree = xp.where(
         want_up, xp.maximum(state.rep_agree, 0) + 1,
         xp.where(want_dn, xp.minimum(state.rep_agree, 0) - 1, 0))
-    scale = (xp.abs(rep_agree) >= cfg.confirm_ticks) \
-        & (state.cooldown <= 0)
+    # a decay fires directly: the dark probe window itself was the
+    # confirmation, and the probe period already paces consecutive steps
+    scale = ((xp.abs(rep_agree) >= cfg.confirm_ticks)
+             & (state.cooldown <= 0) & ~probing) | decay
 
     # -- capacity gating: BufferAutotuner's hysteresis band, then the
     #    same confirmation + cooldown schedule.  A saturated queue is
     #    a replica problem, not a sizing problem: its stale rates
-    #    would advise shrinking a full queue (always rejected) -----------
+    #    would advise shrinking a full queue (always rejected); a
+    #    probing queue holds capacity so the observation window is
+    #    taken at the provision being probed ---------------------------
     ratio = cap_t.astype(xp.float32) \
         / xp.maximum(caps.astype(xp.float32), 1.0)
     outside = (ratio >= cfg.resize_factor) \
         | (ratio <= 1.0 / cfg.resize_factor)
     want_grow = known & outside & (cap_t > caps) & ~saturated \
-        & cfg.buffer_enabled
+        & leg_buf & ~probing
     want_shrink = known & outside & (cap_t < caps) & ~saturated \
-        & cfg.buffer_enabled
+        & leg_buf & ~probing
     cap_agree = xp.where(
         want_grow, xp.maximum(state.cap_agree, 0) + 1,
         xp.where(want_shrink, xp.minimum(state.cap_agree, 0) - 1, 0))
@@ -270,14 +337,16 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     collapsed = ready & (mu < cfg.collapse_frac * peak)
     # a saturated queue whose replica leg is maxed out cannot grow
     # its way back: shedding is the only lever left
-    exhausted = saturated & ready & (replicas >= cfg.max_replicas)
+    exhausted = saturated & ready & (replicas >= max_reps)
     arm = (collapsed | straggler | exhausted) \
         & (occ >= cfg.occupancy_hi)
     recovered = (mu >= cfg.recover_frac * peak) & ~straggler \
         & ~exhausted
     disarm = recovered | (occ <= cfg.occupancy_lo)
-    shed = xp.where(state.shedding, ~disarm, arm) \
-        & cfg.admission_enabled
+    # the arm/disarm memory keeps running through a probe window; only
+    # the *output* gate is forced open so shed demand can show itself
+    shed_m = xp.where(state.shedding, ~disarm, arm) & leg_adm
+    shed = shed_m & ~probing
 
     acted = scale | resize
     cooldown = xp.where(acted, cfg.cooldown_ticks,
@@ -286,9 +355,10 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
         cooldown=cooldown.astype(xp.int32),
         rep_agree=xp.where(scale, 0, rep_agree).astype(xp.int32),
         cap_agree=xp.where(resize, 0, cap_agree).astype(xp.int32),
-        shedding=shed, peak_mu=peak.astype(xp.float32))
+        shedding=shed_m, peak_mu=peak.astype(xp.float32),
+        escalated=esc, probe_timer=timer.astype(xp.int32))
     return new_state, Decision(rep_t, scale, cap_t, resize, shed,
-                               straggler)
+                               straggler, probing)
 
 
 @functools.lru_cache(maxsize=None)
@@ -321,6 +391,8 @@ def _auto_impl() -> str:
 def control_decide(cfg: ControlConfig, state: ControlState, *,
                    lam, mu, ready, replicas, caps, cv2=1.0, occupancy=0.0,
                    rep_basis=None, saturated=None, scalable=None,
+                   stale=None, leg_rep=None, leg_buf=None, leg_adm=None,
+                   headroom=None, max_replicas=None,
                    impl: str = "auto", donate: bool = True
                    ) -> tuple[ControlState, Decision]:
     """Evaluate every policy for the whole fleet in one fused pass.
@@ -336,6 +408,11 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
     ``saturated`` marks queues whose producer end blocked persistently —
     demand there is unobservable and the replica leg escalates
     multiplicatively instead of trusting stale rates (default: none).
+    ``stale`` marks queues whose arrival estimate froze after the
+    stream went quiet (demand probe input; default none).  The
+    multi-tenant overrides — ``leg_rep``/``leg_buf``/``leg_adm`` masks
+    and per-queue ``headroom``/``max_replicas`` — default to the static
+    config flags/knobs, so single-tenant behavior is unchanged.
     Under ``"jit"`` the ``state`` is donated by default — callers keep
     only the returned state, exactly like the fleet monitor dispatch.
     """
@@ -347,6 +424,18 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         saturated = np.zeros(q, bool)
     if scalable is None:
         scalable = np.ones(q, bool)
+    if stale is None:
+        stale = np.zeros(q, bool)
+    if leg_rep is None:
+        leg_rep = cfg.replica_enabled
+    if leg_buf is None:
+        leg_buf = cfg.buffer_enabled
+    if leg_adm is None:
+        leg_adm = cfg.admission_enabled
+    if headroom is None:
+        headroom = cfg.headroom
+    if max_replicas is None:
+        max_replicas = cfg.max_replicas
     # fleet median of the ready service rates, for the straggler leg
     # (numpy introselect off-dispatch: XLA CPU would sort, ~30x slower)
     mu_np = np.asarray(mu, np.float32)
@@ -374,7 +463,12 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
                 occupancy=npa(occupancy, np.float32),
                 saturated=npa(saturated, bool),
                 scalable=npa(scalable, bool),
-                fleet_med=np.float32(fleet_med))
+                fleet_med=np.float32(fleet_med),
+                stale=npa(stale, bool),
+                leg_rep=npa(leg_rep, bool), leg_buf=npa(leg_buf, bool),
+                leg_adm=npa(leg_adm, bool),
+                headroom=npa(headroom, np.float32),
+                max_reps=npa(max_replicas, np.int32))
     if impl != "jit":
         raise ValueError(f"bad impl {impl!r}")
 
@@ -396,7 +490,13 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         occupancy=pad(jnp.asarray(occupancy, jnp.float32)),
         saturated=pad(jnp.asarray(saturated, bool), False),
         scalable=pad(jnp.asarray(scalable, bool), False),
-        fleet_med=jnp.float32(fleet_med))
+        fleet_med=jnp.float32(fleet_med),
+        stale=pad(jnp.asarray(stale, bool), False),
+        leg_rep=pad(jnp.asarray(leg_rep, bool), False),
+        leg_buf=pad(jnp.asarray(leg_buf, bool), False),
+        leg_adm=pad(jnp.asarray(leg_adm, bool), False),
+        headroom=pad(jnp.asarray(headroom, jnp.float32), 1.0),
+        max_reps=pad(jnp.asarray(max_replicas, jnp.int32), 1))
     state = ControlState(*(jnp.asarray(leaf) for leaf in state))
     if rpad:
         state = jax.tree_util.tree_map(
@@ -501,11 +601,15 @@ class PolicySet:
     confirm_ticks: int = 2
     cooldown_ticks: int = 4
     block_q: int = 256
+    probe_period_ticks: int = 16
+    probe_window_ticks: int = 4
 
     def control_config(self) -> ControlConfig:
         kw: dict = {"confirm_ticks": self.confirm_ticks,
                     "cooldown_ticks": self.cooldown_ticks,
                     "block_q": self.block_q,
+                    "probe_period_ticks": self.probe_period_ticks,
+                    "probe_window_ticks": self.probe_window_ticks,
                     "replica_enabled": self.replica is not None,
                     "buffer_enabled": self.buffer is not None,
                     "admission_enabled": self.admission is not None}

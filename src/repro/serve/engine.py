@@ -137,7 +137,8 @@ class Engine:
                  arena: Optional[CounterArena] = None,
                  control: bool = False,
                  admission: Optional[AdmissionPolicy] = None,
-                 control_log: Optional[ControlLog] = None):
+                 control_log: Optional[ControlLog] = None,
+                 monitor: bool = True):
         self.model = model
         self.params = params
         self.scfg = scfg
@@ -145,11 +146,23 @@ class Engine:
         # process serving many models rides one vectorized collector
         self.queue = InstrumentedQueue(scfg.queue_capacity, item_bytes=1,
                                        name="requests", arena=arena)
-        self.fleet = FleetMonitorService(
-            [self.queue],
-            monitor_cfg or MonitorConfig(window=16, min_q_samples=16),
-            period_s=10e-3, chunk_t=16, ends="both")
-        self.monitor_thread = FleetMonitorThread(self.fleet)
+        if not monitor and control:
+            raise ValueError(
+                "monitor=False hands monitoring AND control to a "
+                "ControlGroup — control must stay off")
+        # ``monitor=False`` builds the engine externally monitored:
+        # attach it to a ``repro.control.ControlGroup`` (sharing the
+        # group's arena), which owns one monitor + loop for every
+        # tenant and binds a sliced fleet view back here
+        if monitor:
+            self.fleet = FleetMonitorService(
+                [self.queue],
+                monitor_cfg or MonitorConfig(window=16, min_q_samples=16),
+                period_s=10e-3, chunk_t=16, ends="both")
+            self.monitor_thread = FleetMonitorThread(self.fleet)
+        else:
+            self.fleet = None          # bound by ControlGroup.attach
+            self.monitor_thread = None
         # capacity advice and (under control=True) capacity actuation
         # share this policy object — they cannot disagree
         self.buffer_policy = BufferPolicy(
@@ -183,7 +196,8 @@ class Engine:
             req, timeout=max(deadline - time.monotonic(), 0.0))
 
     def start(self):
-        self.monitor_thread.start()
+        if self.monitor_thread is not None:  # externally monitored else
+            self.monitor_thread.start()
         if self.control is not None:
             self.control.start()
         self._worker.start()
@@ -194,7 +208,25 @@ class Engine:
         self._worker.join(timeout=30)
         if self.control is not None:
             self.control.stop()
-        self.monitor_thread.stop()
+        if self.monitor_thread is not None:
+            self.monitor_thread.stop()
+
+    # ---------------- multi-tenant protocol ----------------------------------
+    def control_tenant(self) -> tuple[list, "_EngineActuator"]:
+        """The ``ControlGroup`` tenant protocol: the request queue and
+        this engine's actuator (resize + admission gate)."""
+        return [self.queue], _EngineActuator(self)
+
+    def _bind_external_monitor(self, view) -> None:
+        if self.monitor_thread is None:
+            self.fleet = view
+
+    def _require_fleet(self):
+        if self.fleet is None:
+            raise RuntimeError(
+                "engine is externally monitored (monitor=False): "
+                "attach it to a ControlGroup before reading rates")
+        return self.fleet
 
     # ---------------- engine loop --------------------------------------------
     def _take_batch(self) -> list[Request]:
@@ -261,8 +293,9 @@ class Engine:
         ``BufferPolicy`` a ``control=True`` engine's loop actuates —
         advice and actuation share one implementation.  Unobservable
         rates (pre-convergence gate) keep the current capacity."""
-        lam = self.fleet.arrival_rates()
-        mu = self.fleet.service_rates()
+        fleet = self._require_fleet()
+        lam = fleet.arrival_rates()
+        mu = fleet.service_rates()
         return int(self.buffer_policy.targets(
             lam, mu, current=[self.queue.capacity])[0])
 
@@ -276,4 +309,4 @@ class Engine:
         """Requests/s from the fleet state, readiness-gated: 0 until the
         estimate has either converged or accumulated ``min_q_samples``
         q-folds — never a raw partial-window sample."""
-        return float(self.fleet.service_rates()[0])
+        return float(self._require_fleet().service_rates()[0])

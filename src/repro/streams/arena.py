@@ -179,6 +179,18 @@ class CounterArena:
     def capacity(self) -> int:
         return self.tc.shape[0]
 
+    def snapshot_slots(self, ends) -> tuple[np.ndarray, int]:
+        """One consistent ``(slots, layout_version)`` read for a set of
+        ends.  Slot numbers and the layout version must be read under
+        one lock hold: a concurrent defragmentation moving slots between
+        the two reads would hand the caller old cell indices already
+        paired with the new version, so its staleness check could never
+        fire.  Used by ``FleetMonitorService`` at construction and on
+        every multi-tenant attach/detach restructure."""
+        with self.lock:
+            return (np.array([e.slot for e in ends], np.intp),
+                    self.layout_version)
+
     def __len__(self) -> int:
         """Live (attached) slots."""
         with self.lock:

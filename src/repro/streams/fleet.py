@@ -57,6 +57,11 @@ while acquiring either.  A ``ControlLoop`` tick mid-actuation holds
 only its own lock plus (briefly) a leaf, so ``stop()``/``flush()`` from
 any thread serialize cleanly against it — they can interleave with an
 actuation but never deadlock or observe a half-written staging row.
+The multi-tenant restructure (``attach``/``detach``) takes the same
+``self._lock`` -> ``arena.lock`` order (its caller, ``control.group``,
+already holds the loop lock above both), so it serializes against the
+collector tick like any readout and a tick never sees a half-rebuilt
+stream set.
 """
 
 from __future__ import annotations
@@ -65,6 +70,7 @@ import threading
 import time
 from typing import Callable, Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.controller import DistributionClassifier
@@ -103,6 +109,7 @@ class FleetMonitorService:
                  period_s: float = 1e-3, chunk_t: int = 32,
                  impl: str = "rounds", scale_to_period: bool = True,
                  ends: str = "head", block_q: Optional[int] = None,
+                 arena=None,
                  on_converged: Optional[Callable] = None,
                  on_fleet: Optional[Callable] = None):
         if ends not in ("head", "both"):
@@ -121,71 +128,99 @@ class FleetMonitorService:
 
         q = len(self.queues)
         # stream layout: heads (0..Q-1), then tails (Q..2Q-1) if "both"
-        self._end_stats = [qu.head for qu in self.queues]
-        if ends == "both":
-            self._end_stats += [qu.tail for qu in self.queues]
+        self._end_stats = self._ends_of(self.queues)
         s = len(self._end_stats)
         self.n_streams = s
         self.block_q = int(block_q) if block_q else _pick_block_q(s)
 
-        # every monitored end must back into ONE arena: the collector is
-        # a single gather/zero over that arena's (S,) counter arrays
-        arenas = {id(end.arena): end.arena for end in self._end_stats}
-        if len(arenas) > 1:
+        # ``arena`` seeds the empty-fleet case (a ControlGroup's service
+        # is born with no queues but must land in the group's arena);
+        # once ends exist their shared arena is authoritative and an
+        # explicit mismatch is rejected like any mixed-arena fleet
+        self._arena = self._single_arena(self._end_stats, arena)
+        if (arena is not None and self._end_stats
+                and self._arena is not arena):
             raise ValueError(
-                "all monitored queues must share one CounterArena "
-                f"(got {len(arenas)})")
-        self._arena = (next(iter(arenas.values())) if arenas
-                       else default_arena())
+                "explicit arena= does not match the queues' arena")
+        # once an arena is pinned (explicitly seeded, or implied by the
+        # first monitored ends) a later attach may not silently re-home
+        # the service; only a bare empty service keeps the door open
+        self._arena_pinned = arena is not None or bool(self._end_stats)
         # pin the monitored ends: releasing a slot we keep gathering
         # would hand it to a new owner whose counters we then zero
         for end in self._end_stats:
             end._pins.add(self)
-        # slot numbers and layout_version must be one consistent read:
-        # a concurrent defragmentation (another pipeline churning the
-        # shared default arena) moving slots between the two would leave
-        # us gathering the old cells while already holding the new
-        # version, so the tick-time rebind check could never fire
-        with self._arena.lock:
-            slots = np.array([end.slot for end in self._end_stats],
-                             np.intp)
-            self._layout_version = self._arena.layout_version
-        # internal row order = slot-sorted: row r stages the stream
-        # _stream_of_row[r], stream i lives at row _row_of_stream[i].
-        # A co-allocated fleet's sorted slots form one contiguous run,
-        # collapsing the per-tick gather/zero to plain slice views.
-        perm = np.argsort(slots, kind="stable")
-        self._stream_of_row = perm
-        self._row_of_stream = np.argsort(perm, kind="stable")
-        sorted_slots = slots[perm]
-        self._slots = self._slice_or_index(sorted_slots)
+        self._derive_layout()
 
         self._state: FleetMonitorState = fleet_monitor_init(self.cfg, s)
         # pinned double-buffered (chunk_t, S) staging, row-major so each
         # tick writes one contiguous row; the active pair collects while
         # the shadow pair backs the in-flight dispatch
-        self._tc = np.zeros((self.chunk_t, s))
-        self._blocked = np.ones((self.chunk_t, s), dtype=bool)
-        self._tc_shadow = np.zeros_like(self._tc)
-        self._blk_shadow = np.ones_like(self._blocked)
-        self._col = 0
+        self._alloc_staging()
         self._pending = False          # a dispatch awaits harvest
-        self._epochs = np.zeros((s,), np.int64)
-        # numpy mirrors of the gate leaves, refreshed at harvest time:
-        # the control loop's sense step reads these instead of paying
-        # per-tick jax->host conversions (estimates only move when a
-        # dispatch harvests anyway)
-        self._count_np = np.zeros((s,))
-        self._mean_np = np.zeros((s,))
-        self._qbar_np = np.zeros((s,))
-        self._nblk_np = np.zeros((s,), np.int64)
-        self._ntot_np = np.zeros((s,), np.int64)
+        self._init_mirrors()
         self.dispatches = 0
         # per-queue service-process moments (cv^2 feeds buffer sizing)
         self.classifier = DistributionClassifier(n_streams=q)
         self._lock = threading.Lock()
         self._last_t: Optional[float] = None   # set on first sample()
         self._stopped = False
+
+    def _ends_of(self, queues) -> list:
+        ends = [qu.head for qu in queues]
+        if self.ends == "both":
+            ends += [qu.tail for qu in queues]
+        return ends
+
+    @staticmethod
+    def _single_arena(ends, fallback):
+        # every monitored end must back into ONE arena: the collector is
+        # a single gather/zero over that arena's (S,) counter arrays
+        arenas = {id(end.arena): end.arena for end in ends}
+        if len(arenas) > 1:
+            raise ValueError(
+                "all monitored queues must share one CounterArena "
+                f"(got {len(arenas)})")
+        if arenas:
+            return next(iter(arenas.values()))
+        return fallback if fallback is not None else default_arena()
+
+    def _derive_layout(self) -> None:
+        """(Re)derive the slot permutation from a consistent
+        (slots, layout_version) arena snapshot — see
+        ``CounterArena.snapshot_slots`` for why the pair must be one
+        read.  Internal row order = slot-sorted: row r stages the
+        stream ``_stream_of_row[r]``, stream i lives at row
+        ``_row_of_stream[i]``.  A co-allocated fleet's sorted slots form
+        one contiguous run, collapsing the per-tick gather/zero to plain
+        slice views."""
+        slots, self._layout_version = \
+            self._arena.snapshot_slots(self._end_stats)
+        perm = np.argsort(slots, kind="stable")
+        self._stream_of_row = perm
+        self._row_of_stream = np.argsort(perm, kind="stable")
+        self._slots = self._slice_or_index(slots[perm])
+
+    def _alloc_staging(self) -> None:
+        s = self.n_streams
+        self._tc = np.zeros((self.chunk_t, s))
+        self._blocked = np.ones((self.chunk_t, s), dtype=bool)
+        self._tc_shadow = np.zeros_like(self._tc)
+        self._blk_shadow = np.ones_like(self._blocked)
+        self._col = 0
+
+    def _init_mirrors(self) -> None:
+        # numpy mirrors of the gate leaves, refreshed at harvest time:
+        # the control loop's sense step reads these instead of paying
+        # per-tick jax->host conversions (estimates only move when a
+        # dispatch harvests anyway)
+        s = self.n_streams
+        self._epochs = np.zeros((s,), np.int64)
+        self._count_np = np.zeros((s,))
+        self._mean_np = np.zeros((s,))
+        self._qbar_np = np.zeros((s,))
+        self._nblk_np = np.zeros((s,), np.int64)
+        self._ntot_np = np.zeros((s,), np.int64)
 
     def __len__(self) -> int:
         return len(self.queues)
@@ -219,26 +254,34 @@ class FleetMonitorService:
         ``FleetMonitorThread`` calls this before its first tick — the
         multi-second first-call compile must never land on the sampling
         tick, where it would eat the whole observation budget."""
-        tc = np.zeros((self.n_streams, self.chunk_t))
-        blk = np.ones((self.n_streams, self.chunk_t), bool)
-        run_monitor_fleet(
-            self.cfg, tc, blk, state=fleet_monitor_init(self.cfg,
-                                                        self.n_streams),
-            chunk_t=self.chunk_t, impl=self.impl, mode="state",
-            block_q=self.block_q, donate=True)
-        # discard whatever the queues accumulated during the compile:
-        # the first real tick must not fold a multi-second interval as
-        # if it were one nominal period
-        arena = self._arena
+        self._warm_compile()
         with self._lock:
-            with arena.lock:
-                if arena.layout_version != self._layout_version:
-                    self._rebind_slots_locked()
-                idx = self._slots
-                arena.tc[idx] = 0.0
-                arena.blocked[idx] = False
-                arena.bytes_count[idx] = 0
-            self._last_t = time.monotonic()
+            self._discard_counters_locked()
+
+    def _warm_compile(self) -> None:
+        """The throwaway warm-up dispatch (lock-free; shared by
+        ``warmup`` and the attach/detach restructure)."""
+        if self.n_streams:
+            run_monitor_fleet(
+                self.cfg, np.zeros((self.n_streams, self.chunk_t)),
+                np.ones((self.n_streams, self.chunk_t), bool),
+                state=fleet_monitor_init(self.cfg, self.n_streams),
+                chunk_t=self.chunk_t, impl=self.impl, mode="state",
+                block_q=self.block_q, donate=True)
+
+    def _discard_counters_locked(self) -> None:
+        """Zero every monitored cell and reset the realized-period
+        clock (``self._lock`` held): the next tick must not fold the
+        preceding compile/rebuild interval as one nominal period."""
+        arena = self._arena
+        with arena.lock:
+            if arena.layout_version != self._layout_version:
+                self._rebind_slots_locked()
+            idx = self._slots
+            arena.tc[idx] = 0.0
+            arena.blocked[idx] = False
+            arena.bytes_count[idx] = 0
+        self._last_t = time.monotonic()
 
     # -- sampling ---------------------------------------------------------
     def sample(self) -> bool:
@@ -312,7 +355,143 @@ class FleetMonitorService:
         for end in self._end_stats:
             end._pins.discard(self)
 
+    # -- live fleet restructure (multi-tenant attach/detach) --------------
+    def attach(self, queues: Sequence[InstrumentedQueue]) -> None:
+        """Add queues to the monitored fleet, live.  The buffered
+        partial chunk is dispatched and harvested first, then every
+        per-stream structure (staging, permutation, Algorithm-1 state,
+        gate mirrors, classifier moments) is rebuilt — retained streams
+        keep their full estimator state, so attaching tenant B never
+        resets tenant A's estimates.  Public stream order stays
+        heads-then-tails with the new queues appended after the
+        existing ones.  The fused dispatch is queue-padded, so sizes
+        within one ``block_q`` multiple share a trace; crossing a block
+        boundary compiles once in the closing ``warmup()``, off the
+        sampling tick."""
+        queues = list(queues)
+        live = {id(q) for q in self.queues}
+        if (any(id(q) in live for q in queues)
+                or len({id(q) for q in queues}) != len(queues)):
+            # a double-attached queue would be gathered into two staging
+            # rows per tick — both read the full count before the
+            # zero-fill, double-counting every rate — and a later
+            # detach of one alias would desync its sibling
+            raise ValueError("queue is already monitored by this service")
+        self._restructure(self.queues + queues)
+
+    def detach(self, queues: Sequence[InstrumentedQueue]) -> None:
+        """Remove queues from the monitored fleet, live (order of the
+        remaining queues is preserved).  Their ends are un-pinned, so
+        the owner may ``close()`` them and recycle the arena slots."""
+        drop = {id(q) for q in queues}
+        self._restructure([q for q in self.queues if id(q) not in drop])
+
+    def _restructure(self, new_queues: list) -> None:
+        emits = []
+        with self._lock:
+            if self._stopped:
+                raise RuntimeError("cannot restructure a stopped "
+                                   "FleetMonitorService")
+            # validate the new fleet (single arena) BEFORE touching any
+            # state — including the staged chunk: a rejected attach
+            # must leave the service intact AND must not have folded
+            # (and silently swallowed the emits of) the partial tile
+            new_queues = list(new_queues)
+            ends = self._ends_of(new_queues)
+            s = len(ends)
+            arena = self._single_arena(ends, self._arena)
+            if self._arena_pinned and ends and arena is not self._arena:
+                raise ValueError(
+                    "attached queues' arena does not match the "
+                    "service's (pass the service's arena to the "
+                    "queues, or the queues' arena at construction)")
+
+            # fold everything staged so far into the state: the staging
+            # tile is about to be re-shaped, and a half-chunk must not
+            # be lost across the restructure
+            if self._col:
+                emits.append(self._dispatch_locked())
+            emits.append(self._harvest_locked())
+
+            old_queues, old_ends = self.queues, self._end_stats
+            old_state = [np.asarray(leaf) for leaf in self._state]
+            old_mirrors = (self._epochs, self._count_np, self._mean_np,
+                           self._qbar_np, self._nblk_np, self._ntot_np)
+            old_row = {id(end): int(self._row_of_stream[i])
+                       for i, end in enumerate(old_ends)}
+
+            self.queues = new_queues
+            self._arena = arena
+            # pin new before un-pinning old: an end present in both sets
+            # must never be observably un-pinned mid-restructure
+            for end in ends:
+                end._pins.add(self)
+            new_ids = {id(end) for end in ends}
+            for end in old_ends:
+                if id(end) not in new_ids:
+                    end._pins.discard(self)
+            self._end_stats = ends
+            self.n_streams = s
+            if ends:
+                self._arena_pinned = True
+            self._derive_layout()
+
+            # carry Algorithm-1 state + gate mirrors for retained
+            # streams into their new internal rows; fresh streams start
+            # from the neutral init state
+            src = np.full(s, -1, np.intp)      # old row per new row
+            for i, end in enumerate(ends):
+                r_old = old_row.get(id(end))
+                if r_old is not None:
+                    src[self._row_of_stream[i]] = r_old
+            keep = src >= 0
+
+            def remap(new_leaf, old_leaf):
+                a = np.array(new_leaf)
+                if keep.any():
+                    a[keep] = old_leaf[src[keep]]
+                return jnp.asarray(a)
+
+            init = fleet_monitor_init(self.cfg, s)
+            self._state = FleetMonitorState(
+                *(remap(n, o) for n, o in zip(init, old_state)))
+            self._init_mirrors()
+            for mirror, old in zip(
+                    (self._epochs, self._count_np, self._mean_np,
+                     self._qbar_np, self._nblk_np, self._ntot_np),
+                    old_mirrors):
+                if keep.any():
+                    mirror[keep] = old[src[keep]]
+            self._alloc_staging()
+            # per-queue classifier moments follow their queues
+            old_q_idx = {id(qu): i for i, qu in enumerate(old_queues)}
+            new_cls = DistributionClassifier(n_streams=len(self.queues))
+            qsrc = np.array([old_q_idx.get(id(qu), -1)
+                             for qu in self.queues], np.intp)
+            qkeep = qsrc >= 0
+            if qkeep.any():
+                for new_leaf, old_leaf in zip(new_cls._m,
+                                              self.classifier._m):
+                    np.asarray(new_leaf)[qkeep] = \
+                        np.asarray(old_leaf)[qsrc[qkeep]]
+            self.classifier = new_cls
+            # (convergence emits carry end objects; _fire resolves them
+            # against the new layout and drops just-detached streams)
+            emits = tuple(e for emit in emits for e in emit)
+            # compile the (possibly) new padded shape and discard the
+            # counters accumulated during the rebuild BEFORE releasing
+            # the lock: a monitor thread sampling in between would fold
+            # the whole restructure interval as one nominal period (a
+            # rate spike the control loop could act on) and pay the
+            # first-call compile on its sampling tick
+            self._warm_compile()
+            self._discard_counters_locked()
+        self._fire(emits)
+
     def _dispatch_locked(self) -> tuple:
+        if self.n_streams == 0:        # empty fleet: nothing to estimate
+            self._col = 0
+            return self._harvest_locked()
         cols = self._col
         tc_rows, blk_rows = self._tc[:cols], self._blocked[:cols]
         # swap staging: the dispatch reads this tile while the collector
@@ -366,20 +545,34 @@ class FleetMonitorService:
         self._nblk_np = np.asarray(st.n_blocked, np.int64)
         self._ntot_np = np.asarray(st.n_total, np.int64)
         streams = self._stream_of_row[newly]
-        return tuple((int(si), float(ests[r]) / self.period_s)
+        # emits carry the END OBJECTS, not indices: indices are only
+        # resolved against the live layout at fire time (_fire), so an
+        # attach/detach landing between harvest and fire can never make
+        # a consumer resolve a stale index against the new fleet
+        return tuple((self._end_stats[si], float(ests[r]) / self.period_s)
                      for si, r in zip(streams, newly))
 
     def _fire(self, emit: tuple) -> None:
         """Run user callbacks outside the lock: a slow or re-entrant
-        callback must not stall or deadlock the sampling thread."""
+        callback must not stall or deadlock the sampling thread.  The
+        harvested (end, rate) pairs are resolved to public stream
+        indices against the CURRENT layout here — ends that left the
+        fleet since the harvest are dropped, retained ones report their
+        post-restructure indices."""
         if not emit:
             return
+        with self._lock:
+            idx_of = {id(e): i for i, e in enumerate(self._end_stats)}
+        resolved = [(idx_of[id(e)], r) for e, r in emit
+                    if id(e) in idx_of]
+        if not resolved:
+            return
         if self.on_fleet is not None:
-            idx = np.array([si for si, _ in emit], np.int64)
-            rates = np.array([r for _, r in emit])
+            idx = np.array([si for si, _ in resolved], np.int64)
+            rates = np.array([r for _, r in resolved])
             self.on_fleet(idx, rates)
         if self.on_converged is not None:
-            for si, rate in emit:
+            for si, rate in resolved:
                 self.on_converged(si, rate)
 
     # -- readouts ---------------------------------------------------------
@@ -389,14 +582,22 @@ class FleetMonitorService:
         lock.  The live jax state must never escape: its buffers are
         donated into the next dispatch, and a reference read after that
         raises "Array has been deleted"."""
-        rows = self._row_of_stream
         with self._lock:
+            rows = self._row_of_stream
             return FleetMonitorState(*(np.array(leaf)[rows]
                                        for leaf in self._state))
 
+    def _public_q(self, n_streams: int) -> int:
+        """Queue count implied by a readout's own stream count — used
+        instead of the live ``len(self.queues)`` so a readout captured
+        just before a concurrent attach/detach still slices itself
+        consistently."""
+        return n_streams // 2 if self.ends == "both" else n_streams
+
     def epochs(self) -> np.ndarray:
         """(S,) convergence epochs in public stream order."""
-        return self._epochs[self._row_of_stream]
+        with self._lock:
+            return self._epochs[self._row_of_stream]
 
     def _gated_rates(self) -> np.ndarray:
         """Readiness-gated items/s for every stream (see
@@ -418,9 +619,12 @@ class FleetMonitorService:
         with self._lock:
             epoch, count = self._epochs, self._count_np
             mean, last = self._mean_np, self._qbar_np
+            rows = self._row_of_stream    # captured WITH the mirrors: a
+            # concurrent attach/detach replaces both together, so a
+            # readout never indexes old arrays with a new permutation
         rates = gated_rate_arrays(self.cfg, epoch, count, mean, last,
                                   self.period_s)
-        return rates[self._row_of_stream]
+        return rates[rows]
 
     def blocked_counts(self) -> tuple[np.ndarray, np.ndarray]:
         """(S,) cumulative ``(n_blocked, n_total)`` period counts in
@@ -431,19 +635,57 @@ class FleetMonitorService:
         paper's Pr[WRITE] -> 0 regime."""
         with self._lock:
             nb, nt = self._nblk_np, self._ntot_np
-        rows = self._row_of_stream
+            rows = self._row_of_stream
         return nb[rows], nt[rows]
+
+    def recent_rates(self, which: str = "both") -> np.ndarray:
+        """Mean of each stream's last ``window`` valid q-folds as
+        items/s, public stream order — the freshest level signal the
+        state carries, deliberately NOT readiness-gated.  The control
+        loop compares this against ``gated_rates`` to detect *stale*
+        demand: an arrival estimate that converged and then went quiet
+        never re-converges (the epoch freezes at the old high level
+        while near-zero samples fold into the window), so without this
+        signal escalated provision would ratchet forever.
+
+        ``which`` selects ``"both"`` ((S,), all streams), ``"head"`` or
+        ``"tail"`` ((Q,), that half only — the control loop reads just
+        the tails, and at fleet scale copying the other half of the
+        (S, window) ring per tick would be pure waste).  Computed on
+        demand from the live state, not a harvest-time mirror: the copy
+        is fleet-size proportional and only control loops read it."""
+        with self._lock:
+            rows = self._row_of_stream
+            q = self._public_q(rows.shape[0])
+            if which == "head":
+                rows = rows[:q]
+            elif which == "tail":
+                rows = rows[q:]
+            elif which != "both":
+                raise ValueError(f"bad which {which!r}")
+            # fancy-indexing the zero-copy state view COPIES the
+            # selected rows while the lock still pins the buffers
+            # against donation into the next dispatch (see
+            # state_snapshot) — and yields public order directly
+            win = np.asarray(self._state.win)[rows]
+            fill = np.asarray(self._state.s_fill)[rows]
+        recent = win.sum(axis=1) \
+            / np.maximum(np.minimum(fill, win.shape[1]), 1)
+        scale = 1.0 / self.period_s if self.period_s > 0 else 0.0
+        return recent * scale
 
     def service_rates(self) -> np.ndarray:
         """(Q,) consumer non-blocking service rates, items/s (gated)."""
-        return self._gated_rates()[:len(self.queues)]
+        rates = self._gated_rates()
+        return rates[:self._public_q(rates.shape[0])]
 
     def arrival_rates(self) -> np.ndarray:
         """(Q,) producer arrival rates, items/s (gated); requires
         ``ends='both'``."""
         if self.ends != "both":
             raise ValueError("arrival rates need ends='both'")
-        return self._gated_rates()[len(self.queues):]
+        rates = self._gated_rates()
+        return rates[self._public_q(rates.shape[0]):]
 
     def rates_items_per_s(self) -> np.ndarray:
         """Back-compat alias for the head-end readout."""
@@ -451,7 +693,7 @@ class FleetMonitorService:
 
     def observed_blocking_fraction(self) -> np.ndarray:
         state = self.state_snapshot()
-        q = len(self.queues)
+        q = self._public_q(state.n_total.shape[0])
         n_total = np.maximum(state.n_total[:q], 1)
         return state.n_blocked[:q] / n_total
 

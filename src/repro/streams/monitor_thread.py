@@ -83,26 +83,34 @@ class MonitorThread(threading.Thread):
         self.monitors = monitors
         self.on_converged = on_converged
         self.min_sleep_s = min_sleep_s
-        self._stop = threading.Event()
+        self._stop_evt = threading.Event()
 
     def run(self) -> None:
-        while not self._stop.is_set():
+        while not self._stop_evt.is_set():
             next_wake = time.monotonic() + 1.0
             for qm in self.monitors:
                 due = qm._last_t + qm.period.period_s
                 now = time.monotonic()
                 if now >= due:
-                    before = qm.head.epoch
+                    # both monitors advance on the same sample: a
+                    # tail-only convergence (arrival-rate epoch) must
+                    # fire the callback too, not just the head's
+                    before_h, before_t = qm.head.epoch, qm.tail.epoch
                     qm.sample()
-                    if self.on_converged and qm.head.epoch > before:
+                    if self.on_converged and (qm.head.epoch > before_h
+                                              or qm.tail.epoch > before_t):
                         self.on_converged(qm)
                     due = qm._last_t + qm.period.period_s
                 next_wake = min(next_wake, due)
             delay = max(next_wake - time.monotonic(), self.min_sleep_s)
-            self._stop.wait(delay)
+            self._stop_evt.wait(delay)
 
     def stop(self) -> None:
-        self._stop.set()
+        """Stop and join (idempotent): a caller that proceeds to read
+        the monitors must not race a final in-flight ``sample()``."""
+        self._stop_evt.set()
+        if self.is_alive() and threading.current_thread() is not self:
+            self.join(timeout=10)
 
 
 class FleetMonitorThread(threading.Thread):
@@ -127,16 +135,16 @@ class FleetMonitorThread(threading.Thread):
             max_period_s=service.period_s * 64)
         self.adapt_period = adapt_period
         self.min_sleep_s = min_sleep_s
-        self._stop = threading.Event()
+        self._stop_evt = threading.Event()
 
     def run(self) -> None:
         self.service.warmup()          # jit-compile off the tick path
         last = time.monotonic()
         next_due = last
-        while not self._stop.is_set():
+        while not self._stop_evt.is_set():
             now = time.monotonic()
             if now < next_due:
-                self._stop.wait(max(next_due - now, self.min_sleep_s))
+                self._stop_evt.wait(max(next_due - now, self.min_sleep_s))
                 continue
             blocked = self.service.sample()
             realized, last = now - last, now
@@ -146,6 +154,14 @@ class FleetMonitorThread(threading.Thread):
             next_due = now + self.service.period_s
 
     def stop(self, flush: bool = True) -> None:
-        self._stop.set()
+        """Stop the tick thread, join it, then flush (idempotent).
+
+        The join must come first: ``flush()`` racing a final in-flight
+        ``sample()`` could land between its partial-chunk dispatch and
+        the sample's own chunk-boundary dispatch, double-folding the
+        staged tile.  Mirrors ``ControlLoop.stop()``."""
+        self._stop_evt.set()
+        if self.is_alive() and threading.current_thread() is not self:
+            self.join(timeout=10)
         if flush:
             self.service.flush()

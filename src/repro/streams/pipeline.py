@@ -175,6 +175,13 @@ class Pipeline:
     buffer policies, hysteresis/cooldown, decision audit in
     ``pipe.control.log``) and supersedes ``autotune`` — exactly one
     party may own actuation.
+
+    ``monitor=False`` builds the pipeline *externally monitored*: no
+    per-pipeline service or monitor thread is created — attach the
+    pipeline (built on the shared ``arena``) to a
+    ``repro.control.ControlGroup``, which owns one monitor + control
+    loop for every tenant and binds a sliced fleet view back here so
+    ``rates()`` / ``recommended_replicas()`` keep working.
     """
 
     def __init__(self, stages: list[Stage], capacity: int = 64,
@@ -185,7 +192,8 @@ class Pipeline:
                  arena: Optional[CounterArena] = None,
                  control: bool = False,
                  policies: Optional[PolicySet] = None,
-                 control_log: Optional[ControlLog] = None):
+                 control_log: Optional[ControlLog] = None,
+                 monitor: bool = True):
         self.stages = stages
         self.queues: list[InstrumentedQueue] = []
         self.sink: list[Any] = []
@@ -201,13 +209,23 @@ class Pipeline:
                                   arena=self.arena)
             self.queues.append(q)
 
+        if not monitor and (control or policies is not None or autotune):
+            raise ValueError(
+                "monitor=False hands monitoring AND control to a "
+                "ControlGroup — control/policies/autotune must stay off")
         # one fleet service monitors every link's head AND tail: one
         # collector pass and one fused dispatch per tick for the whole
-        # pipeline, convergence delivered as (indices, rates) batches
-        self.fleet = FleetMonitorService(
-            self.queues, monitor_cfg, period_s=base_period_s,
-            chunk_t=chunk_t, ends="both", on_fleet=self._on_fleet)
-        self.monitor = FleetMonitorThread(self.fleet)
+        # pipeline, convergence delivered as (indices, rates) batches.
+        # Externally-monitored pipelines (monitor=False) get these from
+        # the ControlGroup they attach to.
+        if monitor:
+            self.fleet = FleetMonitorService(
+                self.queues, monitor_cfg, period_s=base_period_s,
+                chunk_t=chunk_t, ends="both", on_fleet=self._on_fleet)
+            self.monitor = FleetMonitorThread(self.fleet)
+        else:
+            self.fleet = None          # bound by ControlGroup.attach
+            self.monitor = None
         self.tuner = BufferAutotuner(current=capacity)
         self._capacities = np.full(len(self.queues), capacity, np.int64)
         self.parallelism = ParallelismController()
@@ -220,7 +238,7 @@ class Pipeline:
         self._started = False
         self._scale_lock = threading.Lock()
         self.control: Optional[ControlLoop] = None
-        if control or policies is not None:
+        if (control or policies is not None) and monitor:
             self.policies = policies if policies is not None else PolicySet(
                 replica=self.replica_policy, buffer=self.buffer_policy)
             self.control = ControlLoop(self.fleet, self.policies,
@@ -242,6 +260,26 @@ class Pipeline:
         self._capacities, _, _ = self.tuner.actuate_fleet(
             self.queues, lam, mu, self._capacities,
             cv2=self.fleet.cv2s())
+
+    # multi-tenant protocol --------------------------------------------------
+    def control_tenant(self) -> tuple[list, "_PipelineActuator"]:
+        """The ``ControlGroup`` tenant protocol: this pipeline's
+        monitored queues (in public order) and its actuator adapter."""
+        return self.queues, _PipelineActuator(self)
+
+    def _bind_external_monitor(self, view) -> None:
+        """Called by ``ControlGroup`` attach/detach: a sliced fleet
+        view serving this pipeline's advisory readouts (None on
+        detach).  Only meaningful for ``monitor=False`` pipelines."""
+        if self.monitor is None:
+            self.fleet = view
+
+    def _require_fleet(self):
+        if self.fleet is None:
+            raise RuntimeError(
+                "pipeline is externally monitored (monitor=False): "
+                "attach it to a ControlGroup before reading rates")
+        return self.fleet
 
     # elastic actuation ------------------------------------------------------
     def _live_replica_array(self) -> np.ndarray:
@@ -339,7 +377,8 @@ class Pipeline:
                     self.sink.append(item)
 
         drainer = threading.Thread(target=drain, daemon=True)
-        self.monitor.start()
+        if self.monitor is not None:   # externally monitored otherwise
+            self.monitor.start()
         if self.control is not None:
             self.control.start()
         with self._scale_lock:
@@ -350,7 +389,8 @@ class Pipeline:
         drainer.join(timeout_s)
         if self.control is not None:
             self.control.stop()
-        self.monitor.stop()            # flushes the partial chunk
+        if self.monitor is not None:
+            self.monitor.stop()        # joins, then flushes the chunk
         return self.sink
 
     # observability ----------------------------------------------------------
@@ -359,17 +399,18 @@ class Pipeline:
         Welford-count readiness gate: a link that has not converged and
         has not accumulated ``min_q_samples`` q-folds reports 0 rather
         than a raw partial-window sample."""
-        mu = self.fleet.service_rates()
-        lam = self.fleet.arrival_rates()
-        eps = self.fleet.epochs()[:len(self.queues)]
-        blk = self.fleet.observed_blocking_fraction()
+        fleet = self._require_fleet()
+        mu = fleet.service_rates()
+        lam = fleet.arrival_rates()
+        eps = fleet.epochs()[:len(self.queues)]
+        blk = fleet.observed_blocking_fraction()
         out = {}
         for i, q in enumerate(self.queues):
             out[q.name] = {
                 "service_rate": float(mu[i]),
                 "arrival_rate": float(lam[i]),
                 "epochs": int(eps[i]),
-                "T": self.fleet.period_s,
+                "T": fleet.period_s,
                 "blocking_frac": float(blk[i]),
                 "capacity": q.capacity,
             }
@@ -381,8 +422,9 @@ class Pipeline:
         consumer stage in one fleet evaluation.  Delegates to the same
         ``ReplicaPolicy`` the control loop actuates — the advice here
         IS the target a ``control=True`` pipeline converges to."""
-        lam = self.fleet.arrival_rates()
-        mu = self.fleet.service_rates()
+        fleet = self._require_fleet()
+        lam = fleet.arrival_rates()
+        mu = fleet.service_rates()
         reps = self.replica_policy.targets(
             lam, mu, replicas=self._live_replica_array())
         return {self.stages[i + 1].name: int(reps[i])

@@ -15,12 +15,14 @@ import numpy as np
 import pytest
 
 from repro.control import (AdmissionPolicy, BufferPolicy, ControlConfig,
-                           ControlLog, ControlLoop, ControlRecord, PolicySet,
-                           ReplicaPolicy, control_decide,
-                           control_decide_trace_count, control_init)
+                           ControlGroup, ControlLog, ControlLoop,
+                           ControlRecord, PolicySet, ReplicaPolicy,
+                           control_decide, control_decide_trace_count,
+                           control_init)
 from repro.core.monitor import MonitorConfig
 from repro.streams import (CounterArena, FleetMonitorService,
-                           InstrumentedQueue, Pipeline, Stage)
+                           FleetMonitorThread, InstrumentedQueue,
+                           MonitorThread, Pipeline, Stage)
 
 CFG = MonitorConfig(window=16, min_q_samples=16)
 
@@ -263,7 +265,13 @@ def test_numpy_and_jit_decision_forms_agree():
                    replicas=rng.integers(1, 8, Q),
                    caps=rng.integers(4, 256, Q),
                    cv2=rng.uniform(0.1, 2, Q), occupancy=rng.random(Q),
-                   saturated=rng.random(Q) > 0.8)
+                   saturated=rng.random(Q) > 0.8,
+                   stale=rng.random(Q) > 0.8,
+                   leg_rep=rng.random(Q) > 0.2,
+                   leg_buf=rng.random(Q) > 0.2,
+                   leg_adm=rng.random(Q) > 0.2,
+                   headroom=rng.uniform(1.0, 2.0, Q),
+                   max_replicas=rng.integers(2, 16, Q))
         st_n, dn = control_decide(cfg, st_n, impl="numpy", **ops)
         st_j, dj = control_decide(cfg, st_j, impl="jit", donate=False,
                                   **ops)
@@ -478,6 +486,442 @@ def test_engine_admission_gate_shed_and_defer():
     threading.Thread(target=reopen, daemon=True).start()
     assert g.allow(2.0)                 # deferred submit goes through
     assert g.defer_count == 2
+
+
+def test_loop_period_rederives_from_adapting_service():
+    """Bugfix satellite: FleetMonitorThread adapts service.period_s
+    every tick, so a derived loop period must track it live instead of
+    freezing the construction-time value — and an explicit period must
+    stay fixed."""
+    svc, _ = _service(1)
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy()),
+                       _FakeActuator(1))
+    assert loop._current_period() == pytest.approx(
+        svc.period_s * svc.chunk_t)
+    svc.period_s *= 8                    # the thread's adaptive T widened
+    assert loop._current_period() == pytest.approx(
+        svc.period_s * svc.chunk_t)
+    assert loop.period_s == pytest.approx(svc.period_s * svc.chunk_t)
+
+    fixed = ControlLoop(svc, PolicySet(replica=ReplicaPolicy()),
+                        _FakeActuator(1), period_s=0.5)
+    svc.period_s *= 2
+    assert fixed._current_period() == 0.5
+
+    # the run() thread survives a live period change (smoke)
+    svc.period_s = 1e-4
+    loop.start()
+    time.sleep(0.05)
+    svc.period_s = 1e-3
+    time.sleep(0.02)
+    loop.stop()
+    assert not loop.is_alive() and loop.ticks >= 1
+
+
+def test_monitor_threads_stop_join_before_flush():
+    """Bugfix satellite: both monitor-thread stop() paths must join the
+    thread (so a final in-flight sample cannot race the flush) instead
+    of only setting the event."""
+    svc, _ = _service(2)
+    th = FleetMonitorThread(svc)
+    th.start()
+    time.sleep(0.03)
+    th.stop()                            # join + flush
+    assert not th.is_alive()
+    th.stop()                            # idempotent
+
+    arena = CounterArena(4)
+    q = InstrumentedQueue(8, arena=arena)
+    from repro.streams import QueueMonitor
+    mt = MonitorThread([QueueMonitor(q)])
+    mt.start()
+    time.sleep(0.02)
+    mt.stop()
+    assert not mt.is_alive()
+
+
+def test_monitor_thread_fires_on_tail_only_convergence():
+    """Bugfix satellite: a tail-only convergence (arrival-rate epoch
+    advance) must fire on_converged — previously only the head epoch
+    was checked and tail convergences were silently dropped."""
+    class _E:
+        epoch = 0
+
+    class _P:
+        period_s = 1e-3
+
+    class _FakeQM:
+        def __init__(self):
+            self.head, self.tail = _E(), _E()
+            self.period = _P()
+            self._last_t = 0.0
+            self.samples = 0
+
+        def sample(self):
+            self._last_t = time.monotonic()
+            self.samples += 1
+            if self.samples == 2:
+                self.tail = type("E", (), {"epoch": 1})()  # tail-only
+
+    fired = threading.Event()
+    qm = _FakeQM()
+    mt = MonitorThread([qm], on_converged=lambda m: fired.set())
+    mt.start()
+    assert fired.wait(5.0), "tail-only convergence must fire on_converged"
+    mt.stop()
+
+
+def test_control_loop_senses_head_only_service():
+    """The ends='head' sense path (no arrival leg: lam.shape[0] == 0)
+    must tick cleanly — demand stays dark, so neither the replica nor
+    the capacity leg may fire, and saturation never escalates."""
+    arena = CounterArena(8)
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(2)]
+    svc = FleetMonitorService(queues, CFG, period_s=1e-3, chunk_t=16,
+                              scale_to_period=False, ends="head")
+    act = _FakeActuator(2)
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy(),
+                                      buffer=BufferPolicy(),
+                                      confirm_ticks=1, cooldown_ticks=0),
+                       act)
+    for _ in range(200):
+        for q in queues:
+            q.head.tc = 50.0
+        svc.sample()
+    svc.flush()
+    assert (svc.gated_rates() > 0).all()     # heads converged...
+    for _ in range(6):
+        dec = loop.tick()
+        assert not np.asarray(dec.scale_mask).any()
+        assert not np.asarray(dec.probing).any()
+    assert act.calls == []                   # ...but demand is dark
+    svc.stop()
+
+
+# -- demand probe: scale-down for the escalated / stale regime -------------
+
+def test_probe_decays_escalated_replicas_no_ratchet():
+    """Acceptance: after an AIMD saturation escalation, a demand drop
+    is detected and replicas decay back to within 1 step of the
+    hand-tuned oracle within N = log2(overshoot) probe windows — the
+    escalation is no longer a ratchet."""
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=0, block_q=8,
+                        saturation_growth=2.0, max_replicas=16,
+                        probe_period_ticks=3, probe_window_ticks=2)
+    state = control_init(cfg, 1)
+    reps = 2
+    while reps < 8:                     # saturation escalates 2 -> 8
+        state, dec = control_decide(
+            cfg, state, lam=[0.0], mu=[120.0], ready=[True],
+            replicas=[reps], caps=[64], saturated=[True], donate=True)
+        if np.asarray(dec.scale_mask)[0]:
+            reps = int(np.asarray(dec.target_replicas)[0])
+    assert reps == 8
+    # demand dies: the frozen arrival estimate reads stale-high (the
+    # loop senses this as the window mean collapsing under the gated
+    # estimate and passes stale=True)
+    oracle, windows, ticks = 1, 0, 0
+    cycle = cfg.probe_period_ticks + cfg.probe_window_ticks
+    while reps > oracle + 1 and ticks < 8 * cycle:
+        state, dec = control_decide(
+            cfg, state, lam=[100.0], mu=[120.0], ready=[True],
+            replicas=[reps], caps=[64], stale=[True], donate=True)
+        ticks += 1
+        if np.asarray(dec.scale_mask)[0]:
+            reps = int(np.asarray(dec.target_replicas)[0])
+            windows += 1
+    assert reps <= oracle + 1            # within 1 step of the oracle
+    assert windows <= 3                  # 8 -> 4 -> 2: one per window
+    assert ticks <= 3 * cycle + 3
+
+
+def test_probe_window_reopens_shed_gate_and_aborts_on_demand():
+    """The probe window forces a shed gate open so hidden demand can
+    show itself; a window that re-saturates (demand is real) aborts the
+    cycle without decaying, one that stays dark decays."""
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=0, block_q=8,
+                        probe_period_ticks=2, probe_window_ticks=2,
+                        max_replicas=4, min_ready=1)
+    state = control_init(cfg, 1)
+
+    def tick(**kw):
+        nonlocal state
+        ops = dict(lam=[100.0], mu=[20.0], ready=[True], replicas=[4],
+                   caps=[64], occupancy=[0.95], donate=True)
+        ops.update(kw)
+        state, dec = control_decide(cfg, state, **ops)
+        return dec
+
+    for _ in range(4):                  # build peak, then collapse+hot
+        tick(mu=[100.0], occupancy=[0.2])
+    dec = tick()
+    assert np.asarray(dec.shed)[0]      # armed: collapsed + hot queue
+    # stale demand: probe cycle runs while the gate stays armed
+    seen_open = False
+    for _ in range(2 * (cfg.probe_period_ticks
+                        + cfg.probe_window_ticks)):
+        dec = tick(stale=[True])
+        p, s = (np.asarray(dec.probing)[0], np.asarray(dec.shed)[0])
+        if p:
+            assert not s                # window forces the gate open
+            seen_open = True
+        decayed = np.asarray(dec.scale_mask)[0]
+        if decayed:
+            break
+    assert seen_open and decayed
+    assert int(np.asarray(dec.target_replicas)[0]) == 2
+
+    # a probe that re-saturates (real demand flooded back) aborts:
+    # no decay fires while saturation holds
+    state = control_init(cfg, 1)
+    for _ in range(4):
+        tick(mu=[100.0], occupancy=[0.2])
+    for _ in range(3):
+        dec = tick(stale=[True])        # timer runs toward the window
+    dec = tick(stale=[True], saturated=[True])
+    assert not np.asarray(dec.probing)[0]
+    assert not np.asarray(dec.scale_mask)[0] \
+        or int(np.asarray(dec.target_replicas)[0]) >= 4
+
+
+def test_probe_end_to_end_through_service_staleness():
+    """Loop-level probe: rates converge through the real service, then
+    the stream goes quiet — the gated arrival estimate freezes high,
+    the window mean collapses, the loop's staleness sense kicks in and
+    the probe decays the (over-provisioned) replicas, no ratchet."""
+    svc, queues = _service(1)
+    act = _FakeActuator(1, reps=8)      # provision left over from a surge
+    ps = PolicySet(replica=ReplicaPolicy(), confirm_ticks=1,
+                   cooldown_ticks=0, probe_period_ticks=2,
+                   probe_window_ticks=2)
+    loop = ControlLoop(svc, ps, act)
+    _feed(svc, queues, head_tc=120.0, tail_tc=100.0, n=200)
+    assert (svc.gated_rates() > 0).all()
+    q = queues[0]
+    decayed = []
+    for t in range(40):
+        for _ in range(16):             # demand dead: consumer starves,
+            q.head.tc = 0.0             # producer folds zero samples
+            q.head.blocked = True
+            q.tail.tc = 0.0
+            q.tail.blocked = False
+            svc.sample()
+        loop.tick()
+        if act.reps[0] <= 2:
+            break
+    assert act.reps[0] <= 2, "stale demand must decay escalated replicas"
+    scales = [c for c in act.calls if c[0] == "scale"]
+    assert scales and scales[-1][2] <= 2
+
+
+# -- multi-tenant control plane (ControlGroup) -----------------------------
+
+def _raw_tenant(arena, n, caps=64, reps=1):
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(n)]
+    return queues, _FakeActuator(n, caps=caps, reps=reps)
+
+
+def test_group_attach_detach_keeps_decision_trace_flat():
+    """Acceptance: ragged tenant churn (attach/detach of different
+    sizes) under impl='jit' never retraces the decision dispatch —
+    per-tenant differences ride as operands, and the queue axis pads
+    to one block_q multiple."""
+    arena = CounterArena(32)
+    group = ControlGroup(
+        PolicySet(replica=ReplicaPolicy(), block_q=8, confirm_ticks=3,
+                  cooldown_ticks=6),     # distinct knobs: own cache key
+        arena=arena, monitor_cfg=CFG, period_s=1e-3, chunk_t=8,
+        scale_to_period=False, impl="jit")
+    h1 = group.attach(_raw_tenant(arena, 2), name="t1")
+    group.tick()
+    warm = control_decide_trace_count()
+    h2 = group.attach(_raw_tenant(arena, 3), name="t2")
+    group.tick()
+    group.detach(h1)
+    group.tick()
+    group.attach(_raw_tenant(arena, 1), name="t3")
+    group.tick()
+    group.detach(h2)
+    group.tick()
+    assert control_decide_trace_count() == warm
+    group.service.stop()
+
+
+def test_group_remap_preserves_tenant_gating_state():
+    """Detaching one tenant must not reset another's loop state: a
+    half-built confirmation counter carries across the restructure and
+    fires on schedule, not one tick late."""
+    arena = CounterArena(16)
+    group = ControlGroup(
+        PolicySet(replica=ReplicaPolicy(), confirm_ticks=2,
+                  cooldown_ticks=0, block_q=8),
+        arena=arena, monitor_cfg=CFG, period_s=1e-3, chunk_t=4,
+        scale_to_period=False)
+    qa, acta = _raw_tenant(arena, 1)
+    qb, actb = _raw_tenant(arena, 1)
+    ha = group.attach((qa, acta), name="a")
+    hb = group.attach((qb, actb), name="b")
+    # converge tenant b at 2x overload (3-replica target)
+    for _ in range(200):
+        qa[0].head.tc = qa[0].tail.tc = 50.0
+        qb[0].head.tc, qb[0].tail.tc = 50.0, 100.0
+        group.service.sample()
+    group.service.flush()
+    group.tick()                         # b: rep_agree = 1 (of 2)
+    assert not [c for c in actb.calls if c[0] == "scale"]
+    group.detach(ha)                     # restructure mid-confirmation
+    group.tick()                         # b: rep_agree = 2 -> fires now
+    scales = [c for c in actb.calls if c[0] == "scale"]
+    assert scales == [("scale", 0, 3)]
+    group.service.stop()
+
+
+def test_control_group_spans_pipelines_and_engine():
+    """Integration: two monitor=False pipelines + one monitor=False
+    engine share one arena and one ControlGroup; items flow exactly,
+    advisory readouts ride the bound tenant views, the engine's
+    admission gate is actuated through the composite, and detached
+    tenants can close their queues."""
+    from repro.serve import Engine, ServeConfig
+
+    class _Cfg:
+        vocab_size = 16
+
+    class _FakeModel:
+        cfg = _Cfg()
+
+        def prefill(self, params, batch):
+            raise NotImplementedError
+
+        def decode_step(self, params, cache, tok, pos):
+            raise NotImplementedError
+
+    arena = CounterArena(32)
+    group = ControlGroup(
+        PolicySet(replica=ReplicaPolicy(), buffer=BufferPolicy(),
+                  admission=AdmissionPolicy(), block_q=8),
+        arena=arena, monitor_cfg=CFG, period_s=1e-3, chunk_t=8)
+    pa = Pipeline([Stage("srcA", source=range(2000)),
+                   Stage("wA", fn=lambda x: x * 2)], capacity=32,
+                  arena=arena, monitor=False)
+    pb = Pipeline([Stage("srcB", source=range(1000)),
+                   Stage("wB", fn=lambda x: x + 1)], capacity=32,
+                  arena=arena, monitor=False)
+    eng = Engine(_FakeModel(), None, ServeConfig(queue_capacity=8),
+                 arena=arena, monitor=False)
+    with pytest.raises(RuntimeError, match="externally monitored"):
+        pa.rates()
+    group.attach(pa, name="A")
+    group.attach(pb, name="B")
+    h_eng = group.attach(eng, policies=PolicySet(
+        buffer=BufferPolicy(), admission=AdmissionPolicy()),
+        name="engine")
+    group.start()
+    out_a = pa.run_collect(timeout_s=120)
+    out_b = pb.run_collect(timeout_s=120)
+    assert sorted(out_a) == [2 * i for i in range(2000)]
+    assert sorted(out_b) == [i + 1 for i in range(1000)]
+    # advisory readouts ride the sliced tenant views
+    assert set(pa.rates()) == {"srcA->wA", "wA->sink"}
+    assert isinstance(pa.recommended_replicas(), dict)
+    assert eng.service_rate() >= 0.0
+    # the composite routes admission to the engine's gate
+    eng_idx = len(pa.queues) + len(pb.queues)
+    assert group.actuator.admit(eng_idx, True) == "applied"
+    assert eng.gate.shedding
+    group.actuator.admit(eng_idx, False)
+    # every audited decision carries a real outcome
+    assert all(r.outcome in ("applied", "rejected", "noop")
+               for r in group.log)
+    group.detach(h_eng)
+    with pytest.raises(RuntimeError, match="externally monitored"):
+        eng.service_rate()               # view unbound on detach
+    group.stop()
+    eng.queue.close()                    # detached + stopped: unpinned
+
+
+def test_group_rejects_leg_outside_superset():
+    group = ControlGroup(PolicySet(replica=ReplicaPolicy(), block_q=8),
+                         arena=CounterArena(8), monitor_cfg=CFG)
+    with pytest.raises(ValueError, match="superset"):
+        group.attach(_raw_tenant(group.arena, 1),
+                     policies=PolicySet(admission=AdmissionPolicy()))
+
+
+def test_group_rejects_divergent_gating_knobs():
+    """Gating/probe knobs live in the ONE shared ControlConfig: a
+    tenant PolicySet asking for different (non-default) values must be
+    rejected, not silently overridden by the group's."""
+    group = ControlGroup(PolicySet(replica=ReplicaPolicy(), block_q=8,
+                                   probe_period_ticks=6),
+                         arena=CounterArena(8), monitor_cfg=CFG)
+    with pytest.raises(ValueError, match="group-wide"):
+        group.attach(_raw_tenant(group.arena, 1),
+                     policies=PolicySet(replica=ReplicaPolicy(),
+                                        probe_period_ticks=50))
+    # defaults read as unspecified; matching values are fine
+    group.attach(_raw_tenant(group.arena, 1),
+                 policies=PolicySet(replica=ReplicaPolicy(),
+                                    probe_period_ticks=6))
+    group.service.stop()
+
+
+def test_restructure_translates_convergence_emits():
+    """Emits harvested during a restructure carry post-restructure
+    stream indices (detached streams' emits are dropped) — consumers
+    resolve them against the new fleet."""
+    arena = CounterArena(16)
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(2)]
+    got = []
+    # chunk_t larger than the feed: every sample stays staged, so the
+    # first convergences are dispatched+harvested BY the restructure
+    svc = FleetMonitorService(
+        queues, CFG, period_s=1e-3, chunk_t=256, scale_to_period=False,
+        ends="both", on_fleet=lambda idx, rates: got.append(idx.copy()))
+    for _ in range(200):
+        for q in queues:
+            q.head.tc = q.tail.tc = 50.0
+        svc.sample()
+    assert not got                       # nothing dispatched yet
+    svc.detach([queues[0]])              # restructure fires the emits
+    assert got, "staged convergences must still be delivered"
+    seen = np.concatenate(got)
+    # queue 1's streams were old indices (1, 3); after the detach they
+    # are (0, 1) — delivered translated, detached streams dropped
+    assert set(seen.tolist()) == {0, 1}
+    svc.stop()
+
+
+def test_group_rejects_double_attach():
+    """Attaching an already-monitored queue would gather it into two
+    staging rows (double-counting every rate) and a later detach of one
+    alias would desync the other — the service must refuse."""
+    arena = CounterArena(8)
+    group = ControlGroup(PolicySet(replica=ReplicaPolicy(), block_q=8),
+                         arena=arena, monitor_cfg=CFG)
+    tenant = _raw_tenant(arena, 1)
+    group.attach(tenant, name="t")
+    with pytest.raises(ValueError, match="already monitored"):
+        group.attach(tenant, name="t-again")
+    assert len(group.tenants()) == 1     # failed attach left no residue
+    assert group.loop.n_queues == 1
+    group.service.stop()
+
+
+def test_group_rejects_self_monitoring_tenant():
+    """A tenant that still owns its own monitor (default monitor=True)
+    would double-collect the shared arena cells — both collectors
+    copy-and-zero the same counters and each silently reads ~half the
+    true rates — so attach must refuse it."""
+    arena = CounterArena(16)
+    group = ControlGroup(PolicySet(replica=ReplicaPolicy(), block_q=8),
+                         arena=arena, monitor_cfg=CFG)
+    pipe = Pipeline([Stage("src", source=range(4)),
+                     Stage("id", fn=lambda x: x)], capacity=8,
+                    arena=arena)            # monitor=True: self-owned
+    with pytest.raises(ValueError, match="monitor=False"):
+        group.attach(pipe)
+    pipe.fleet.stop()
 
 
 def test_engine_control_loop_sheds_submits():

@@ -280,3 +280,80 @@ def test_pipeline_autotune_vectorized():
     assert set(reps) == {"x3"}
     assert reps["x3"] >= 1
     assert (pipe._capacities >= pipe.tuner.min_capacity).all()
+
+
+def test_fleet_service_live_attach_preserves_estimates():
+    """Multi-tenant restructure (PR 5): attaching queues to a live
+    service keeps every retained stream's Algorithm-1 state (epochs,
+    gated estimates) bit-for-bit, folds the in-flight partial chunk
+    first, and lets the new queues converge from a clean init."""
+    from repro.streams import CounterArena
+
+    cfg = MonitorConfig(window=16, min_q_samples=16)
+    arena = CounterArena(16)
+    q_old = [InstrumentedQueue(8, arena=arena) for _ in range(2)]
+    svc = FleetMonitorService(q_old, cfg, period_s=1e-3, chunk_t=16,
+                              scale_to_period=False, ends="both")
+
+    def feed(queues, rates, n):
+        for _ in range(n):
+            for q, r in zip(queues, rates):
+                q.head.tc = float(r)
+                q.tail.tc = float(r)
+            svc.sample()
+
+    feed(q_old, [100.0, 200.0], 203)     # 203: partial chunk in flight
+    svc.flush()
+    before_rates = svc.gated_rates().copy()
+    before_epochs = svc.epochs().copy()
+    assert (before_rates > 0).all()
+
+    q_new = InstrumentedQueue(8, arena=arena)
+    svc.attach([q_new])
+    assert len(svc.queues) == 3 and svc.n_streams == 6
+    # retained streams: heads 0-1 and tails now at 3-4
+    after = svc.gated_rates()
+    np.testing.assert_allclose(after[[0, 1, 3, 4]],
+                               before_rates[[0, 1, 2, 3]], rtol=1e-6)
+    np.testing.assert_array_equal(svc.epochs()[[0, 1, 3, 4]],
+                                  before_epochs[[0, 1, 2, 3]])
+    assert after[2] == 0.0 and after[5] == 0.0   # fresh queue: unready
+
+    feed(svc.queues, [100.0, 200.0, 300.0], 200)
+    svc.flush()
+    rates = svc.gated_rates() * svc.period_s
+    np.testing.assert_allclose(rates[:3], [100, 200, 300], rtol=0.05)
+
+    # detach the middle queue: remaining order preserved, end unpinned
+    svc.detach([q_old[1]])
+    assert len(svc.queues) == 2
+    rates2 = svc.gated_rates() * svc.period_s
+    np.testing.assert_allclose(rates2[:2], [100, 300], rtol=0.05)
+    q_old[1].close()                     # detached => slot recycles
+    with pytest.raises(ValueError, match="monitors"):
+        q_old[0].close()                 # still monitored => pinned
+    svc.stop()
+    q_old[0].close()
+
+
+def test_fleet_service_attach_from_empty():
+    """A service born empty (the ControlGroup posture) samples as a
+    no-op, then monitors normally after the first attach."""
+    from repro.streams import CounterArena
+
+    cfg = MonitorConfig(window=16, min_q_samples=16)
+    arena = CounterArena(8)
+    svc = FleetMonitorService([], cfg, period_s=1e-3, chunk_t=8,
+                              scale_to_period=False, ends="both")
+    for _ in range(20):                  # empty ticks cross chunk edges
+        assert svc.sample() is False
+    svc.flush()
+    q = InstrumentedQueue(8, arena=arena)
+    svc.attach([q])
+    for _ in range(200):
+        q.head.tc = 50.0
+        q.tail.tc = 50.0
+        svc.sample()
+    svc.flush()
+    assert (svc.gated_rates() > 0).all()
+    svc.stop()

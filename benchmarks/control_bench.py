@@ -39,13 +39,15 @@ from __future__ import annotations
 import json
 import os
 import pathlib
+import threading
 import time
 
 import numpy as np
 
-from repro.control import (AdmissionPolicy, BufferPolicy, ControlGroup,
-                           ControlLoop, PolicySet, ReplicaPolicy,
-                           control_decide_trace_count)
+from repro.control import (AdmissionPolicy, BufferPolicy, ControlConfig,
+                           ControlGroup, ControlLoop, PolicySet,
+                           ReplicaPolicy, control_decide,
+                           control_decide_trace_count, control_init)
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig, run_monitor_fleet
 from repro.streams import CounterArena, FleetMonitorService, InstrumentedQueue
@@ -646,6 +648,170 @@ def control_tick_overhead():
                   f"collector tick), amortized over chunk_t={chunk_t}")
 
 
+def chaos_recovery():
+    """Chaos scenario: random replica kills + one injected monitor-
+    thread death against a REAL supervised pipeline under closed-loop
+    control.
+
+    A paced source (so throughput is demand-bound and windows are
+    comparable) feeds a replicated work stage; a seeded ``FaultPlan``
+    kills replicas mid-run and silently kills the ``FleetMonitorThread``
+    once.  The ``ReplicaSupervisor`` must detect and respawn the dead
+    replicas, the control loop's watchdog must restart the monitor (the
+    service keeps all estimator state), and the whole episode must be
+    audited in the shared ``ControlLog``.  Gates: window throughput
+    back to >= 70% of the fault-free median within 20 windows of the
+    last kill, availability (fault-free wall-clock over chaos
+    wall-clock) >= 90%, zero unhandled thread deaths, and the `faulty`
+    decision operand causes zero retraces."""
+    from repro.ft import FaultPlan, ReplicaSupervisor
+    from repro.streams import Pipeline, Stage
+    quick = _quick()
+    N = 1200 if quick else 4000
+    pace_s = 1.0 / 1100.0          # demand: ~1100 items/s
+    work_s = 1.5e-3                # capacity: ~667 items/s per replica
+    window_s = 0.05
+    kill_window = (0.2, 0.8) if quick else (0.5, 2.0)
+    mon_death_at = 0.4 if quick else 1.2
+    recovery_frac, recovery_limit = 0.7, 20
+    avail_target = 0.9
+
+    def build(plan):
+        def src():
+            for i in range(N):
+                time.sleep(pace_s)
+                yield i
+
+        def work(x):
+            time.sleep(work_s)
+            return x
+
+        return Pipeline([Stage("src", source=src()),
+                         Stage("work", fn=work, replicas=2)],
+                        capacity=64, arena=CounterArena(16),
+                        control=True, monitor_cfg=MCFG, fault_plan=plan)
+
+    def run(pipe, plan=None):
+        """Background run_collect; sample sink size every window."""
+        done = threading.Event()
+
+        def go():
+            pipe.run_collect(timeout_s=300)
+            done.set()
+
+        t = threading.Thread(target=go, daemon=True)
+        t0 = time.monotonic()
+        if plan is not None:
+            plan.arm(t0)
+        t.start()
+        windows, last = [], 0
+        while not done.is_set():
+            done.wait(window_s)
+            n = len(pipe.sink)
+            windows.append((time.monotonic() - t0, n - last))
+            last = n
+        t.join(timeout=30)
+        return windows, time.monotonic() - t0
+
+    # fault-free baseline
+    base_pipe = build(None)
+    base_wins, t_base = run(base_pipe)
+    base_counts = np.array([c for _, c in base_wins[2:-2]], float)
+    base_med = float(np.median(base_counts)) if base_counts.size else 1.0
+
+    # chaos run: 3 replica kills + 1 monitor death
+    plan = FaultPlan.chaos(seed=0, targets=["work"], n_crashes=3,
+                           window_s=kill_window,
+                           monitor_death_at=mon_death_at)
+    pipe = build(plan)
+    sup = ReplicaSupervisor(pipe, poll_s=0.01, backoff_base_s=0.01)
+    sup.start()
+    wins, t_chaos = run(pipe, plan)
+    sup.stop()
+
+    fired = plan.fired()
+    crash_ts = [t for t, e in fired if e.kind == "crash"]
+    mon_fired = any(e.kind == "monitor_death" for _, e in fired)
+    # recovery: windows from the LAST kill until throughput re-reaches
+    # recovery_frac of the fault-free median
+    recovery = -1
+    if crash_ts:
+        last_rel = max(crash_ts) - (plan._t0 or 0.0)
+        after = [(i, end, c) for i, (end, c) in enumerate(wins)
+                 if end > last_rel]
+        for k, (_, _, c) in enumerate(after):
+            if c >= recovery_frac * base_med:
+                recovery = k
+                break
+    availability = min(1.0, t_base / max(t_chaos, 1e-9))
+    # unhandled thread deaths: every fired kill must be in stats(), a
+    # fired monitor death must have a watchdog restart
+    st = pipe.stats()
+    health = pipe.control.health()
+    unhandled = max(0, len(crash_ts) - st["crash_count"])
+    if mon_fired and health["monitor_restarts"] == 0:
+        unhandled += 1
+
+    # the `faulty` operand must not retrace the decision dispatch
+    tcfg = ControlConfig(confirm_ticks=1, block_q=16, cooldown_ticks=13)
+
+    def dispatch(q, f):
+        control_decide(tcfg, control_init(tcfg, q),
+                       lam=np.full(q, 100.0), mu=np.full(q, 50.0),
+                       ready=np.ones(q, bool), replicas=np.ones(q),
+                       caps=np.full(q, 64), faulty=f, impl="jit",
+                       donate=True)
+
+    dispatch(3, None)
+    warm = control_decide_trace_count()
+    dispatch(3, np.array([True, False, True]))
+    dispatch(5, np.ones(5, bool))
+    retraces = control_decide_trace_count() - warm
+
+    audit = [
+        {"policy": r.policy, "action": r.action, "value": r.value,
+         "outcome": r.outcome, "error": r.error}
+        for r in pipe.control.log.records()
+        if r.policy in ("supervisor", "watchdog", "loop", "sense")][:80]
+    recovered = 0 <= recovery <= recovery_limit
+    ok = (recovered and availability >= avail_target and unhandled == 0
+          and retraces == 0)
+    section = {
+        "items": N, "window_s": window_s,
+        "faults_fired": [{"kind": e.kind, "target": e.target,
+                          "at_s": e.at_s} for _, e in fired],
+        "faultfree_s": t_base, "chaos_s": t_chaos,
+        "faultfree_median_window_items": base_med,
+        "recovery_windows": recovery,
+        "availability": availability,
+        "replica_respawns": sup.respawns,
+        "monitor_restarts": health["monitor_restarts"],
+        "crashes_recorded": st["crash_count"],
+        "unhandled_thread_deaths": unhandled,
+        "faulty_operand_retraces": int(retraces),
+        "audit": audit,
+        "target": {"recovery_windows": recovery_limit,
+                   "recovery_frac": recovery_frac,
+                   "availability": avail_target,
+                   "unhandled_thread_deaths": 0, "met": ok},
+    }
+    _update_report("chaos", section)
+    rows = [f"chaos/recovery_windows,{recovery},target<={recovery_limit}",
+            f"chaos/availability,{availability:.3f},target>={avail_target}",
+            f"chaos/respawns,{sup.respawns},"
+            f"monitor_restarts={health['monitor_restarts']}"]
+    return rows, (f"chaos: {len(crash_ts)} kills + "
+                  f"{'1' if mon_fired else '0'} monitor death -> "
+                  f"recovered in {recovery} windows "
+                  f"(target <={recovery_limit}), availability "
+                  f"{availability * 100:.1f}% (target >=90%), "
+                  f"{sup.respawns} respawns, "
+                  f"{health['monitor_restarts']} monitor restarts, "
+                  f"{unhandled} unhandled deaths, "
+                  f"{retraces} faulty-operand retraces, ok={ok}")
+
+
 ALL = [closed_loop_step_change, closed_loop_slow_drift,
        closed_loop_bursty_arrivals, closed_loop_admission_collapse,
-       closed_loop_multi_tenant, control_parity, control_tick_overhead]
+       closed_loop_multi_tenant, control_parity, control_tick_overhead,
+       chaos_recovery]

@@ -2,9 +2,12 @@
 # One-command smoke: tier-1 tests + the pipeline-integration, collector
 # and control benchmarks in quick mode.  The control block gates the
 # closed-loop scenarios (step-change recovery, estimate parity, tick
-# overhead) and the multi-tenant scenario (one ControlGroup over three
+# overhead), the multi-tenant scenario (one ControlGroup over three
 # tenants: >=1.5x rebalance recovery, zero decision-dispatch retraces
-# across tenant attach/detach, per-tenant leg masks honored).
+# across tenant attach/detach, per-tenant leg masks honored) and the
+# chaos scenario (replica kills + monitor death: recovery to >=70% of
+# fault-free throughput within the window, availability >= 90%, zero
+# unhandled thread deaths, zero faulty-operand retraces).
 #
 #   scripts/smoke.sh
 #
@@ -82,5 +85,21 @@ assert mt["decide_retraces_across_churn"] == 0, \
     "tenant churn retraced the decision dispatch"
 assert mt["engine_scale_actions"] == 0, \
     "per-tenant leg mask leaked the replica leg onto the engine tenant"
+ch = rep["chaos"]
+print(f"smoke: chaos recovery = {ch['recovery_windows']} windows "
+      f"(target <= {ch['target']['recovery_windows']}), availability = "
+      f"{ch['availability'] * 100:.1f}% (target >= 90%), "
+      f"{ch['replica_respawns']} respawns + "
+      f"{ch['monitor_restarts']} monitor restarts, "
+      f"{ch['unhandled_thread_deaths']} unhandled thread deaths, "
+      f"{ch['faulty_operand_retraces']} faulty-operand retraces")
+assert 0 <= ch["recovery_windows"] <= ch["target"]["recovery_windows"], \
+    "chaos: throughput did not recover within the window budget"
+assert ch["availability"] >= ch["target"]["availability"], \
+    "chaos: availability under faults below 90% of fault-free"
+assert ch["unhandled_thread_deaths"] == 0, \
+    "chaos: a thread died without being recorded/handled"
+assert ch["faulty_operand_retraces"] == 0, \
+    "chaos: the faulty operand retraced the decision dispatch"
 EOF
 echo "smoke: OK"

@@ -121,6 +121,17 @@ class CompositeActuator:
                          else np.ones(len(t), bool))
         return (np.concatenate(parts) if parts else np.zeros(0, bool))
 
+    def faulty(self) -> np.ndarray:
+        """Concatenated degraded-queue masks: a tenant whose adapter has
+        no supervision (no ``faulty``) contributes all-healthy."""
+        parts = []
+        for t in self._group._tenants:
+            a = t.actuator
+            parts.append(np.asarray(a.faulty(), bool)
+                         if hasattr(a, "faulty")
+                         else np.zeros(len(t), bool))
+        return (np.concatenate(parts) if parts else np.zeros(0, bool))
+
     def policy_overrides(self) -> dict:
         """Per-queue tenant masks + replica-knob overrides, merged into
         the one fused decision: every array is (Q,) in group queue
@@ -404,6 +415,12 @@ class ControlGroup:
                 self.loop.warmup()
             if hasattr(handle.obj, "_bind_external_monitor"):
                 handle.obj._bind_external_monitor(None)
+            # a supervised tenant's replica hosts must not linger in the
+            # heartbeat registry after the tenant leaves the group — a
+            # later re-attach would otherwise inherit stale lapses
+            sup = getattr(handle.obj, "supervisor", None)
+            if sup is not None:
+                sup.forget_tenant()
 
     def tenants(self) -> list[TenantHandle]:
         return list(self._tenants)

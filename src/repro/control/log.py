@@ -26,17 +26,34 @@ class ControlRecord:
     ``outcome`` is ``"applied"`` when the actuator took the action,
     ``"rejected"`` when it refused (e.g. a shrink below the queued item
     count — retried once the queue drains), ``"noop"`` when the decision
-    matched the live configuration already.
+    matched the live configuration already, ``"error"`` when the
+    actuation failed (raised or timed out past its retries — the loop
+    rolled back what it could and carries on), and ``"observed"`` for
+    pure detection records (sense quarantine, supervisor fault
+    detection) that actuated nothing.
+
+    ``error`` is the failure-handling error code (empty on the happy
+    path): ``E_ACT_RAISE`` / ``E_ACT_SLOW`` (actuation raise/timeout),
+    ``E_SENSE_NAN`` (quarantined non-finite estimate), ``E_JIT_DISPATCH``
+    (decision dispatch degraded to the numpy host path), ``E_TICK``
+    (contained tick failure), ``E_MONITOR_DEAD`` (watchdog restarted
+    the monitor thread), ``E_REPLICA_DEAD`` / ``E_REPLICA_STALL`` /
+    ``E_BACKOFF`` / ``E_CRASH_LOOP`` / ``E_STOP_SEEN`` (supervisor),
+    ``E_ENGINE_DEAD`` (engine worker-loop death).
     """
     tick: int                  # control-loop tick counter
     t: float                   # time.monotonic() at decision time
     queue: int                 # public stream/queue index
     policy: str                # 'replicas' | 'capacity' | 'admission'
+                               # | 'sense' | 'loop' | 'watchdog'
+                               # | 'supervisor'
     observed_lam: float
     observed_mu: float
     action: str                # e.g. 'scale', 'resize', 'shed', 'admit'
     value: int                 # target replicas / capacity / gate state
     outcome: str               # 'applied' | 'rejected' | 'noop'
+                               # | 'error' | 'observed'
+    error: str = ""            # error code, '' on the happy path
 
 
 class ControlLog:

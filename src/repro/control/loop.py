@@ -26,7 +26,31 @@ of upward dependencies.  An adapter provides:
 * ``scale(i, n)`` / ``resize(i, cap)`` / ``admit(i, shed)`` ->
   outcome string (``'applied'`` | ``'rejected'`` | ``'noop'``) — a
   rejection (e.g. a shrink below the queued item count) is recorded and
-  retried naturally on a later tick.
+  retried naturally on a later tick;
+* ``faulty()`` -> (Q,) bool (optional): queues whose consumer stage is
+  degraded (crash-looping, retired by the supervisor) — the decision
+  dispatch holds their replica/buffer actions and forces admission
+  shut, as one extra padded operand (no retraces).
+
+The loop is hardened against the failure modes a long-running control
+plane actually sees — each is audited in the ``ControlLog`` with an
+error code and surfaced via ``health()``:
+
+* **sense**: NaN/Inf gated estimates are quarantined (the last finite
+  estimate substitutes, ``E_SENSE_NAN``) so one poisoned readout cannot
+  reach the decision math;
+* **actuate**: a raising/slow actuator verb is retried with backoff
+  under an elapsed-time budget; a final failure is recorded
+  (``E_ACT_RAISE``/``E_ACT_SLOW``), admission failures roll the gate
+  back so the loop's memory never diverges from the physical gate;
+* **decide**: repeated jit-dispatch failures degrade the loop to the
+  numpy host path of the *same* ``_step_math`` (``E_JIT_DISPATCH``);
+* **monitor**: a watchdog (``watch_monitor``) restarts a dead
+  ``FleetMonitorThread`` between ticks — the ``FleetMonitorService``
+  holds all estimator state, so the restart loses nothing
+  (``E_MONITOR_DEAD``);
+* **tick**: any other tick failure is contained (``E_TICK``) — the
+  timer thread never dies of one bad tick.
 
 Lock ordering (deadlock audit): a tick takes ``ControlLoop._lock``
 outermost, then reads the service (``service._lock`` -> ``arena.lock``,
@@ -63,7 +87,11 @@ class ControlLoop(threading.Thread):
     def __init__(self, service, policies: PolicySet, actuator, *,
                  log: Optional[ControlLog] = None,
                  period_s: Optional[float] = None,
-                 impl: str = "auto", min_sleep_s: float = 2e-4):
+                 impl: str = "auto", min_sleep_s: float = 2e-4,
+                 actuation_retries: int = 2,
+                 actuation_backoff_s: float = 2e-3,
+                 actuation_timeout_s: float = 0.25,
+                 jit_fail_limit: int = 3):
         super().__init__(daemon=True, name="repro-control")
         self.service = service
         self.policies = policies
@@ -97,6 +125,29 @@ class ControlLoop(threading.Thread):
         # differenced to detect saturation (demand unobservable)
         self._last_blk = np.zeros(q, np.int64)
         self._last_tot = np.zeros(q, np.int64)
+        # -- failure handling ----------------------------------------------
+        # sense-side quarantine: last finite gated estimates, substituted
+        # for NaN/Inf readings so one poisoned readout cannot reach the
+        # decision math (garbage targets actuate like any others)
+        self._last_good_mu = np.zeros(q)
+        self._last_good_lam = np.zeros(q)
+        self.quarantined = 0               # estimates quarantined, ever
+        # actuation failure policy: retry with backoff, then record the
+        # failure (outcome 'error' + code) and roll back what we can
+        self.actuation_retries = int(actuation_retries)
+        self.actuation_backoff_s = float(actuation_backoff_s)
+        self.actuation_timeout_s = float(actuation_timeout_s)
+        self.actuation_errors = 0
+        # decision-dispatch degradation: repeated jit failures fall the
+        # loop back to the numpy host path of the SAME _step_math
+        self.jit_fail_limit = int(jit_fail_limit)
+        self._jit_fail = 0
+        self.impl_degraded = False
+        self.tick_errors = 0               # contained tick failures
+        # monitor watchdog (see watch_monitor)
+        self._mon_get = None
+        self._mon_restart = None
+        self.monitor_restarts = 0
         self._lock = threading.Lock()      # serializes tick()/stop()
         self._stop_evt = threading.Event()
 
@@ -137,6 +188,8 @@ class ControlLoop(threading.Thread):
         # -- sense: one gated readout for both ends ----------------------
         rates = svc.gated_rates()
         mu, lam = rates[:q], rates[q:]
+        mu, bad_mu = self._quarantine(mu, self._last_good_mu)
+        bad_lam = np.zeros(0, np.int64)
         ready = mu > 0                     # head estimate usable
         tails = slice(q, None)
         if lam.shape[0] == 0:              # ends="head" service: no
@@ -144,6 +197,7 @@ class ControlLoop(threading.Thread):
             saturated = np.zeros(q, bool)
             stale = np.zeros(q, bool)
         else:
+            lam, bad_lam = self._quarantine(lam, self._last_good_lam)
             # saturation: the tail leg blocked (queue full) for nearly
             # every period since the last tick — demand is dark,
             # escalate instead
@@ -160,6 +214,14 @@ class ControlLoop(threading.Thread):
             # signal is stale and the probe (not the formula) owns it
             recent = svc.recent_rates("tail")
             stale = (lam > 0) & (recent < self.cfg.stale_frac * lam)
+        n_bad = int(bad_mu.size + bad_lam.size)
+        if n_bad:                          # one audit record per tick
+            qi = int(bad_mu[0]) if bad_mu.size else int(bad_lam[0])
+            self.log.append(ControlRecord(
+                tick=self.ticks, t=time.monotonic(), queue=qi,
+                policy="sense", observed_lam=float(lam[qi]),
+                observed_mu=float(mu[qi]), action="quarantine",
+                value=n_bad, outcome="observed", error="E_SENSE_NAN"))
         cv2 = svc.cv2s()
         act = self.actuator
         replicas = np.asarray(act.replicas(), np.int64)
@@ -168,6 +230,11 @@ class ControlLoop(threading.Thread):
         scalable = (np.asarray(act.scalable(), bool)
                     if hasattr(act, "scalable") else None)
         caps = np.asarray(act.capacities(), np.int64)
+        # degraded-queue mask from the supervised layer (if it has one):
+        # faulty queues get replica/buffer actions held and admission
+        # forced shut inside the same fused dispatch
+        faulty = (np.asarray(act.faulty(), bool)
+                  if hasattr(act, "faulty") else None)
         occ = (np.asarray(act.occupancy(), float)
                if self.policies.admission is not None else 0.0)
         # multi-tenant per-queue overrides (leg masks, replica knobs) —
@@ -181,25 +248,101 @@ class ControlLoop(threading.Thread):
         self._last_mu = mu.copy()
 
         # -- decide: one fused dispatch for every policy x queue ---------
-        self.state, dec = control_decide(
-            self.cfg, self.state, lam=lam, mu=mu, ready=ready,
-            replicas=replicas, rep_basis=self._mu_basis, caps=caps,
-            cv2=cv2, occupancy=occ, saturated=saturated,
-            scalable=scalable, stale=stale, impl=self.impl, donate=True,
-            **overrides)
+        impl = "numpy" if self.impl_degraded else self.impl
+        try:
+            self.state, dec = control_decide(
+                self.cfg, self.state, lam=lam, mu=mu, ready=ready,
+                replicas=replicas, rep_basis=self._mu_basis, caps=caps,
+                cv2=cv2, occupancy=occ, saturated=saturated,
+                scalable=scalable, stale=stale, faulty=faulty,
+                impl=impl, donate=True, **overrides)
+        except Exception:
+            if impl == "numpy":
+                raise                      # host path failing is a bug
+            # jit dispatch failed (backend wedged, device OOM, donated
+            # buffer invalidated): rebuild the carried state on host and
+            # retry the same math on the numpy path this tick; repeated
+            # failures degrade the loop to the host path permanently
+            self._jit_fail += 1
+            self.state = self._state_numpy()
+            if (self._jit_fail >= self.jit_fail_limit
+                    and not self.impl_degraded):
+                self.impl_degraded = True
+                self.log.append(ControlRecord(
+                    tick=self.ticks, t=time.monotonic(), queue=-1,
+                    policy="loop", observed_lam=0.0, observed_mu=0.0,
+                    action="impl-degrade", value=self._jit_fail,
+                    outcome="applied", error="E_JIT_DISPATCH"))
+            self.state, dec = control_decide(
+                self.cfg, self.state, lam=lam, mu=mu, ready=ready,
+                replicas=replicas, rep_basis=self._mu_basis, caps=caps,
+                cv2=cv2, occupancy=occ, saturated=saturated,
+                scalable=scalable, stale=stale, faulty=faulty,
+                impl="numpy", donate=True, **overrides)
         self.ticks += 1
         self._actuate(dec, lam, mu, replicas, caps)
         return dec
+
+    def _quarantine(self, vals, last_good):
+        """Sense-side quarantine: substitute the last finite gated
+        estimate for any NaN/Inf reading, and fold the (now all-finite)
+        values back as the new last-good.  Returns ``(vals, bad)`` with
+        ``bad`` the quarantined indices."""
+        fin = np.isfinite(vals)
+        bad = np.nonzero(~fin)[0]
+        if bad.size:
+            vals = np.where(fin, vals, last_good)
+            self.quarantined += int(bad.size)
+        np.copyto(last_good, vals)
+        return vals, bad
+
+    def _state_numpy(self) -> ControlState:
+        """Rebuild the carried decision state as host numpy arrays.  A
+        failed jit dispatch may have already donated (invalidated) the
+        device buffers; if any leaf cannot be read back, restart from
+        the neutral init state — confirmation counters and cooldowns
+        re-accumulate within a few ticks."""
+        try:
+            return ControlState(
+                *(np.asarray(leaf)[:self.n_queues] for leaf in self.state))
+        except Exception:
+            return control_init(self.cfg, self.n_queues)
+
+    def _call_actuator(self, fn, *args):
+        """One actuation with retry + backoff under an elapsed budget.
+
+        Returns ``(outcome, error)``: outcome ``'error'`` means the verb
+        raised on its final attempt (``E_ACT_RAISE``); a success that
+        blew the ``actuation_timeout_s`` budget is annotated
+        ``E_ACT_SLOW`` (the action stands, but a consistently slow
+        actuator is an operational signal worth auditing)."""
+        t0 = time.monotonic()
+        delay = self.actuation_backoff_s
+        for attempt in range(self.actuation_retries + 1):
+            try:
+                out = fn(*args)
+            except Exception:
+                if (attempt < self.actuation_retries
+                        and time.monotonic() - t0 < self.actuation_timeout_s):
+                    time.sleep(delay)
+                    delay = min(delay * 2, self.actuation_timeout_s)
+                    continue
+                self.actuation_errors += 1
+                return "error", "E_ACT_RAISE"
+            slow = time.monotonic() - t0 > self.actuation_timeout_s
+            return out, ("E_ACT_SLOW" if slow else "")
+        return "error", "E_ACT_RAISE"      # pragma: no cover
 
     def _actuate(self, dec: Decision, lam, mu, replicas, caps) -> None:
         now = time.monotonic()
         act, log = self.actuator, self.log
 
-        def record(i, policy, action, value, outcome):
+        def record(i, policy, action, value, outcome, error=""):
             log.append(ControlRecord(
                 tick=self.ticks, t=now, queue=int(i), policy=policy,
                 observed_lam=float(lam[i]), observed_mu=float(mu[i]),
-                action=action, value=int(value), outcome=outcome))
+                action=action, value=int(value), outcome=outcome,
+                error=error))
 
         if self.policies.replica is not None:
             targets = np.asarray(dec.target_replicas)
@@ -207,23 +350,35 @@ class ControlLoop(threading.Thread):
                 n = int(targets[i])
                 if n == int(replicas[i]):
                     continue
-                outcome = act.scale(int(i), n)
-                record(i, "replicas", "scale", n, outcome)
+                outcome, err = self._call_actuator(act.scale, int(i), n)
+                record(i, "replicas", "scale", n, outcome, err)
         if self.policies.buffer is not None:
             targets = np.asarray(dec.target_caps)
             for i in np.nonzero(np.asarray(dec.resize_mask))[0]:
                 cap = int(targets[i])
                 if cap == int(caps[i]):
                     continue
-                outcome = act.resize(int(i), cap)
-                record(i, "capacity", "resize", cap, outcome)
+                outcome, err = self._call_actuator(act.resize, int(i), cap)
+                record(i, "capacity", "resize", cap, outcome, err)
         if self.policies.admission is not None:
             shed = np.asarray(dec.shed)
+            applied = self._shed.copy()
             for i in np.nonzero(shed != self._shed)[0]:
-                outcome = act.admit(int(i), bool(shed[i]))
+                outcome, err = self._call_actuator(
+                    act.admit, int(i), bool(shed[i]))
                 record(i, "admission", "shed" if shed[i] else "admit",
-                       int(shed[i]), outcome)
-            self._shed = shed.copy()
+                       int(shed[i]), outcome, err)
+                if outcome == "error":
+                    # roll back: best-effort restore of the last applied
+                    # gate so the loop's memory and the physical gate
+                    # cannot diverge — the flip is retried next tick
+                    try:
+                        act.admit(int(i), bool(self._shed[i]))
+                    except Exception:
+                        pass
+                else:
+                    applied[i] = shed[i]
+            self._shed = applied
 
     # -- fleet restructure (multi-tenant attach/detach) --------------------
     def _remap_locked(self, old_index_of_new) -> None:
@@ -264,18 +419,81 @@ class ControlLoop(threading.Thread):
         self._last_mu = take(self._last_mu, np.nan)
         self._last_blk = take(self._last_blk, 0)
         self._last_tot = take(self._last_tot, 0)
+        self._last_good_mu = take(self._last_good_mu, 0.0)
+        self._last_good_lam = take(self._last_good_lam, 0.0)
         self.n_queues = nq
+
+    # -- monitor watchdog --------------------------------------------------
+    def watch_monitor(self, get, restart) -> None:
+        """Arm the monitor watchdog.  ``get()`` returns the current
+        ``FleetMonitorThread``; ``restart()`` builds, starts and
+        installs a replacement *on the same service* (which holds every
+        estimator's state, so nothing is lost) and returns it.  The
+        run() thread polls between ticks; harnesses that ``tick()``
+        manually call ``check_monitor()`` themselves."""
+        self._mon_get, self._mon_restart = get, restart
+
+    def check_monitor(self) -> bool:
+        """One watchdog poll: restart the monitor thread if it died
+        (started, no longer alive, never asked to stop).  Returns True
+        when a restart fired; the restart is audited as
+        ``policy='watchdog'`` with ``E_MONITOR_DEAD``."""
+        get, restart = self._mon_get, self._mon_restart
+        if get is None or restart is None:
+            return False
+        try:
+            m = get()
+        except Exception:
+            return False
+        if (m is None or m.ident is None or m.is_alive()
+                or m._stop_evt.is_set()):
+            return False
+        restart()
+        self.monitor_restarts += 1
+        self.log.append(ControlRecord(
+            tick=self.ticks, t=time.monotonic(), queue=-1,
+            policy="watchdog", observed_lam=0.0, observed_mu=0.0,
+            action="monitor-restart", value=self.monitor_restarts,
+            outcome="applied", error="E_MONITOR_DEAD"))
+        return True
+
+    def health(self) -> dict:
+        """Failure-handling counters (all zero on a healthy loop)."""
+        return {
+            "ticks": self.ticks,
+            "tick_errors": self.tick_errors,
+            "quarantined": self.quarantined,
+            "actuation_errors": self.actuation_errors,
+            "monitor_restarts": self.monitor_restarts,
+            "jit_failures": self._jit_fail,
+            "impl_degraded": self.impl_degraded,
+        }
 
     # -- thread plumbing ---------------------------------------------------
     def run(self) -> None:
-        self.warmup()
+        try:
+            self.warmup()
+        except Exception:
+            pass        # compile failure falls through to per-tick path
         next_due = time.monotonic()
         while not self._stop_evt.is_set():
             now = time.monotonic()
             if now < next_due:
                 self._stop_evt.wait(max(next_due - now, self.min_sleep_s))
                 continue
-            self.tick()
+            self.check_monitor()
+            try:
+                self.tick()
+            except Exception:
+                # contain: one poisoned tick (actuator bug, service
+                # racing a shutdown) must not kill the control thread —
+                # count it, audit it, keep ticking
+                self.tick_errors += 1
+                self.log.append(ControlRecord(
+                    tick=self.ticks, t=time.monotonic(), queue=-1,
+                    policy="loop", observed_lam=0.0, observed_mu=0.0,
+                    action="tick", value=self.tick_errors,
+                    outcome="error", error="E_TICK"))
             # re-derive (unless explicit): the monitor thread adapts the
             # shared sampling period live, and the loop must keep its
             # one-decision-per-dispatch cadence relative to the *current*

@@ -221,8 +221,8 @@ def _capacity_targets(cfg: ControlConfig, lam, mu, cv2, current, xp=jnp):
 
 def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
                ready, replicas, rep_basis, caps, cv2, occupancy,
-               saturated, scalable, fleet_med, stale, leg_rep, leg_buf,
-               leg_adm, headroom, max_reps):
+               saturated, scalable, fleet_med, stale, faulty, leg_rep,
+               leg_buf, leg_adm, headroom, max_reps):
     """The fused decision, once, against either array namespace.
 
     ``leg_rep``/``leg_buf``/``leg_adm`` are the per-queue tenant masks
@@ -231,7 +231,12 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     per-queue replica-policy overrides.  ``stale`` marks queues whose
     arrival estimate froze while the stream went quiet (the window mean
     collapsed below ``stale_frac`` of the gated estimate) — a stale
-    ``lam`` is treated as unknown, and the demand probe takes over."""
+    ``lam`` is treated as unknown, and the demand probe takes over.
+    ``faulty`` is the degraded-mode leg: a queue whose consumer stage
+    tripped the supervisor's crash-loop breaker gets its admission gate
+    forced shut and its replica/buffer legs held still — estimates off
+    a crash-looping stage are garbage, and re-tuning on garbage only
+    spirals, so partial failure degrades gracefully instead."""
     lam = lam.astype(xp.float32)
     mu = mu.astype(xp.float32)
     cv2 = cv2.astype(xp.float32)
@@ -265,7 +270,7 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     # that is the escalation leg's regime, and a probe window that
     # re-saturates aborts the cycle instead of decaying)
     elig = (esc | stale) & ~known & ~saturated & leg_rep & scalable \
-        & (replicas > 1)
+        & (replicas > 1) & ~faulty
     timer = xp.where(elig, state.probe_timer + 1, 0)
     window_end = cfg.probe_period_ticks + cfg.probe_window_ticks
     # window open: the admission gate is forced open and the replica /
@@ -292,7 +297,8 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     #    per-tenant off through the leg mask, and per-queue off for
     #    unscalable queues (e.g. the pipeline's sink drain) — phantom
     #    wants there would only burn cooldown ---------------------------
-    can_scale = scalable & leg_rep
+    # degraded mode: a faulty queue's replica leg is held outright
+    can_scale = scalable & leg_rep & ~faulty
     want_up = (rep_t > replicas) & (known | (saturated & ready)) \
         & can_scale & ~probing
     want_dn = (rep_t < replicas) & known & ~saturated & can_scale \
@@ -316,9 +322,9 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     outside = (ratio >= cfg.resize_factor) \
         | (ratio <= 1.0 / cfg.resize_factor)
     want_grow = known & outside & (cap_t > caps) & ~saturated \
-        & leg_buf & ~probing
+        & leg_buf & ~probing & ~faulty
     want_shrink = known & outside & (cap_t < caps) & ~saturated \
-        & leg_buf & ~probing
+        & leg_buf & ~probing & ~faulty
     cap_agree = xp.where(
         want_grow, xp.maximum(state.cap_agree, 0) + 1,
         xp.where(want_shrink, xp.minimum(state.cap_agree, 0) - 1, 0))
@@ -344,9 +350,11 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
         & ~exhausted
     disarm = recovered | (occ <= cfg.occupancy_lo)
     # the arm/disarm memory keeps running through a probe window; only
-    # the *output* gate is forced open so shed demand can show itself
+    # the *output* gate is forced open so shed demand can show itself.
+    # A faulty queue's gate is forced SHUT regardless — feeding load to
+    # a crash-looping consumer only piles up work that dies with it
     shed_m = xp.where(state.shedding, ~disarm, arm) & leg_adm
-    shed = shed_m & ~probing
+    shed = (shed_m & ~probing) | (faulty & leg_adm)
 
     acted = scale | resize
     cooldown = xp.where(acted, cfg.cooldown_ticks,
@@ -391,8 +399,8 @@ def _auto_impl() -> str:
 def control_decide(cfg: ControlConfig, state: ControlState, *,
                    lam, mu, ready, replicas, caps, cv2=1.0, occupancy=0.0,
                    rep_basis=None, saturated=None, scalable=None,
-                   stale=None, leg_rep=None, leg_buf=None, leg_adm=None,
-                   headroom=None, max_replicas=None,
+                   stale=None, faulty=None, leg_rep=None, leg_buf=None,
+                   leg_adm=None, headroom=None, max_replicas=None,
                    impl: str = "auto", donate: bool = True
                    ) -> tuple[ControlState, Decision]:
     """Evaluate every policy for the whole fleet in one fused pass.
@@ -409,7 +417,11 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
     demand there is unobservable and the replica leg escalates
     multiplicatively instead of trusting stale rates (default: none).
     ``stale`` marks queues whose arrival estimate froze after the
-    stream went quiet (demand probe input; default none).  The
+    stream went quiet (demand probe input; default none).  ``faulty``
+    marks queues whose consumer is degraded (crash-loop breaker):
+    admission is forced shut and the replica/buffer legs held — a
+    queue-padded (Q,) operand like ``stale``, so the degraded-mode leg
+    never retraces the dispatch (default none).  The
     multi-tenant overrides — ``leg_rep``/``leg_buf``/``leg_adm`` masks
     and per-queue ``headroom``/``max_replicas`` — default to the static
     config flags/knobs, so single-tenant behavior is unchanged.
@@ -426,6 +438,8 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         scalable = np.ones(q, bool)
     if stale is None:
         stale = np.zeros(q, bool)
+    if faulty is None:
+        faulty = np.zeros(q, bool)
     if leg_rep is None:
         leg_rep = cfg.replica_enabled
     if leg_buf is None:
@@ -464,7 +478,7 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
                 saturated=npa(saturated, bool),
                 scalable=npa(scalable, bool),
                 fleet_med=np.float32(fleet_med),
-                stale=npa(stale, bool),
+                stale=npa(stale, bool), faulty=npa(faulty, bool),
                 leg_rep=npa(leg_rep, bool), leg_buf=npa(leg_buf, bool),
                 leg_adm=npa(leg_adm, bool),
                 headroom=npa(headroom, np.float32),
@@ -492,6 +506,7 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         scalable=pad(jnp.asarray(scalable, bool), False),
         fleet_med=jnp.float32(fleet_med),
         stale=pad(jnp.asarray(stale, bool), False),
+        faulty=pad(jnp.asarray(faulty, bool), False),
         leg_rep=pad(jnp.asarray(leg_rep, bool), False),
         leg_buf=pad(jnp.asarray(leg_buf, bool), False),
         leg_adm=pad(jnp.asarray(leg_adm, bool), False),

@@ -2,6 +2,11 @@ from repro.ft.failures import (FleetRateTracker,
                                HeartbeatRegistry, HostRateTracker,
                                ElasticPlan, plan_elastic_mesh,
                                FaultToleranceManager)
+from repro.ft.inject import (FaultEvent, FaultPlan, FaultyActuator,
+                             InjectedFault)
+from repro.ft.supervisor import ReplicaSupervisor
 
 __all__ = ["HeartbeatRegistry", "HostRateTracker", "FleetRateTracker",
-           "ElasticPlan", "plan_elastic_mesh", "FaultToleranceManager"]
+           "ElasticPlan", "plan_elastic_mesh", "FaultToleranceManager",
+           "FaultEvent", "FaultPlan", "FaultyActuator", "InjectedFault",
+           "ReplicaSupervisor"]

@@ -34,6 +34,14 @@ class HeartbeatRegistry:
     def beat(self, host: str, t: Optional[float] = None):
         self._last[host] = time.monotonic() if t is None else t
 
+    def forget(self, host: str) -> None:
+        """Drop a host from the registry.  A retired replica or a
+        detached tenant must not linger in ``dead_hosts()`` forever —
+        callers forget on retire/detach (``ReplicaSupervisor`` does
+        this for pipeline workers; ``ControlGroup.detach`` for
+        supervised tenants)."""
+        self._last.pop(host, None)
+
     def dead_hosts(self, now: Optional[float] = None) -> list[str]:
         now = time.monotonic() if now is None else now
         return [h for h, t in self._last.items()

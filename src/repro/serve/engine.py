@@ -138,10 +138,18 @@ class Engine:
                  control: bool = False,
                  admission: Optional[AdmissionPolicy] = None,
                  control_log: Optional[ControlLog] = None,
-                 monitor: bool = True):
+                 monitor: bool = True,
+                 fault_plan=None):
         self.model = model
         self.params = params
         self.scfg = scfg
+        # optional ft.inject.FaultPlan (duck-typed, no ft import): lets
+        # the chaos harness crash/stall the serve loop deterministically
+        self.fault_plan = fault_plan
+        self.host = "engine"           # heartbeat identity for supervision
+        self.heartbeats = None         # bound by a ReplicaSupervisor
+        self._crashes: list[dict] = []
+        self._crash_lock = threading.Lock()
         # request-queue counters live in the shared arena, so an engine
         # process serving many models rides one vectorized collector
         self.queue = InstrumentedQueue(scfg.queue_capacity, item_bytes=1,
@@ -221,6 +229,15 @@ class Engine:
         if self.monitor_thread is None:
             self.fleet = view
 
+    def bind_heartbeats(self, registry, host: Optional[str] = None) -> None:
+        """A ``ReplicaSupervisor`` wires its ``HeartbeatRegistry`` here:
+        the serve loop beats once per served batch, so a lapse means the
+        worker thread died or wedged inside a generation round."""
+        if host is not None:
+            self.host = host
+        self.heartbeats = registry
+        registry.beat(self.host)
+
     def _require_fleet(self):
         if self.fleet is None:
             raise RuntimeError(
@@ -245,47 +262,89 @@ class Engine:
         return batch
 
     def _loop(self):
-        cfg = self.model.cfg
-        B, S = self.scfg.batch_size, self.scfg.max_seq
+        """Serve-thread run loop with crash containment: a generation
+        round that raises (model bug, device OOM, injected fault) is
+        recorded (``stats()['crashes']``), its requests are released
+        with ``out=None`` so no client blocks forever, and the thread
+        exits — a ``ReplicaSupervisor`` sees the dead thread and
+        respawns it via ``_respawn_worker``."""
         while not self._stop.is_set():
+            plan = self.fault_plan
+            if plan is not None:
+                try:
+                    # injected crash raises; injected stall sleeps here
+                    plan.maybe_fault(self.host)
+                except Exception as exc:
+                    self._record_crash(exc)
+                    return
             batch = self._take_batch()
             if not batch:
                 continue
-            # right-pad the round to B with copies (masked out on return)
-            live = len(batch)
-            while len(batch) < B:
-                batch.append(batch[-1])
-            plens = np.array([min(len(r.tokens), S - r.max_new)
-                              for r in batch], np.int32)
-            L = int(plens.max())
-            toks = np.zeros((B, L), np.int32)
-            for i, r in enumerate(batch):
-                toks[i, :plens[i]] = r.tokens[:plens[i]]
-            logits, cache = self._prefill(self.params,
-                                          {"tokens": jnp.asarray(toks)})
-            # pad cache seq dim to S for decoding
-            def pad_seq(v):
-                if v.ndim >= 3 and v.shape[2] == L:
-                    pw = [(0, 0)] * v.ndim
-                    pw[2] = (0, S - L)
-                    return jnp.pad(v, pw)
-                return v
-            cache = jax.tree_util.tree_map(pad_seq, cache)
-            next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            pos = jnp.asarray(plens)
-            outs = [[] for _ in range(B)]
-            max_new = max(r.max_new for r in batch[:live])
-            for _ in range(max_new):
-                for i in range(live):
-                    outs[i].append(int(next_tok[i]))
-                next_tok, cache = self._decode(self.params, cache,
-                                               next_tok, pos)
-                pos = pos + 1
+            try:
+                self._serve_batch(batch)
+            except Exception as exc:
+                self._record_crash(exc)
+                for r in batch:
+                    r.done.set()       # r.out stays None: caller sees it
+                return
+            hb = self.heartbeats
+            if hb is not None:
+                hb.beat(self.host)
+
+    def _record_crash(self, exc: BaseException) -> None:
+        with self._crash_lock:
+            self._crashes.append({
+                "stage": "engine", "worker": self.host,
+                "exc": repr(exc), "t": time.monotonic()})
+
+    def _respawn_worker(self) -> bool:
+        """Replace a dead serve thread (the supervisor's respawn verb).
+        No-op unless the current worker started and died while the
+        engine is still running."""
+        w = self._worker
+        if (self._stop.is_set() or w.ident is None or w.is_alive()):
+            return False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+        return True
+
+    def _serve_batch(self, batch: list[Request]) -> None:
+        B, S = self.scfg.batch_size, self.scfg.max_seq
+        # right-pad the round to B with copies (masked out on return)
+        live = len(batch)
+        while len(batch) < B:
+            batch.append(batch[-1])
+        plens = np.array([min(len(r.tokens), S - r.max_new)
+                          for r in batch], np.int32)
+        L = int(plens.max())
+        toks = np.zeros((B, L), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, :plens[i]] = r.tokens[:plens[i]]
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)})
+        # pad cache seq dim to S for decoding
+        def pad_seq(v):
+            if v.ndim >= 3 and v.shape[2] == L:
+                pw = [(0, 0)] * v.ndim
+                pw[2] = (0, S - L)
+                return jnp.pad(v, pw)
+            return v
+        cache = jax.tree_util.tree_map(pad_seq, cache)
+        next_tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        pos = jnp.asarray(plens)
+        outs = [[] for _ in range(B)]
+        max_new = max(r.max_new for r in batch[:live])
+        for _ in range(max_new):
             for i in range(live):
-                r = batch[i]
-                r.out = np.array(outs[i][:r.max_new], np.int32)
-                r.done.set()
-                self.served += 1
+                outs[i].append(int(next_tok[i]))
+            next_tok, cache = self._decode(self.params, cache,
+                                           next_tok, pos)
+            pos = pos + 1
+        for i in range(live):
+            r = batch[i]
+            r.out = np.array(outs[i][:r.max_new], np.int32)
+            r.done.set()
+            self.served += 1
 
     # ---------------- monitor-driven tuning ---------------------------------
     def recommended_queue_capacity(self) -> int:
@@ -304,6 +363,17 @@ class Engine:
         g = self.gate
         return {"shedding": g.shedding, "mode": g.mode,
                 "shed_count": g.shed_count, "defer_count": g.defer_count}
+
+    def stats(self) -> dict:
+        """Health readout: served count, contained serve-loop crashes
+        (stage/worker/exc/timestamp), and worker liveness."""
+        with self._crash_lock:
+            crashes = list(self._crashes)
+        return {"served": self.served,
+                "crashes": crashes,
+                "crash_count": len(crashes),
+                "worker_alive": self._worker.is_alive(),
+                "admission": self.admission_state()}
 
     def service_rate(self) -> float:
         """Requests/s from the fleet state, readiness-gated: 0 until the

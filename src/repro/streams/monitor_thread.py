@@ -127,7 +127,8 @@ class FleetMonitorThread(threading.Thread):
 
     def __init__(self, service: "FleetMonitorService",
                  period: Optional[SamplingPeriodController] = None,
-                 adapt_period: bool = True, min_sleep_s: float = 2e-4):
+                 adapt_period: bool = True, min_sleep_s: float = 2e-4,
+                 fault_plan=None):
         super().__init__(daemon=True, name="repro-fleet-monitor")
         self.service = service
         self.period = period or SamplingPeriodController(
@@ -135,6 +136,10 @@ class FleetMonitorThread(threading.Thread):
             max_period_s=service.period_s * 64)
         self.adapt_period = adapt_period
         self.min_sleep_s = min_sleep_s
+        # optional ft.inject.FaultPlan (duck-typed): monitor-thread
+        # death + sampling clock skew.  One None-check per tick when
+        # absent — the collector hot path is untouched.
+        self.fault_plan = fault_plan
         self._stop_evt = threading.Event()
 
     def run(self) -> None:
@@ -142,12 +147,20 @@ class FleetMonitorThread(threading.Thread):
         last = time.monotonic()
         next_due = last
         while not self._stop_evt.is_set():
+            plan = self.fault_plan
+            if plan is not None and plan.monitor_death_due():
+                return   # injected silent daemon death (watchdog food)
             now = time.monotonic()
             if now < next_due:
                 self._stop_evt.wait(max(next_due - now, self.min_sleep_s))
                 continue
             blocked = self.service.sample()
             realized, last = now - last, now
+            if plan is not None:
+                # sampling clock skew: the period controller observes a
+                # distorted realized period, exactly as a drifting or
+                # preempted sampling clock would report
+                realized *= plan.skew_factor(now)
             if self.adapt_period:
                 self.service.period_s = self.period.observe(realized,
                                                             blocked)

@@ -62,17 +62,36 @@ class Stage:
         self._stop_left = replicas
         self._stop_seen = False
         self._stop_lock = threading.Lock()
+        self._spawn_seq = 0          # host-id counter for replica spawns
 
 
 class _Worker(threading.Thread):
     """One replica of a stage.  ``retire.set()`` asks the worker to exit
     between items: the in-flight item always completes and queued items
-    stay for the surviving siblings — scale-down never drops work."""
+    stay for the surviving siblings — scale-down never drops work.
 
-    def __init__(self, stage: Stage, in_q, out_q):
+    The run loop is crash-contained: a raise (a user kernel bug, or an
+    injected ``FaultPlan`` crash) records the crash on the pipeline —
+    stage, worker host id, exception, timestamp — surrenders the STOP
+    count coherently and, when a ``ReplicaSupervisor`` is attached,
+    kicks it for immediate respawn.  A daemon thread must never die
+    with the replica count silently wrong and μ frozen at a stale value
+    the policy then trusts forever."""
+
+    def __init__(self, stage: Stage, in_q, out_q, *, host: str = "",
+                 beat: Optional[Callable] = None, fault=None,
+                 on_crash: Optional[Callable] = None):
         super().__init__(daemon=True, name=f"repro-{stage.name}")
         self.stage, self.in_q, self.out_q = stage, in_q, out_q
         self.retire = threading.Event()
+        self.host = host or stage.name
+        self.beat = beat             # heartbeat hook (supervisor-owned)
+        self.fault = fault           # FaultPlan (duck-typed), or None
+        self.on_crash = on_crash
+        self.items = 0               # items drained by THIS replica
+        self.crashed: Optional[BaseException] = None
+        self.handled = False         # supervisor consumed the crash
+        self._done = False           # exited (any path)
 
     def _exit_retired(self) -> None:
         """Leave the stage's STOP countdown coherent: a retired worker
@@ -86,10 +105,40 @@ class _Worker(threading.Thread):
         if last and self.out_q is not None:
             self.out_q.push(STOP)
 
+    def _exit_crashed(self, exc: BaseException) -> None:
+        """Crash containment: record, then leave coherently.  A dead
+        source ends the stream (STOP flows); a dead consumer surrenders
+        its STOP count exactly like a retire — the countdown must not
+        wait forever on a thread that no longer exists."""
+        self.crashed = exc
+        self._done = True
+        if self.stage.source is not None:
+            if self.out_q is not None:
+                self.out_q.push(STOP)
+        else:
+            self._exit_retired()
+        cb = self.on_crash
+        if cb is not None:
+            cb(self, exc)
+
     def run(self):
+        try:
+            self._run()
+        except Exception as exc:   # noqa: BLE001 — crash containment
+            self._exit_crashed(exc)
+        finally:
+            self._done = True
+
+    def _run(self):
         st = self.stage
+        plan = self.fault
+        beat = self.beat
         if st.source is not None:
             for item in st.source:
+                if plan is not None:
+                    plan.maybe_fault(self.host, (st.name,))
+                if beat is not None:
+                    beat()
                 self.out_q.push(item)
             self.out_q.push(STOP)
             return
@@ -102,6 +151,8 @@ class _Worker(threading.Thread):
             # a retire request is honored within ~1 ms even when idle
             item = self.in_q.try_pop(_EMPTY)
             if item is _EMPTY:
+                if beat is not None:
+                    beat()         # an idle replica is alive, not dead
                 time.sleep(backoff)
                 backoff = min(backoff * 2, 1e-3)
                 continue
@@ -117,8 +168,13 @@ class _Worker(threading.Thread):
                 elif self.out_q is not None:
                     self.out_q.push(STOP)
                 return
+            if plan is not None:
+                plan.maybe_fault(self.host, (st.name,))
             out = st.fn(item)
             st.processed += 1
+            self.items += 1
+            if beat is not None:
+                beat()             # one beat per drained item
             if out is not None and self.out_q is not None:
                 self.out_q.push(out)
 
@@ -145,6 +201,20 @@ class _PipelineActuator:
     def occupancy(self) -> np.ndarray:
         return np.array([len(q) / max(q.capacity, 1)
                          for q in self.pipe.queues])
+
+    def faulty(self) -> np.ndarray:
+        """(Q,) degraded-consumer mask (crash-loop breaker tripped):
+        the fused decision forces a faulty queue's admission gate shut
+        and holds its replica/buffer legs — partial failure degrades
+        gracefully instead of the formula spiraling on garbage
+        estimates."""
+        p = self.pipe
+        if not p._degraded:
+            return np.zeros(len(p.queues), bool)
+        return np.array(
+            [(p.stages[i + 1].name in p._degraded)
+             if i + 1 < len(p.stages) else False
+             for i in range(len(p.queues))], bool)
 
     def scale(self, i: int, n: int) -> str:
         if i + 1 >= len(self.pipe.stages):
@@ -193,11 +263,21 @@ class Pipeline:
                  control: bool = False,
                  policies: Optional[PolicySet] = None,
                  control_log: Optional[ControlLog] = None,
-                 monitor: bool = True):
+                 monitor: bool = True,
+                 fault_plan=None):
         self.stages = stages
         self.queues: list[InstrumentedQueue] = []
         self.sink: list[Any] = []
         self._sink_lock = threading.Lock()
+        # self-healing state: crash records (satellite: daemon workers
+        # must never vanish silently), the degraded-stage set the
+        # actuator reports as `faulty`, and the optional supervisor /
+        # fault plan hooks (both pay nothing when absent)
+        self.fault_plan = fault_plan
+        self.supervisor = None         # set by ReplicaSupervisor(pipe)
+        self._crashes: list[dict] = []
+        self._crash_lock = threading.Lock()
+        self._degraded: set[str] = set()
         # every link's counters back into one arena, so the collector
         # samples the whole pipeline in one vectorized gather
         self.arena = arena if arena is not None else default_arena()
@@ -222,7 +302,8 @@ class Pipeline:
             self.fleet = FleetMonitorService(
                 self.queues, monitor_cfg, period_s=base_period_s,
                 chunk_t=chunk_t, ends="both", on_fleet=self._on_fleet)
-            self.monitor = FleetMonitorThread(self.fleet)
+            self.monitor = FleetMonitorThread(self.fleet,
+                                              fault_plan=fault_plan)
         else:
             self.fleet = None          # bound by ControlGroup.attach
             self.monitor = None
@@ -244,6 +325,10 @@ class Pipeline:
             self.control = ControlLoop(self.fleet, self.policies,
                                        _PipelineActuator(self),
                                        log=control_log)
+            # the loop's watchdog restarts a dead monitor thread; the
+            # service (which holds all estimator state) survives it
+            self.control.watch_monitor(lambda: self.monitor,
+                                       self._restart_monitor)
             autotune = False       # the loop owns actuation
         self.autotune = autotune
 
@@ -291,13 +376,16 @@ class Pipeline:
              for i in range(len(self.queues))], np.int64)
 
     def live_replicas(self, stage: int | str) -> int:
-        """Current live (non-retiring) worker count of one stage."""
+        """Current live (non-retiring, non-crashed) worker count of one
+        stage.  A crashed worker is NOT live: before this fix a dead
+        daemon thread kept counting, so the control loop normalized μ
+        by a replica count that no longer existed."""
         idx = self._stage_index(stage)
         with self._scale_lock:
             if not self._started:
                 return self.stages[idx].replicas
             return len([w for w in self._workers[idx]
-                        if not w.retire.is_set()])
+                        if not w.retire.is_set() and w.crashed is None])
 
     def _stage_index(self, stage: int | str) -> int:
         if isinstance(stage, int):
@@ -330,7 +418,8 @@ class Pipeline:
                 st._stop_left = n
                 return "applied"
             ws = self._workers[idx]
-            live = [w for w in ws if not w.retire.is_set()]
+            live = [w for w in ws
+                    if not w.retire.is_set() and w.crashed is None]
             cur = len(live)
             if n == cur:
                 return "noop"
@@ -342,7 +431,8 @@ class Pipeline:
                         return "rejected"
                     st._stop_left += n - cur
                     st.replicas = n
-                new = [_Worker(st, self.queues[idx - 1], self.queues[idx])
+                new = [self._make_worker(st, self.queues[idx - 1],
+                                         self.queues[idx])
                        for _ in range(n - cur)]
                 ws.extend(new)
                 for w in new:
@@ -355,6 +445,84 @@ class Pipeline:
                     st.replicas = n
             return "applied"
 
+    def _make_worker(self, st: Stage, in_q, out_q) -> _Worker:
+        """Build one worker with its self-healing hooks: a host id, the
+        supervisor's heartbeat callable (None when unsupervised), the
+        fault plan (None when not injecting), and the crash recorder.
+        Callers hold ``_scale_lock`` (the spawn-seq counter rides it)."""
+        st._spawn_seq += 1
+        host = f"{st.name}#{st._spawn_seq}"
+        sup = self.supervisor
+        beat = sup.register(host) if sup is not None else None
+        return _Worker(st, in_q, out_q, host=host, beat=beat,
+                       fault=self.fault_plan, on_crash=self._record_crash)
+
+    def _record_crash(self, worker: _Worker, exc: BaseException) -> None:
+        """Crash containment sink (called from the dying worker): the
+        crash is recorded — stage, worker host, exception, timestamp —
+        and surfaced via ``stats()`` instead of silently vanishing; an
+        attached supervisor is kicked for immediate respawn."""
+        rec = {"stage": worker.stage.name, "worker": worker.host,
+               "exc": repr(exc), "t": time.monotonic()}
+        with self._crash_lock:
+            self._crashes.append(rec)
+        sup = self.supervisor
+        if sup is not None:
+            sup.kick()
+
+    def _retire_worker(self, idx: int, worker: _Worker) -> None:
+        """Retire one (dead or wedged) worker without a replacement:
+        the zombie slot leaves the live set, so the replica array the
+        control loop senses reflects reality."""
+        worker.retire.set()
+        with self._scale_lock:
+            ws = self._workers[idx]
+            if worker in ws:
+                ws.remove(worker)
+
+    def _respawn_worker(self, idx: int,
+                        dead: Optional[_Worker] = None
+                        ) -> Optional[_Worker]:
+        """Replace one crashed/wedged worker (the supervisor's respawn
+        path).  A crashed worker already surrendered its STOP count in
+        its crash path (a wedged one surrenders when it unsticks); the
+        replacement takes a fresh count — refused once STOP is in
+        flight, exactly like a late scale-up."""
+        st = self.stages[idx]
+        with self._scale_lock:
+            if not self._started or st.source is not None or idx == 0:
+                return None
+            ws = self._workers[idx]
+            if dead is not None:
+                dead.retire.set()
+                if dead in ws:
+                    ws.remove(dead)
+            with st._stop_lock:
+                if st._stop_seen:
+                    return None
+                st._stop_left += 1
+            w = self._make_worker(st, self.queues[idx - 1],
+                                  self.queues[idx])
+            ws.append(w)
+            w.start()
+            return w
+
+    def _restart_monitor(self) -> FleetMonitorThread:
+        """Watchdog restart path (invoked by ``ControlLoop`` when the
+        monitor thread died unannounced).  The service — which holds
+        ALL estimator state — survives the dead timer thread: fold any
+        partially staged chunk, then hand the same service (and the
+        same adaptive-period controller) to a fresh timer."""
+        old = self.monitor
+        self.fleet.flush()
+        m = FleetMonitorThread(self.fleet, period=old.period,
+                               adapt_period=old.adapt_period,
+                               min_sleep_s=old.min_sleep_s,
+                               fault_plan=old.fault_plan)
+        self.monitor = m
+        m.start()
+        return m
+
     def run_collect(self, timeout_s: float = 300.0) -> list:
         with self._scale_lock:
             self._workers = []
@@ -364,7 +532,8 @@ class Pipeline:
                 st._stop_left = st.replicas
                 st._stop_seen = False
                 self._workers.append(
-                    [_Worker(st, in_q, out_q) for _ in range(st.replicas)])
+                    [self._make_worker(st, in_q, out_q)
+                     for _ in range(st.replicas)])
             self._started = True
 
         def drain():
@@ -394,6 +563,23 @@ class Pipeline:
         return self.sink
 
     # observability ----------------------------------------------------------
+    def stats(self) -> dict:
+        """Health snapshot: every recorded worker crash (stage, worker
+        host, exception, timestamp), per-stage processed counts and
+        live replicas, and the degraded-stage set.  The crash list is
+        the satellite fix for silently-vanishing daemon workers — a
+        pipeline whose replica died now *says so* here."""
+        with self._crash_lock:
+            crashes = list(self._crashes)
+        return {
+            "crashes": crashes,
+            "crash_count": len(crashes),
+            "degraded_stages": sorted(self._degraded),
+            "processed": {st.name: st.processed for st in self.stages},
+            "live_replicas": {st.name: self.live_replicas(i)
+                              for i, st in enumerate(self.stages)},
+        }
+
     def rates(self) -> dict:
         """Per-link readout from the fleet state.  Rates carry the
         Welford-count readiness gate: a link that has not converged and

@@ -1,0 +1,415 @@
+"""Self-healing control plane (repro.ft.inject + supervisor, hardened
+ControlLoop) — PR 6.
+
+Covers: crash containment in pipeline workers (recorded, STOP countdown
+stays coherent), deterministic fault injection, supervisor detection +
+respawn + crash-loop breaker (degraded stage -> `faulty` actuator
+mask), the heartbeat-registry forget satellite, the control loop
+surviving a raising actuator, sense-side NaN quarantine, the monitor
+watchdog (estimator state survives the dead timer thread), the
+`faulty` operand's decision semantics and no-retrace contract, and the
+orphaned FT primitives (FaultToleranceManager / plan_elastic_mesh)
+driven from the streams stack.
+"""
+
+import time
+import threading
+
+import numpy as np
+import pytest
+
+from repro.control import (BufferPolicy, ControlConfig, ControlLoop,
+                           PolicySet, ReplicaPolicy, control_decide,
+                           control_decide_trace_count, control_init)
+from repro.core.monitor import MonitorConfig
+from repro.ft import (FaultEvent, FaultPlan, FaultToleranceManager,
+                      FaultyActuator, HeartbeatRegistry, InjectedFault,
+                      ReplicaSupervisor)
+from repro.streams import (CounterArena, FleetMonitorService,
+                           InstrumentedQueue, Pipeline, Stage)
+
+CFG = MonitorConfig(window=16, min_q_samples=16)
+
+
+def _paced_source(n, dt=2e-4):
+    for i in range(n):
+        time.sleep(dt)
+        yield i
+
+
+# -- fault plan primitives -------------------------------------------------
+
+def test_fault_plan_deterministic_and_unarmed_inert():
+    a = FaultPlan.chaos(seed=7, targets=["work"], n_crashes=3,
+                        monitor_death_at=1.0)
+    b = FaultPlan.chaos(seed=7, targets=["work"], n_crashes=3,
+                        monitor_death_at=1.0)
+    assert ([(e.at_s, e.kind, e.target) for e in a._events]
+            == [(e.at_s, e.kind, e.target) for e in b._events])
+    # un-armed: nothing is ever due, nothing is consumed
+    assert a.worker_fault_due("work") is None
+    assert not a.monitor_death_due()
+    assert a.pending() == 4
+
+
+def test_fault_plan_consumes_once_and_audits():
+    plan = FaultPlan([FaultEvent(0.0, "crash", "work"),
+                      FaultEvent(0.0, "stall", "work", duration_s=0.01),
+                      FaultEvent(0.0, "clock_skew", duration_s=10.0,
+                                 factor=2.0)]).arm()
+    with pytest.raises(InjectedFault):
+        plan.maybe_fault("work#3", aliases=("work",))
+    t0 = time.monotonic()
+    plan.maybe_fault("work")          # the stall: sleeps ~10ms
+    assert time.monotonic() - t0 >= 0.009
+    plan.maybe_fault("work")          # drained: no-op
+    assert plan.pending() == 1        # the skew window is not consumed
+    assert plan.skew_factor() == pytest.approx(2.0)
+    kinds = sorted(e.kind for _, e in plan.fired())
+    assert kinds == ["crash", "stall"]
+
+
+def test_faulty_actuator_injects_one_raise():
+    class Inner:
+        def scale(self, i, n):
+            return "applied"
+    act = FaultyActuator(Inner(), FaultPlan(
+        [FaultEvent(0.0, "actuation", "scale")]).arm())
+    with pytest.raises(InjectedFault):
+        act.scale(0, 2)
+    assert act.scale(0, 2) == "applied"      # one-shot
+
+
+# -- satellite: heartbeat forget -------------------------------------------
+
+def test_heartbeat_registry_forget():
+    reg = HeartbeatRegistry(timeout_s=0.0)
+    reg.beat("a")
+    reg.beat("b")
+    assert sorted(reg.dead_hosts(time.monotonic() + 1)) == ["a", "b"]
+    reg.forget("a")
+    assert reg.dead_hosts(time.monotonic() + 1) == ["b"]
+    reg.forget("zzz")                 # unknown host: no-op
+
+
+# -- satellite: crash containment ------------------------------------------
+
+def test_worker_crash_recorded_and_stream_completes():
+    """A consumer replica dying mid-item must be recorded in stats()
+    (not silently vanish) and must not wedge the STOP countdown."""
+    def boom(x):
+        if x == 17:
+            raise RuntimeError("kaboom")
+        return x * 2
+
+    pipe = Pipeline([Stage("src", source=range(200)),
+                     Stage("work", fn=boom, replicas=2)],
+                    capacity=16, arena=CounterArena(8))
+    out = pipe.run_collect(timeout_s=60)
+    st = pipe.stats()
+    assert st["crash_count"] == 1
+    (rec,) = st["crashes"]
+    assert rec["stage"] == "work" and "kaboom" in rec["exc"]
+    assert rec["worker"].startswith("work#")
+    # the poisoned item is lost with its worker; everything else flows
+    assert sorted(out) == [2 * i for i in range(200) if i != 17]
+    assert pipe.live_replicas("work") == 1
+
+
+def test_source_crash_ends_stream_with_stop():
+    def bad_gen():
+        yield 0
+        yield 1
+        raise RuntimeError("source died")
+
+    pipe = Pipeline([Stage("src", source=bad_gen()),
+                     Stage("work", fn=lambda x: x)],
+                    capacity=8, arena=CounterArena(8))
+    out = pipe.run_collect(timeout_s=30)
+    assert sorted(out) == [0, 1]
+    assert pipe.stats()["crash_count"] == 1
+
+
+# -- supervisor: detect + respawn + breaker --------------------------------
+
+def test_supervisor_respawns_crashed_replica():
+    plan = FaultPlan([FaultEvent(0.02, "crash", "work")])
+    pipe = Pipeline([Stage("src", source=_paced_source(1500)),
+                     Stage("work", fn=lambda x: x, replicas=2)],
+                    capacity=32, arena=CounterArena(8), fault_plan=plan)
+    sup = ReplicaSupervisor(pipe, poll_s=0.005, backoff_base_s=0.005)
+    sup.start()
+    plan.arm()
+    out = pipe.run_collect(timeout_s=120)
+    sup.stop()
+    assert pipe.stats()["crash_count"] == 1
+    assert sup.respawns >= 1
+    assert len(out) >= 1500 - 1           # only the in-flight item is lost
+    assert pipe.live_replicas("work") == 2
+    acts = [r.action for r in sup.log.records()
+            if r.policy == "supervisor"]
+    assert "crash" in acts and "respawn" in acts
+    errs = [r.error for r in sup.log.records() if r.action == "crash"]
+    assert "E_REPLICA_DEAD" in errs
+
+
+def test_crash_loop_breaker_degrades_stage():
+    """A stage that dies on every item trips the breaker: the zombie
+    slots retire, no more replicas are fed in, the stage is marked
+    degraded and the actuator reports its queue `faulty`."""
+    def always(x):
+        raise RuntimeError("crash loop")
+
+    pipe = Pipeline([Stage("src", source=range(50)),
+                     Stage("work", fn=always)],
+                    capacity=8, arena=CounterArena(8))
+    sup = ReplicaSupervisor(pipe, poll_s=0.002, backoff_base_s=0.001,
+                            breaker_threshold=3, healthy_after_s=60.0)
+    sup.start()
+    t = threading.Thread(target=pipe.run_collect,
+                         kwargs={"timeout_s": 20}, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 15
+    while "work" not in pipe._degraded and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert "work" in pipe._degraded
+    assert sup.breaker_trips == 1
+    _, act = pipe.control_tenant()
+    assert act.faulty().tolist() == [True, False]   # work's queue, sink
+    assert any(r.error == "E_CRASH_LOOP" for r in sup.log.records())
+    assert pipe.stats()["crash_count"] >= 3
+    assert pipe.live_replicas("work") == 0
+    sup.stop()
+
+
+# -- hardened control loop -------------------------------------------------
+
+def _service(Q, chunk_t=16):
+    arena = CounterArena(2 * Q)
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(Q)]
+    svc = FleetMonitorService(queues, CFG, period_s=1e-3, chunk_t=chunk_t,
+                              scale_to_period=False, ends="both")
+    return svc, queues
+
+
+def _feed(svc, queues, head_tc, tail_tc, n):
+    for _ in range(n):
+        for q in queues:
+            q.head.tc = float(head_tc)
+            q.tail.tc = float(tail_tc)
+        svc.sample()
+    svc.flush()
+
+
+class _RaisingActuator:
+    """scale() always raises — an actuation path gone bad."""
+
+    def __init__(self, q):
+        self.q = q
+        self.attempts = 0
+
+    def replicas(self):
+        return np.ones(self.q, np.int64)
+
+    def capacities(self):
+        return np.full(self.q, 64, np.int64)
+
+    def occupancy(self):
+        return np.zeros(self.q)
+
+    def scale(self, i, n):
+        self.attempts += 1
+        raise RuntimeError("actuator wedged")
+
+    def resize(self, i, cap):
+        return "applied"
+
+    def admit(self, i, shed):
+        return "applied"
+
+
+def test_loop_survives_raising_actuator_and_audits_error():
+    svc, queues = _service(2)
+    act = _RaisingActuator(2)
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy()), act,
+                       actuation_retries=2, actuation_backoff_s=1e-4)
+    _feed(svc, queues, head_tc=50.0, tail_tc=100.0, n=200)
+    for _ in range(loop.cfg.confirm_ticks + 2):
+        loop.tick()                   # must not raise
+    assert act.attempts >= 3          # 1 try + 2 retries on first fire
+    errs = [r for r in loop.log.records() if r.outcome == "error"]
+    assert errs and all(r.error == "E_ACT_RAISE" for r in errs)
+    assert loop.health()["actuation_errors"] >= 1
+
+
+def test_admission_failure_rolls_back_gate_memory():
+    """A failed admit() leaves the loop's shed memory at the last
+    applied state so the flip is retried, not forgotten."""
+    from repro.control import AdmissionPolicy
+    from repro.control.policy import Decision
+    svc, queues = _service(1)
+
+    class BadAdmit(_RaisingActuator):
+        def __init__(self, q):
+            super().__init__(q)
+            self.reverts = []
+
+        def admit(self, i, shed):
+            if not shed:               # the rollback revert is allowed
+                self.reverts.append(i)
+                return "applied"
+            raise RuntimeError("gate wedged")
+
+    act = BadAdmit(1)
+    loop = ControlLoop(svc, PolicySet(admission=AdmissionPolicy()), act,
+                       actuation_retries=0)
+    z = np.zeros(1, np.int32)
+    zb = np.zeros(1, bool)
+    dec = Decision(target_replicas=z, scale_mask=zb, target_caps=z,
+                   resize_mask=zb, shed=np.ones(1, bool), straggler=zb,
+                   probing=zb)
+    loop._actuate(dec, np.zeros(1), np.zeros(1),
+                  np.ones(1, np.int64), np.full(1, 64, np.int64))
+    # the shed flip failed: memory stays False (retried next tick) and
+    # the physical gate was reverted to the last applied state
+    assert not loop._shed.any()
+    assert act.reverts == [0]
+    assert loop.health()["actuation_errors"] >= 1
+    errs = [r for r in loop.log.records() if r.outcome == "error"]
+    assert errs and errs[0].error == "E_ACT_RAISE"
+
+
+def test_sense_nan_quarantine_falls_back_to_last_good():
+    svc, queues = _service(2)
+    act = _RaisingActuator(2)
+    act.scale = lambda i, n: "applied"
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy()), act)
+    _feed(svc, queues, head_tc=50.0, tail_tc=100.0, n=200)
+    loop.tick()                        # establishes last-good estimates
+    good_mu = loop._last_good_mu.copy()
+    assert (good_mu > 0).all()
+    orig = svc.gated_rates
+    svc.gated_rates = lambda: np.full(4, np.nan)
+    try:
+        loop.tick()                    # must not poison the decision
+    finally:
+        svc.gated_rates = orig
+    assert loop.quarantined == 4
+    assert np.allclose(loop._last_good_mu, good_mu)
+    recs = [r for r in loop.log.records() if r.error == "E_SENSE_NAN"]
+    assert recs and recs[0].outcome == "observed"
+    loop.tick()                        # healthy again
+    assert loop.quarantined == 4       # no new quarantines
+
+
+def test_watchdog_restarts_dead_monitor_preserving_estimator_state():
+    plan = FaultPlan([FaultEvent(0.0, "monitor_death", "monitor")]).arm()
+    pipe = Pipeline([Stage("src", source=range(10)),
+                     Stage("work", fn=lambda x: x)],
+                    capacity=8, arena=CounterArena(8), control=True,
+                    monitor_cfg=CFG, fault_plan=plan)
+    old = pipe.monitor
+    svc = pipe.fleet
+    old.start()
+    old.join(timeout=10)               # injected silent death
+    assert not old.is_alive() and not old._stop_evt.is_set()
+    assert pipe.control.check_monitor()
+    try:
+        assert pipe.monitor is not old
+        assert pipe.monitor.is_alive()
+        assert pipe.fleet is svc       # estimator state survived
+        assert pipe.control.health()["monitor_restarts"] == 1
+        recs = [r for r in pipe.control.log.records()
+                if r.policy == "watchdog"]
+        assert recs and recs[0].error == "E_MONITOR_DEAD"
+        assert not pipe.control.check_monitor()   # alive: no-op
+    finally:
+        pipe.monitor.stop()
+
+
+def test_loop_run_contains_tick_errors():
+    svc, queues = _service(1)
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy()),
+                       _RaisingActuator(1), period_s=1e-3)
+    svc.gated_rates = lambda: (_ for _ in ()).throw(RuntimeError("boom"))
+    loop.start()
+    time.sleep(0.05)
+    loop.stop()
+    h = loop.health()
+    assert h["tick_errors"] >= 1
+    assert any(r.error == "E_TICK" for r in loop.log.records())
+
+
+# -- degraded-mode decision leg --------------------------------------------
+
+def test_faulty_operand_holds_actions_and_sheds():
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=0, min_ready=1)
+    q = 2
+    st = control_init(cfg, q)
+    faulty = np.array([True, False])
+    dec = None
+    for _ in range(3):                 # past confirmation
+        st, dec = control_decide(
+            cfg, st, lam=np.full(q, 100.0), mu=np.full(q, 50.0),
+            ready=np.ones(q, bool), replicas=np.ones(q),
+            caps=np.full(q, 64), faulty=faulty, impl="numpy")
+    assert not dec.scale_mask[0]       # replica action held
+    assert dec.scale_mask[1]           # healthy neighbor unaffected
+    assert dec.shed[0]                 # admission forced shut
+    assert not dec.shed[1]
+
+
+def test_faulty_operand_does_not_retrace():
+    cfg = ControlConfig(confirm_ticks=1, block_q=16,
+                        cooldown_ticks=11)          # fresh cache key
+
+    def run(q, faulty):
+        control_decide(cfg, control_init(cfg, q),
+                       lam=np.full(q, 100.0), mu=np.full(q, 50.0),
+                       ready=np.ones(q, bool), replicas=np.ones(q),
+                       caps=np.full(q, 64), faulty=faulty,
+                       impl="jit", donate=True)
+
+    base = control_decide_trace_count()
+    run(3, None)
+    warm = control_decide_trace_count()
+    assert warm > base
+    for q, f in ((5, None), (3, np.array([True, False, True])),
+                 (9, np.ones(9, bool)), (16, np.zeros(16, bool))):
+        run(q, f)
+    assert control_decide_trace_count() == warm
+
+
+# -- orphaned FT primitives driven from the streams stack ------------------
+
+def test_ft_manager_elastic_plan_from_supervised_pipeline():
+    """FaultToleranceManager.assess over the supervisor's live registry
+    and rate tracker: a lapsed replica host yields an ElasticPlan that
+    names it."""
+    pipe = Pipeline([Stage("src", source=_paced_source(800)),
+                     Stage("work", fn=lambda x: x, replicas=2)],
+                    capacity=32, arena=CounterArena(8))
+    sup = ReplicaSupervisor(pipe, poll_s=0.005,
+                            heartbeat_timeout_s=0.15)
+    sup.start()
+    pipe.run_collect(timeout_s=120)
+    # the supervisor fed each replica's drained-item rate into the
+    # Algorithm-1 host tracker while the stream ran
+    assert any(h.startswith("work#") for h in sup.rates.monitors)
+    ftm = FaultToleranceManager(n_hosts=8, chips_per_host=4,
+                                heartbeat_timeout_s=0.15)
+    ftm.heartbeats = sup.heartbeats    # the streams-stack registry
+    ftm.rates = sup.rates
+    victim = sorted(h for h in sup.heartbeats._last
+                    if h.startswith("work#"))[0]
+    time.sleep(0.2)                    # everything lapses...
+    for h in list(sup.heartbeats._last):
+        if h != victim:
+            sup.heartbeats.beat(h)     # ...then all but the victim beat
+    plan = ftm.assess(latest_ckpt_step=123)
+    assert plan is not None
+    assert victim in plan.dropped_hosts
+    assert plan.restart_step == 123
+    assert plan.n_chips < 8 * 4
+    sup.stop()
+    assert sup.heartbeats._last == {}  # stop() forgets every host

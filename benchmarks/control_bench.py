@@ -811,7 +811,208 @@ def chaos_recovery():
                   f"{retraces} faulty-operand retraces, ok={ok}")
 
 
+def qos_spike():
+    """QoS acceptance scenario (PR 7): an open-loop burst on the
+    BLOCKING class against a REAL serving engine, with a seeded
+    ``FaultPlan`` replica kill mid-spike, run twice:
+
+    * **qos** — per-class lanes + bulkheads (1 blocking, 2 nonblocking
+      workers), ``control=True``: the fused decision senses the
+      engine's ``admission_bands()``/``pressure()`` operands and sheds
+      the patient class first, patient workers borrow into the hot
+      blocking lane (one-way, bounded), a ``ReplicaSupervisor``
+      respawns the killed worker into its own partition;
+    * **baseline** — one shared lane, one shared 3-worker pool, no
+      deadlines, no control: head-of-line blocking under the same
+      offered load.
+
+    Gates: blocking burst p99 <= 3x pre-burst p99 AND blocking
+    availability (completed within the deadline budget) >= 90% on the
+    qos engine while the baseline misses both; nonblocking throughput
+    recovers after the burst; the decision dispatch never retraces
+    across class churn (band/pressure/faulty operand values vary
+    freely)."""
+    from repro.ft import FaultEvent, FaultPlan, ReplicaSupervisor
+    from repro.serve import (BLOCKING, NONBLOCKING, Engine, Request,
+                             ServeConfig)
+    quick = _quick()
+    pre_s, burst_s, post_s = (0.6, 0.8, 0.6) if quick else (1.0, 1.5, 1.0)
+    nb_rate, b_rate, burst_rate = 5000.0, 200.0, 3000.0
+    work_s = 4e-3                  # per generation round (batch of 8)
+    deadline_s = 0.25              # blocking availability budget
+    tick_s = 5e-3
+    toks = np.arange(4)
+
+    class _Work(Engine):
+        """Model-free engine: a round burns work_s and completes."""
+
+        def _serve_batch(self, batch):
+            time.sleep(work_s)
+            for r in batch:
+                r.out = np.zeros(1, np.int32)
+                r.done.set()
+                self.served += 1
+
+    def drive(qos: bool):
+        T = pre_s + burst_s + post_s
+        kill_at = pre_s + 0.4 * burst_s
+        plan = FaultPlan([FaultEvent(kill_at, "crash",
+                                     NONBLOCKING if qos else BLOCKING)])
+        scfg = (ServeConfig(batch_size=8, queue_capacity=64,
+                            bulkheads=(1, 2))
+                if qos else
+                ServeConfig(batch_size=8, queue_capacity=2048,
+                            qos_classes=(BLOCKING,), bulkheads=(3,)))
+        eng = _Work(None, None, scfg, arena=CounterArena(8),
+                    control=qos, fault_plan=plan)
+        if eng.control is not None:
+            eng.control.period_s = 0.01    # react within the burst
+        sup = ReplicaSupervisor(engines=[eng], poll_s=0.01)
+        eng.start()
+        sup.start()
+        nb_marks = {}                  # phase -> nonblocking served so far
+
+        def nb_served():
+            if not qos:
+                return 0
+            return eng.admission_state()["classes"][NONBLOCKING]["served"]
+
+        rid = 0
+        blocking = []                  # (phase, Request, submitted_ok)
+        t0 = time.monotonic()
+        plan.arm(t0)
+        owed_b = owed_nb = 0.0
+        last = 0.0
+        phase = "pre"
+        while True:
+            now = time.monotonic() - t0
+            if now >= T:
+                break
+            p = ("pre" if now < pre_s
+                 else "burst" if now < pre_s + burst_s else "post")
+            if p != phase:
+                nb_marks[phase] = nb_served()
+                phase = p
+            dt, last = now - last, now
+            owed_b += (burst_rate if p == "burst" else b_rate) * dt
+            owed_nb += nb_rate * dt
+            while owed_b >= 1.0:
+                owed_b -= 1.0
+                r = Request(rid=rid, tokens=toks, max_new=1,
+                            qos=BLOCKING,
+                            deadline_s=deadline_s if qos else None)
+                rid += 1
+                blocking.append((p, r, eng.submit(r, timeout=0.02)))
+            while owed_nb >= 1.0:
+                owed_nb -= 1.0
+                if qos:
+                    eng.submit(Request(rid=rid, tokens=toks, max_new=1,
+                                       qos=NONBLOCKING), timeout=0.0)
+                else:
+                    eng.submit(Request(rid=rid, tokens=toks, max_new=1),
+                               timeout=0.0)
+                rid += 1
+            time.sleep(tick_s)
+        nb_marks[phase] = nb_served()
+        time.sleep(2 * deadline_s)     # let in-flight tails land
+        sup.stop()
+        eng.stop()
+        lat = {"pre": [], "burst": [], "post": []}
+        avail = {"pre": [0, 0], "burst": [0, 0], "post": [0, 0]}
+        for p, r, ok in blocking:
+            avail[p][1] += 1
+            done = ok and r.done.is_set() and r.out is not None
+            if done:
+                lat[p].append(r.t_done - r.t_submit)
+                if r.t_done - r.t_submit <= deadline_s:
+                    avail[p][0] += 1
+        p99 = {p: (float(np.percentile(v, 99)) if v else 0.0)
+               for p, v in lat.items()}
+        nb_pre = nb_marks.get("pre", 0) / pre_s
+        nb_post = ((nb_marks.get("post", 0) - nb_marks.get("burst", 0))
+                   / post_s)
+        return {
+            "p99_pre_ms": p99["pre"] * 1e3,
+            "p99_burst_ms": p99["burst"] * 1e3,
+            "p99_ratio": p99["burst"] / max(p99["pre"], 1e-9),
+            "availability_burst": avail["burst"][0]
+            / max(avail["burst"][1], 1),
+            "blocking_offered_burst": avail["burst"][1],
+            "nonblocking_pre_rps": nb_pre,
+            "nonblocking_post_rps": nb_post,
+            "kill_fired": len(plan.fired()) == 1,
+            "respawns": sup.respawns,
+            "served": eng.served,
+            "degraded": sorted(eng._degraded),
+        }
+
+    base_traces = control_decide_trace_count()
+    qos_run = drive(qos=True)
+    run_traces = control_decide_trace_count() - base_traces
+    baseline = drive(qos=False)
+
+    # class churn must never retrace the decision dispatch: lane count,
+    # band values, pressure and the faulty mask all vary freely
+    tcfg = ControlConfig(confirm_ticks=1, block_q=16, cooldown_ticks=17)
+
+    def dispatch(q, hi, lo, prs, f):
+        control_decide(tcfg, control_init(tcfg, q),
+                       lam=np.full(q, 100.0), mu=np.full(q, 50.0),
+                       ready=np.ones(q, bool), replicas=np.ones(q),
+                       caps=np.full(q, 64), occ_hi=hi, occ_lo=lo,
+                       pressure=prs, faulty=f, impl="jit", donate=True)
+
+    dispatch(2, None, None, None, None)
+    warm = control_decide_trace_count()
+    for q in (2, 3, 7, 16):
+        dispatch(q, np.full(q, 0.6, np.float32),
+                 np.full(q, 0.3, np.float32), np.linspace(0, 1, q),
+                 np.zeros(q, bool))
+        dispatch(q, np.full(q, np.nan, np.float32), None, None,
+                 np.ones(q, bool))
+    churn_retraces = control_decide_trace_count() - warm
+
+    nb_recovered = (qos_run["nonblocking_post_rps"]
+                    >= 0.5 * max(qos_run["nonblocking_pre_rps"], 1.0))
+    qos_ok = (qos_run["p99_ratio"] <= 3.0
+              and qos_run["availability_burst"] >= 0.9)
+    base_over = (baseline["p99_ratio"] > 3.0
+                 or baseline["availability_burst"] < 0.9)
+    ok = (qos_ok and base_over and nb_recovered
+          and churn_retraces == 0 and run_traces == 0
+          and qos_run["kill_fired"] and qos_run["respawns"] >= 1)
+    section = {
+        "phases_s": [pre_s, burst_s, post_s],
+        "rates_rps": {"nonblocking": nb_rate, "blocking_pre": b_rate,
+                      "blocking_burst": burst_rate},
+        "deadline_s": deadline_s,
+        "qos": qos_run, "baseline": baseline,
+        "decide_retraces_during_run": int(run_traces),
+        "decide_retraces_across_class_churn": int(churn_retraces),
+        "target": {"p99_ratio": 3.0, "availability": 0.9,
+                   "nb_recovery_frac": 0.5, "retraces": 0, "met": ok},
+    }
+    _update_report("qos_spike", section)
+    rows = [f"qos_spike/qos_p99_ratio,{qos_run['p99_ratio']:.2f},"
+            f"target<=3",
+            f"qos_spike/qos_availability,"
+            f"{qos_run['availability_burst']:.3f},target>=0.9",
+            f"qos_spike/baseline_availability,"
+            f"{baseline['availability_burst']:.3f},overload",
+            f"qos_spike/churn_retraces,{churn_retraces},target=0"]
+    return rows, (
+        f"qos spike: blocking p99 {qos_run['p99_burst_ms']:.0f} ms = "
+        f"{qos_run['p99_ratio']:.1f}x pre (target <=3x), availability "
+        f"{qos_run['availability_burst'] * 100:.1f}% (target >=90%) vs "
+        f"baseline {baseline['availability_burst'] * 100:.1f}% / "
+        f"{baseline['p99_ratio']:.1f}x; nonblocking post "
+        f"{qos_run['nonblocking_post_rps']:.0f} rps (pre "
+        f"{qos_run['nonblocking_pre_rps']:.0f}); kill fired = "
+        f"{qos_run['kill_fired']}, {qos_run['respawns']} respawns, "
+        f"{churn_retraces} churn retraces, ok={ok}")
+
+
 ALL = [closed_loop_step_change, closed_loop_slow_drift,
        closed_loop_bursty_arrivals, closed_loop_admission_collapse,
        closed_loop_multi_tenant, control_parity, control_tick_overhead,
-       chaos_recovery]
+       chaos_recovery, qos_spike]

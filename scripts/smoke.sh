@@ -7,7 +7,11 @@
 # across tenant attach/detach, per-tenant leg masks honored) and the
 # chaos scenario (replica kills + monitor death: recovery to >=70% of
 # fault-free throughput within the window, availability >= 90%, zero
-# unhandled thread deaths, zero faulty-operand retraces).
+# unhandled thread deaths, zero faulty-operand retraces) and the QoS
+# spike scenario (blocking burst + mid-spike replica kill: blocking
+# p99 <= 3x pre-burst and availability >= 90% on the QoS engine while
+# the shared-pool baseline misses both, nonblocking throughput
+# recovers post-burst, zero decision retraces across class churn).
 #
 #   scripts/smoke.sh
 #
@@ -101,5 +105,27 @@ assert ch["unhandled_thread_deaths"] == 0, \
     "chaos: a thread died without being recorded/handled"
 assert ch["faulty_operand_retraces"] == 0, \
     "chaos: the faulty operand retraced the decision dispatch"
+qs = rep["qos_spike"]
+q, b = qs["qos"], qs["baseline"]
+print(f"smoke: qos spike = {q['p99_ratio']:.1f}x burst p99 (target <= 3x), "
+      f"availability {q['availability_burst'] * 100:.1f}% (target >= 90%) "
+      f"vs baseline {b['availability_burst'] * 100:.1f}% / "
+      f"{b['p99_ratio']:.1f}x; nonblocking {q['nonblocking_post_rps']:.0f} "
+      f"rps post-burst (pre {q['nonblocking_pre_rps']:.0f}), "
+      f"{qs['decide_retraces_across_class_churn']} churn retraces")
+assert q["p99_ratio"] <= 3.0, \
+    "qos spike: blocking burst p99 above 3x pre-burst"
+assert q["availability_burst"] >= 0.9, \
+    "qos spike: blocking availability under burst below 90%"
+assert b["p99_ratio"] > 3.0 or b["availability_burst"] < 0.9, \
+    "qos spike: shared-pool baseline did not fall over (load too light)"
+assert q["nonblocking_post_rps"] >= 0.5 * q["nonblocking_pre_rps"], \
+    "qos spike: nonblocking throughput did not recover post-burst"
+assert q["kill_fired"] and q["respawns"] >= 1, \
+    "qos spike: the mid-spike kill did not fire or was not respawned"
+assert qs["decide_retraces_across_class_churn"] == 0, \
+    "qos spike: class churn retraced the decision dispatch"
+assert qs["decide_retraces_during_run"] == 0, \
+    "qos spike: the serving run retraced the decision dispatch"
 EOF
 echo "smoke: OK"

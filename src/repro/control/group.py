@@ -132,6 +132,37 @@ class CompositeActuator:
                          else np.zeros(len(t), bool))
         return (np.concatenate(parts) if parts else np.zeros(0, bool))
 
+    def admission_bands(self) -> tuple[np.ndarray, np.ndarray]:
+        """Concatenated per-queue admission (hi, lo) occupancy bands: a
+        tenant without QoS classes (no ``admission_bands``) contributes
+        NaN rows, which inherit the config scalars in the decision."""
+        his, los = [], []
+        for t in self._group._tenants:
+            a = t.actuator
+            if hasattr(a, "admission_bands"):
+                hi, lo = a.admission_bands()
+                his.append(np.asarray(hi, np.float32))
+                los.append(np.asarray(lo, np.float32))
+            else:
+                his.append(np.full(len(t), np.nan, np.float32))
+                los.append(np.full(len(t), np.nan, np.float32))
+        if not his:
+            z = np.zeros(0, np.float32)
+            return z, z
+        return np.concatenate(his), np.concatenate(los)
+
+    def pressure(self) -> np.ndarray:
+        """Concatenated sibling-lane pressure: tenants without QoS
+        lanes contribute zero (pressure never crosses tenants — one
+        tenant's burst must not shed a neighbor's patient traffic)."""
+        parts = []
+        for t in self._group._tenants:
+            a = t.actuator
+            parts.append(np.asarray(a.pressure(), float)
+                         if hasattr(a, "pressure")
+                         else np.zeros(len(t)))
+        return (np.concatenate(parts) if parts else np.zeros(0))
+
     def policy_overrides(self) -> dict:
         """Per-queue tenant masks + replica-knob overrides, merged into
         the one fused decision: every array is (Q,) in group queue
@@ -372,6 +403,10 @@ class ControlGroup:
             or f"tenant{len(self._tenants)}",
             obj=obj, queues=queues, actuator=actuator, policies=policies)
         self._resolve(handle)
+        # a QoS-aware actuator (serve.Engine) audits its per-class gate
+        # flips into the group's shared ring
+        if hasattr(actuator, "bind_log"):
+            actuator.bind_log(self.loop.log)
         with self._lock:
             with self.loop._lock:
                 n_old = len(self.service.queues)

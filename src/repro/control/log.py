@@ -46,7 +46,7 @@ class ControlRecord:
     queue: int                 # public stream/queue index
     policy: str                # 'replicas' | 'capacity' | 'admission'
                                # | 'sense' | 'loop' | 'watchdog'
-                               # | 'supervisor'
+                               # | 'supervisor' | 'qos'
     observed_lam: float
     observed_mu: float
     action: str                # e.g. 'scale', 'resize', 'shed', 'admit'
@@ -54,6 +54,10 @@ class ControlRecord:
     outcome: str               # 'applied' | 'rejected' | 'noop'
                                # | 'error' | 'observed'
     error: str = ""            # error code, '' on the happy path
+    qos: str = ""              # QoS class the record concerns ('' =
+                               # class-less): engine per-class gate
+                               # flips (policy 'qos') and supervisor
+                               # bulkhead crash/respawn records tag it
 
 
 class ControlLog:

@@ -30,7 +30,14 @@ of upward dependencies.  An adapter provides:
 * ``faulty()`` -> (Q,) bool (optional): queues whose consumer stage is
   degraded (crash-looping, retired by the supervisor) — the decision
   dispatch holds their replica/buffer actions and forces admission
-  shut, as one extra padded operand (no retraces).
+  shut, as one extra padded operand (no retraces);
+* ``admission_bands()`` -> ((Q,), (Q,)) float (optional): per-queue
+  admission occupancy (hi, lo) bands, NaN = inherit the config
+  scalars — the QoS per-class occupancy targets;
+* ``pressure()`` -> (Q,) float (optional): sibling-lane urgency (a
+  patient QoS lane carries the hottest blocking lane's occupancy), so
+  patient traffic sheds first under a blocking burst — both ride the
+  same fused dispatch as padded operands (no retraces).
 
 The loop is hardened against the failure modes a long-running control
 plane actually sees — each is audited in the ``ControlLog`` with an
@@ -237,6 +244,18 @@ class ControlLoop(threading.Thread):
                   if hasattr(act, "faulty") else None)
         occ = (np.asarray(act.occupancy(), float)
                if self.policies.admission is not None else 0.0)
+        # class-aware admission operands (QoS lanes): per-queue
+        # occupancy bands (NaN = inherit the config scalars) and
+        # sibling-lane pressure — optional like scalable()/faulty(),
+        # and queue-padded so a class-less actuator decides identically
+        bands = (act.admission_bands()
+                 if hasattr(act, "admission_bands") else None)
+        occ_hi = occ_lo = None
+        if bands is not None:
+            occ_hi = np.asarray(bands[0], np.float32)
+            occ_lo = np.asarray(bands[1], np.float32)
+        pressure = (np.asarray(act.pressure(), float)
+                    if hasattr(act, "pressure") else None)
         # multi-tenant per-queue overrides (leg masks, replica knobs) —
         # a plain single-tenant actuator has none and the config rules
         overrides = (act.policy_overrides()
@@ -255,6 +274,7 @@ class ControlLoop(threading.Thread):
                 replicas=replicas, rep_basis=self._mu_basis, caps=caps,
                 cv2=cv2, occupancy=occ, saturated=saturated,
                 scalable=scalable, stale=stale, faulty=faulty,
+                occ_hi=occ_hi, occ_lo=occ_lo, pressure=pressure,
                 impl=impl, donate=True, **overrides)
         except Exception:
             if impl == "numpy":
@@ -278,6 +298,7 @@ class ControlLoop(threading.Thread):
                 replicas=replicas, rep_basis=self._mu_basis, caps=caps,
                 cv2=cv2, occupancy=occ, saturated=saturated,
                 scalable=scalable, stale=stale, faulty=faulty,
+                occ_hi=occ_hi, occ_lo=occ_lo, pressure=pressure,
                 impl="numpy", donate=True, **overrides)
         self.ticks += 1
         self._actuate(dec, lam, mu, replicas, caps)

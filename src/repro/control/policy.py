@@ -222,7 +222,8 @@ def _capacity_targets(cfg: ControlConfig, lam, mu, cv2, current, xp=jnp):
 def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
                ready, replicas, rep_basis, caps, cv2, occupancy,
                saturated, scalable, fleet_med, stale, faulty, leg_rep,
-               leg_buf, leg_adm, headroom, max_reps):
+               leg_buf, leg_adm, headroom, max_reps, occ_hi, occ_lo,
+               pressure):
     """The fused decision, once, against either array namespace.
 
     ``leg_rep``/``leg_buf``/``leg_adm`` are the per-queue tenant masks
@@ -236,7 +237,19 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     tripped the supervisor's crash-loop breaker gets its admission gate
     forced shut and its replica/buffer legs held still — estimates off
     a crash-looping stage are garbage, and re-tuning on garbage only
-    spirals, so partial failure degrades gracefully instead."""
+    spirals, so partial failure degrades gracefully instead.
+
+    ``occ_hi``/``occ_lo``/``pressure`` are the class-aware admission
+    legs (QoS lanes — see ``serve.qos``), again queue-padded operands
+    so class churn never retraces: per-queue occupancy bands replace
+    the config scalars (a patient class arms shedding at a lower fill),
+    and ``pressure`` is an externally sensed urgency — a patient lane
+    carries the hottest blocking lane's occupancy, so patient traffic
+    is shed *first* when blocking traffic runs hot (``pressure >=
+    occ_hi`` arms regardless of the lane's own collapse state) and is
+    held shed until the pressure clears (``pressure <= occ_lo`` gates
+    disarm).  The defaults (config scalars, zero pressure) reproduce
+    the class-less behavior exactly."""
     lam = lam.astype(xp.float32)
     mu = mu.astype(xp.float32)
     cv2 = cv2.astype(xp.float32)
@@ -344,11 +357,14 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     # a saturated queue whose replica leg is maxed out cannot grow
     # its way back: shedding is the only lever left
     exhausted = saturated & ready & (replicas >= max_reps)
-    arm = (collapsed | straggler | exhausted) \
-        & (occ >= cfg.occupancy_hi)
+    hi = occ_hi.astype(xp.float32)
+    lo = occ_lo.astype(xp.float32)
+    prs = pressure.astype(xp.float32)
+    arm = ((collapsed | straggler | exhausted) & (occ >= hi)) \
+        | (prs >= hi)
     recovered = (mu >= cfg.recover_frac * peak) & ~straggler \
         & ~exhausted
-    disarm = recovered | (occ <= cfg.occupancy_lo)
+    disarm = (recovered | (occ <= lo)) & (prs <= lo)
     # the arm/disarm memory keeps running through a probe window; only
     # the *output* gate is forced open so shed demand can show itself.
     # A faulty queue's gate is forced SHUT regardless — feeding load to
@@ -401,6 +417,7 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
                    rep_basis=None, saturated=None, scalable=None,
                    stale=None, faulty=None, leg_rep=None, leg_buf=None,
                    leg_adm=None, headroom=None, max_replicas=None,
+                   occ_hi=None, occ_lo=None, pressure=None,
                    impl: str = "auto", donate: bool = True
                    ) -> tuple[ControlState, Decision]:
     """Evaluate every policy for the whole fleet in one fused pass.
@@ -425,6 +442,12 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
     multi-tenant overrides — ``leg_rep``/``leg_buf``/``leg_adm`` masks
     and per-queue ``headroom``/``max_replicas`` — default to the static
     config flags/knobs, so single-tenant behavior is unchanged.
+    ``occ_hi``/``occ_lo`` are per-queue admission occupancy bands (QoS
+    classes — NaN entries inherit the config scalars) and ``pressure``
+    is the per-queue sibling-lane urgency (``>= occ_hi`` arms shedding
+    outright; ``<= occ_lo`` is required to disarm) — all three are
+    queue-padded operands with semantics-preserving defaults, so class
+    churn never retraces the dispatch.
     Under ``"jit"`` the ``state`` is donated by default — callers keep
     only the returned state, exactly like the fleet monitor dispatch.
     """
@@ -450,6 +473,18 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         headroom = cfg.headroom
     if max_replicas is None:
         max_replicas = cfg.max_replicas
+
+    def band(v, default):
+        # per-queue occupancy band, NaN = inherit the config scalar
+        if v is None:
+            return np.float32(default)
+        v = np.asarray(v, np.float32)
+        return np.where(np.isnan(v), np.float32(default), v)
+
+    occ_hi = band(occ_hi, cfg.occupancy_hi)
+    occ_lo = band(occ_lo, cfg.occupancy_lo)
+    if pressure is None:
+        pressure = 0.0
     # fleet median of the ready service rates, for the straggler leg
     # (numpy introselect off-dispatch: XLA CPU would sort, ~30x slower)
     mu_np = np.asarray(mu, np.float32)
@@ -482,7 +517,10 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
                 leg_rep=npa(leg_rep, bool), leg_buf=npa(leg_buf, bool),
                 leg_adm=npa(leg_adm, bool),
                 headroom=npa(headroom, np.float32),
-                max_reps=npa(max_replicas, np.int32))
+                max_reps=npa(max_replicas, np.int32),
+                occ_hi=npa(occ_hi, np.float32),
+                occ_lo=npa(occ_lo, np.float32),
+                pressure=npa(pressure, np.float32))
     if impl != "jit":
         raise ValueError(f"bad impl {impl!r}")
 
@@ -511,7 +549,11 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         leg_buf=pad(jnp.asarray(leg_buf, bool), False),
         leg_adm=pad(jnp.asarray(leg_adm, bool), False),
         headroom=pad(jnp.asarray(headroom, jnp.float32), 1.0),
-        max_reps=pad(jnp.asarray(max_replicas, jnp.int32), 1))
+        max_reps=pad(jnp.asarray(max_replicas, jnp.int32), 1),
+        # padded rows must never arm via pressure: hi=2 is unreachable
+        occ_hi=pad(jnp.asarray(occ_hi, jnp.float32), 2.0),
+        occ_lo=pad(jnp.asarray(occ_lo, jnp.float32), 0.0),
+        pressure=pad(jnp.asarray(pressure, jnp.float32), 0.0))
     state = ControlState(*(jnp.asarray(leaf) for leaf in state))
     if rpad:
         state = jax.tree_util.tree_map(

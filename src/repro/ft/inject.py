@@ -29,6 +29,12 @@ Crash/stall/actuation/monitor-death events fire exactly once each
 (first matching hook consumes them); clock skew is a *window* — active
 from ``at_s`` for ``duration_s``.  ``fired()`` returns the consumption
 audit (absolute fire time + event) for post-run assertions.
+
+Targets match by name OR alias: ``serve.Engine`` workers check with
+``aliases=(engine host, QoS class name)``, so one event may target a
+single worker (``"engine:blocking#0"``), a whole engine (``"engine"``),
+or one QoS bulkhead (``"nonblocking"`` — how the ``qos_spike`` bench
+kills a borrowed patient replica mid-burst).
 """
 
 from __future__ import annotations

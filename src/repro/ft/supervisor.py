@@ -55,6 +55,16 @@ class _StageHealth:
     degraded: bool = False
 
 
+@dataclasses.dataclass
+class _BulkheadHealth:
+    """Per-(engine, QoS class) crash-loop state — one engine bulkhead
+    is the engine-side analog of one pipeline stage."""
+    consecutive: int = 0
+    last_death_t: float = 0.0
+    degraded: bool = False
+    lost: int = 0                # workers retired while the breaker held
+
+
 class ReplicaSupervisor(threading.Thread):
     """Supervise one pipeline's stage replicas (and, optionally, engine
     worker loops).
@@ -96,6 +106,8 @@ class ReplicaSupervisor(threading.Thread):
         self.respawns = 0
         self.breaker_trips = 0
         self._health: dict[int, _StageHealth] = {}
+        # per-(engine index, QoS class) bulkhead crash-loop state
+        self._eng_health: dict[tuple[int, str], _BulkheadHealth] = {}
         self._hosts: set[str] = set()       # every host ever registered
         self._items_seen: dict[str, int] = {}
         self._last_poll_t = time.monotonic()
@@ -107,6 +119,8 @@ class ReplicaSupervisor(threading.Thread):
             if hasattr(eng, "bind_heartbeats"):
                 eng.bind_heartbeats(self.heartbeats)
                 self._hosts.add(eng.host)
+                if hasattr(eng, "worker_hosts"):
+                    self._hosts.update(eng.worker_hosts())
 
     # -- hooks the pipeline's workers call ---------------------------------
     def register(self, host: str):
@@ -123,12 +137,12 @@ class ReplicaSupervisor(threading.Thread):
 
     # -- audit -------------------------------------------------------------
     def _record(self, stage_idx: int, action: str, value: int,
-                outcome: str, error: str = "") -> None:
+                outcome: str, error: str = "", qos: str = "") -> None:
         self.log.append(ControlRecord(
             tick=0, t=time.monotonic(), queue=int(stage_idx),
             policy="supervisor", observed_lam=0.0, observed_mu=0.0,
             action=action, value=int(value), outcome=outcome,
-            error=error))
+            error=error, qos=qos))
 
     def degraded(self) -> list[str]:
         """Names of breaker-tripped stages."""
@@ -247,6 +261,10 @@ class ReplicaSupervisor(threading.Thread):
 
     def _poll_engines(self, now: float) -> None:
         for k, eng in enumerate(self.engines):
+            if hasattr(eng, "workers"):
+                self._poll_engine_bulkheads(k, eng, now)
+                continue
+            # legacy single-worker engine protocol
             w = getattr(eng, "_worker", None)
             if (w is not None and w.ident is not None
                     and not w.is_alive() and not eng._stop.is_set()):
@@ -254,6 +272,68 @@ class ReplicaSupervisor(threading.Thread):
                 if eng._respawn_worker():
                     self.respawns += 1
                     self._record(k, "respawn", 1, "applied")
+
+    def _poll_engine_bulkheads(self, k, eng, now: float) -> None:
+        """Supervise one engine's per-class worker partitions: a dead
+        worker is respawned *into its own bulkhead* (borrowed capacity
+        never migrates), each (engine, class) pair carries its own
+        crash-loop breaker, and a tripped breaker marks the class
+        degraded — the engine actuator's ``faulty()`` lane mask then
+        holds that lane's legs and shuts its gate in the fused decision
+        (same semantics as a degraded pipeline stage)."""
+        if eng._stop.is_set():
+            return
+        for w in eng.workers():
+            if (w.ident is None or w.is_alive() or w.retire.is_set()
+                    or w.handled):
+                continue
+            w.handled = True
+            self.heartbeats.forget(w.host)
+            h = self._eng_health.setdefault((k, w.qos), _BulkheadHealth())
+            h.consecutive += 1
+            h.last_death_t = now
+            self._record(k, "crash", h.consecutive, "observed",
+                         "E_ENGINE_DEAD", qos=w.qos)
+            if h.consecutive >= self.breaker_threshold:
+                if not h.degraded:
+                    h.degraded = True
+                    self.breaker_trips += 1
+                    eng._degraded.add(w.qos)
+                    self._record(k, "degraded", h.consecutive, "applied",
+                                 "E_CRASH_LOOP", qos=w.qos)
+                # zombie slot retired, no replacement fed in — the
+                # partition is owed its replica back on recovery
+                if eng._retire_dead_worker(w):
+                    h.lost += 1
+                continue
+            if eng._respawn_worker(w):
+                self.respawns += 1
+                self._record(k, "respawn",
+                             eng.bulkhead_sizes().get(w.qos, 0),
+                             "applied", qos=w.qos)
+                if hasattr(eng, "worker_hosts"):
+                    self._hosts.update(eng.worker_hosts())
+        # healthy window closes the loop per bulkhead: long enough
+        # clean, the breaker resets and the class recovers
+        for (ek, qos), h in self._eng_health.items():
+            if ek != k or h.consecutive == 0:
+                continue
+            if now - h.last_death_t >= self.healthy_after_s:
+                was = h.degraded
+                h.consecutive = 0
+                if was:
+                    h.degraded = False
+                    eng._degraded.discard(qos)
+                    # feed the recovered partition its replicas back
+                    # (the breaker retired every death while tripped)
+                    if h.lost:
+                        live = eng.bulkhead_sizes().get(qos, 0)
+                        if eng.scale_bulkhead(qos, live + h.lost):
+                            self.respawns += h.lost
+                        h.lost = 0
+                    self._record(k, "recovered",
+                                 eng.bulkhead_sizes().get(qos, 0),
+                                 "applied", qos=qos)
 
     def poll(self) -> None:
         """One detection pass (the thread calls this every ``poll_s``;

@@ -1,3 +1,7 @@
-from repro.serve.engine import Request, ServeConfig, Engine
+from repro.serve.engine import AdmissionGate, Engine, Request, ServeConfig
+from repro.serve.qos import (BLOCKING, NONBLOCKING, QoSClass, qos_class,
+                             qos_classes, register_qos_class)
 
-__all__ = ["Request", "ServeConfig", "Engine"]
+__all__ = ["Request", "ServeConfig", "Engine", "AdmissionGate",
+           "QoSClass", "register_qos_class", "qos_class", "qos_classes",
+           "BLOCKING", "NONBLOCKING"]

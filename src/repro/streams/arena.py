@@ -200,6 +200,38 @@ class CounterArena:
     def alloc(self) -> EndStats:
         return EndStats(self)
 
+    def reserve_span(self, n: int) -> None:
+        """Guarantee the next ``n`` allocations land on one contiguous
+        *ascending* slot run — the co-allocation contract behind
+        per-class engine lanes: a block of lanes allocated after a
+        reservation is a slice for every fleet collector that gathers
+        it, never the gather path.  Cheap when the free list's tail is
+        already a run (the common fresh-arena case); otherwise compacts
+        (one ``_defragment_locked``), and as a last resort grows — a
+        grow appends the whole new top half as one ascending run."""
+        n = int(n)
+        if n <= 0:
+            return
+        with self.lock:
+            self._drain_pending_locked()
+            if self._span_ready_locked(n):
+                return
+            self._defragment_locked()
+            if self._span_ready_locked(n):
+                return
+            while self.capacity < n:
+                self._grow()
+            self._grow()
+
+    def _span_ready_locked(self, n: int) -> bool:
+        """True when the next ``n`` pops off ``_free`` (taken from the
+        end) form one contiguous ascending slot run."""
+        free = self._free
+        if len(free) < n:
+            return False
+        lo = free[-1]
+        return all(free[-1 - i] == lo + i for i in range(n))
+
     def _attach(self, end: EndStats) -> None:
         with self.lock:
             self._drain_pending_locked()

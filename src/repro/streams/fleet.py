@@ -15,7 +15,11 @@ boolean copy, one zero-fill — with **no per-end python iteration** (the
 * staging rows are *slot-sorted*: internal row order follows arena slot
   order, so a co-allocated fleet's gather and zero-fill collapse to
   plain slice views (readouts translate back to the public
-  heads-then-tails stream order through a permutation, off the tick);
+  heads-then-tails stream order through a permutation, off the tick).
+  ``serve.Engine``'s per-QoS-class lanes lean on this: the engine
+  reserves one contiguous slot span (``CounterArena.reserve_span``)
+  for all its lane ends, so per-class λ/μ estimates ride the same
+  gather at zero added collector cost;
 * the staging tile is (chunk_t, S) row-major, so each tick writes one
   contiguous row; the (S, chunk_t) estimator layout is produced by one
   transpose-copy per dispatch, amortized over ``chunk_t`` ticks.

@@ -152,6 +152,14 @@ class InstrumentedQueue:
     def capacity(self) -> int:
         return self._cap
 
+    def occupancy(self) -> float:
+        """Fill fraction (len/capacity) — the admission legs' per-queue
+        operand.  Unsynchronized like ``__len__``: a momentary race with
+        a push/pop/resize reads one item stale, which the decision
+        step's confirmation counters absorb."""
+        cap = self._cap
+        return len(self) / cap if cap > 0 else 0.0
+
     def __len__(self) -> int:
         # unsynchronized reads: a pop or resize rebase between loading
         # _tail and _head can make the difference momentarily negative

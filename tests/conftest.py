@@ -6,13 +6,43 @@ deterministic stand-in that supports exactly the API surface these tests
 use — ``given``/``settings`` and the ``floats``/``integers``/``lists``
 strategies — drawing a fixed number of seeded random examples per test.
 With the real library installed, this file does nothing.
+
+``_no_thread_leaks`` is the tier-1 hygiene gate for a codebase whose
+subjects are all threads (serve workers, monitor/control/supervisor
+loops): a test that exits leaving a non-daemon thread alive would hang
+the interpreter at shutdown, so it fails loudly here instead.
 """
 
 from __future__ import annotations
 
 import functools
 import sys
+import threading
+import time
 import types
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _no_thread_leaks():
+    """Fail any test that leaves a new non-daemon thread running.
+
+    Daemon threads (every repro worker/monitor/loop) are exempt — the
+    gate catches the plain ``threading.Thread()`` default a test helper
+    forgets to join, which would wedge pytest's exit."""
+    before = set(threading.enumerate())
+    yield
+    deadline = time.monotonic() + 2.0   # grace for in-flight joins
+    while True:
+        leaked = [t for t in threading.enumerate()
+                  if not t.daemon and t.is_alive() and t not in before]
+        if not leaked:
+            return
+        if time.monotonic() >= deadline:
+            pytest.fail("test leaked non-daemon threads: "
+                        f"{sorted(t.name for t in leaked)}")
+        time.sleep(0.05)
 
 
 def _install_hypothesis_stub() -> None:

@@ -1,0 +1,421 @@
+"""QoS classes + bulkhead isolation (PR 7).
+
+Covers: the class registry, per-class lane routing over contiguous
+arena slot spans, the one-way bounded borrow rule, Engine.stop()
+releasing deferred admission waiters (satellite 1), per-class
+rejection/deferral accounting distinguishable in admission_state() and
+the ControlLog (satellite 2), deadline drops at pop, and the
+class-aware admission legs of the fused decision (occ_hi/occ_lo bands,
+pressure semantics, numpy/jit parity, zero retraces across class
+churn).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.control import (AdmissionPolicy, ControlConfig, ControlLog,
+                           control_decide, control_decide_trace_count,
+                           control_init)
+from repro.serve import (BLOCKING, NONBLOCKING, Engine, QoSClass, Request,
+                         ServeConfig, qos_class, qos_classes,
+                         register_qos_class)
+from repro.streams import CounterArena
+
+
+class _WorkEngine(Engine):
+    """Model-free engine: _serve_batch burns ``work_s`` and completes
+    every request — the serving path without a model on the device."""
+
+    def __init__(self, scfg, work_s=0.0, **kw):
+        super().__init__(None, None, scfg, **kw)
+        self.work_s = work_s
+
+    def _serve_batch(self, batch):
+        if self.work_s:
+            time.sleep(self.work_s)
+        for r in batch:
+            r.out = np.zeros(1, np.int32)
+            r.done.set()
+            self.served += 1
+
+
+def _req(i, qos=BLOCKING, deadline_s=None):
+    return Request(rid=i, tokens=np.arange(4), max_new=1, qos=qos,
+                   deadline_s=deadline_s)
+
+
+# -- registry ---------------------------------------------------------------
+
+def test_registry_builtins_and_custom():
+    assert BLOCKING in qos_classes() and NONBLOCKING in qos_classes()
+    assert not qos_class(BLOCKING).patient
+    nb = qos_class(NONBLOCKING)
+    assert nb.patient and nb.mode == "shed"
+    c = QoSClass("bulk_test", patient=True, mode="defer",
+                 occupancy_hi=0.5, occupancy_lo=0.2, deadline_s=1.0)
+    register_qos_class(c)
+    assert qos_class("bulk_test") is c
+    with pytest.raises(ValueError):
+        register_qos_class(QoSClass("bulk_test"))
+    register_qos_class(QoSClass("bulk_test", patient=True), replace=True)
+    assert qos_class("bulk_test").mode is None
+
+
+def test_registry_validation():
+    with pytest.raises(ValueError):
+        QoSClass("x", mode="explode")
+    with pytest.raises(ValueError):
+        QoSClass("x", occupancy_hi=1.5)
+    with pytest.raises(ValueError):
+        QoSClass("x", occupancy_hi=0.3, occupancy_lo=0.6)
+    with pytest.raises(KeyError):
+        qos_class("never_registered")
+
+
+# -- lanes + slots ----------------------------------------------------------
+
+def test_lane_routing_and_contiguous_slots():
+    eng = _WorkEngine(ServeConfig(batch_size=2, queue_capacity=8),
+                      arena=CounterArena(4))
+    try:
+        slots = eng.lane_slots()
+        flat = [s for pair in slots.values() for s in pair]
+        # one ascending run across the whole engine block: per-class
+        # (head, tail) pairs are adjacent and the classes are stacked
+        assert flat == list(range(min(flat), min(flat) + len(flat)))
+        eng.start()
+        reqs = [_req(0), _req(1, qos=NONBLOCKING)]
+        for r in reqs:
+            assert eng.submit(r)
+        for r in reqs:
+            assert r.done.wait(timeout=10)
+        st = eng.admission_state()["classes"]
+        assert st[BLOCKING]["submitted"] == 1
+        assert st[NONBLOCKING]["submitted"] == 1
+        assert st[BLOCKING]["served"] + st[NONBLOCKING]["served"] == 2
+    finally:
+        eng.stop()
+
+
+def test_unknown_class_raises():
+    eng = _WorkEngine(ServeConfig(queue_capacity=4),
+                      arena=CounterArena(4))
+    try:
+        with pytest.raises(KeyError):
+            eng.submit(_req(0, qos="no_such_lane"))
+    finally:
+        eng.stop()
+
+
+# -- borrowing: one-way, bounded -------------------------------------------
+
+def test_patient_worker_borrows_into_blocking_lane():
+    eng = _WorkEngine(ServeConfig(batch_size=4, queue_capacity=16,
+                                  bulkheads=(0, 1)),
+                      arena=CounterArena(4))
+    eng.start()
+    try:
+        reqs = [_req(i) for i in range(4)]          # blocking lane only
+        for r in reqs:
+            assert eng.submit(r)
+        for r in reqs:
+            assert r.done.wait(timeout=10)
+        (w,) = eng.workers()
+        assert w.qos == NONBLOCKING and w.borrowed >= 1
+    finally:
+        eng.stop()
+
+
+def test_blocking_worker_never_borrows():
+    eng = _WorkEngine(ServeConfig(batch_size=4, queue_capacity=16,
+                                  bulkheads=(1, 0)),
+                      arena=CounterArena(4))
+    eng.start()
+    try:
+        r_nb = _req(0, qos=NONBLOCKING)
+        assert eng.submit(r_nb)
+        r_b = _req(1)
+        assert eng.submit(r_b)
+        assert r_b.done.wait(timeout=10)            # home lane flows
+        # reserved capacity: the patient request is never drained
+        assert not r_nb.done.wait(timeout=0.3)
+        (w,) = eng.workers()
+        assert w.qos == BLOCKING and w.borrowed == 0
+    finally:
+        eng.stop()
+
+
+# -- satellite 1: stop() releases deferred waiters --------------------------
+
+def test_stop_releases_deferred_admission_waiters():
+    eng = _WorkEngine(ServeConfig(queue_capacity=4),
+                      arena=CounterArena(4),
+                      admission=AdmissionPolicy(mode="defer"))
+    eng.start()
+    gate = eng.gates[BLOCKING]
+    gate.set_shed(True)                 # shut: defer-mode submits park
+    results = []
+
+    def blocked_submit(i):
+        results.append(eng.submit(_req(i), timeout=60.0))
+
+    threads = [threading.Thread(target=blocked_submit, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    deadline = time.monotonic() + 5
+    while gate.defer_count < 4 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert gate.defer_count == 4        # all four are parked
+    t0 = time.monotonic()
+    eng.stop()                          # must release them NOW
+    for t in threads:
+        t.join(timeout=10)
+    assert time.monotonic() - t0 < 5    # not the 60 s submit timeout
+    assert results == [False] * 4
+    assert gate.stop_released == 4
+    assert eng.admission_state()["classes"][BLOCKING]["stop_released"] == 4
+
+
+def test_closed_gate_rejects_future_submits():
+    eng = _WorkEngine(ServeConfig(queue_capacity=4),
+                      arena=CounterArena(4))
+    eng.stop()
+    assert not eng.submit(_req(0))
+    assert eng.gates[BLOCKING].shed_count == 1
+
+
+# -- satellite 2: per-class accounting + audit ------------------------------
+
+def test_per_class_rejection_paths_distinguishable():
+    eng = _WorkEngine(ServeConfig(batch_size=2, queue_capacity=2,
+                                  bulkheads=(0, 0)),   # nothing drains
+                      arena=CounterArena(4))
+    eng.start()
+    try:
+        # shed path: shut the nonblocking gate (builtin mode 'shed')
+        eng.gates[NONBLOCKING].set_shed(True)
+        assert not eng.submit(_req(0, qos=NONBLOCKING))
+        # queue-timeout path: blocking gate open, lane full
+        assert eng.submit(_req(1))
+        assert eng.submit(_req(2))
+        assert not eng.submit(_req(3), timeout=0.05)
+        st = eng.admission_state()["classes"]
+        assert st[NONBLOCKING]["shed"] == 1
+        assert st[NONBLOCKING]["queue_timeouts"] == 0
+        assert st[BLOCKING]["shed"] == 0
+        assert st[BLOCKING]["queue_timeouts"] == 1
+        assert st[BLOCKING]["submitted"] == 3
+        assert st[BLOCKING]["admitted"] == 2
+    finally:
+        eng.stop()
+
+
+def test_gate_flips_land_qos_records_in_control_log():
+    eng = _WorkEngine(ServeConfig(queue_capacity=4),
+                      arena=CounterArena(4))
+    try:
+        log = ControlLog()
+        eng._actuator.bind_log(log)
+        eng.gates[NONBLOCKING].set_shed(True)
+        assert not eng.submit(_req(0, qos=NONBLOCKING))
+        i = eng.class_names.index(NONBLOCKING)
+        eng._actuator.admit(i, True)
+        eng._actuator.admit(i, False)
+        recs = log.by_policy("qos")
+        assert [r.action for r in recs] == ["shed", "admit"]
+        assert all(r.qos == NONBLOCKING for r in recs)
+        # the class's cumulative rejections ride the record value: a
+        # shed is distinguishable from a timeout in the audit stream
+        assert recs[0].value == 1
+    finally:
+        eng.stop()
+
+
+# -- deadlines --------------------------------------------------------------
+
+def test_expired_request_dropped_at_pop():
+    eng = _WorkEngine(ServeConfig(batch_size=2, queue_capacity=8),
+                      arena=CounterArena(4))
+    r = _req(0, deadline_s=0.05)
+    assert eng.submit(r)                # queued; engine not started yet
+    time.sleep(0.12)
+    eng.start()
+    try:
+        assert r.done.wait(timeout=10)
+        assert r.out is None            # dropped, not served
+        st = eng.admission_state()["classes"][BLOCKING]
+        assert st["deadline_dropped"] == 1 and st["served"] == 0
+    finally:
+        eng.stop()
+
+
+def test_class_default_deadline_applied():
+    register_qos_class(QoSClass("deadline_test", deadline_s=0.75),
+                       replace=True)
+    eng = _WorkEngine(ServeConfig(queue_capacity=4,
+                                  qos_classes=(BLOCKING, "deadline_test")),
+                      arena=CounterArena(4))
+    try:
+        r = _req(0, qos="deadline_test")
+        eng.start()
+        assert eng.submit(r)
+        assert r.done.wait(timeout=10)
+        assert r.deadline_s == pytest.approx(0.75)
+    finally:
+        eng.stop()
+
+
+# -- class-aware admission legs in the fused decision -----------------------
+
+def test_pressure_arms_patient_shed_and_gates_disarm():
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=0, min_ready=1)
+    q = 2
+    bands_hi = np.array([np.nan, 0.6], np.float32)
+    bands_lo = np.array([np.nan, 0.3], np.float32)
+    state = control_init(cfg, q)
+    # blocking lane hot: pressure 0.9 >= occ_hi 0.6 arms the patient
+    # lane's gate with NO collapse/straggler evidence of its own
+    for _ in range(2):
+        state, dec = control_decide(
+            cfg, state, lam=np.full(q, 100.0), mu=np.full(q, 100.0),
+            ready=np.ones(q, bool), replicas=np.ones(q),
+            caps=np.full(q, 64), occupancy=np.array([0.9, 0.1]),
+            occ_hi=bands_hi, occ_lo=bands_lo,
+            pressure=np.array([0.0, 0.9]), impl="numpy")
+    assert dec.shed.tolist() == [False, True]
+    # pressure still above occ_lo: disarm is held even though the
+    # patient lane itself is empty and healthy
+    state, dec = control_decide(
+        cfg, state, lam=np.full(q, 100.0), mu=np.full(q, 100.0),
+        ready=np.ones(q, bool), replicas=np.ones(q),
+        caps=np.full(q, 64), occupancy=np.array([0.9, 0.0]),
+        occ_hi=bands_hi, occ_lo=bands_lo,
+        pressure=np.array([0.0, 0.5]), impl="numpy")
+    assert dec.shed.tolist() == [False, True]
+    # pressure cleared: the gate reopens
+    state, dec = control_decide(
+        cfg, state, lam=np.full(q, 100.0), mu=np.full(q, 100.0),
+        ready=np.ones(q, bool), replicas=np.ones(q),
+        caps=np.full(q, 64), occupancy=np.array([0.2, 0.0]),
+        occ_hi=bands_hi, occ_lo=bands_lo,
+        pressure=np.array([0.0, 0.1]), impl="numpy")
+    assert dec.shed.tolist() == [False, False]
+
+
+def test_nan_bands_inherit_config_scalars():
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=0, min_ready=1,
+                        occupancy_hi=0.9, occupancy_lo=0.5)
+    q = 1
+    state = control_init(cfg, q)
+    kw = dict(ready=np.ones(q, bool), replicas=np.ones(q),
+              caps=np.full(q, 64),
+              occ_hi=np.array([np.nan], np.float32),
+              occ_lo=np.array([np.nan], np.float32), impl="numpy")
+    # establish the service-rate peak, then collapse with occ above the
+    # CONFIG hi: the NaN band must arm exactly like the class-less path
+    state, dec = control_decide(
+        cfg, state, lam=np.full(q, 100.0), mu=np.full(q, 100.0),
+        occupancy=np.array([0.2]), **kw)
+    for _ in range(2):
+        state, dec = control_decide(
+            cfg, state, lam=np.full(q, 100.0), mu=np.full(q, 10.0),
+            occupancy=np.array([0.95]), **kw)
+    assert dec.shed.tolist() == [True]
+
+
+def test_qos_legs_numpy_jit_parity():
+    cfg = ControlConfig(confirm_ticks=1, cooldown_ticks=0, min_ready=1,
+                        block_q=8)
+    q = 3
+    kw = dict(lam=np.array([100.0, 80.0, 60.0]),
+              mu=np.array([100.0, 90.0, 70.0]),
+              ready=np.ones(q, bool), replicas=np.ones(q),
+              caps=np.full(q, 64),
+              occupancy=np.array([0.9, 0.2, 0.1]),
+              occ_hi=np.array([np.nan, 0.6, 0.5], np.float32),
+              occ_lo=np.array([np.nan, 0.3, 0.2], np.float32),
+              pressure=np.array([0.0, 0.9, 0.4]))
+    st_np = control_init(cfg, q)
+    st_j = control_init(cfg, q)
+    for _ in range(3):
+        st_np, d_np = control_decide(cfg, st_np, impl="numpy", **kw)
+        st_j, d_j = control_decide(cfg, st_j, impl="jit", donate=False,
+                                   **kw)
+    for f in ("target_replicas", "scale_mask", "target_caps",
+              "resize_mask", "shed", "straggler"):
+        np.testing.assert_array_equal(np.asarray(getattr(d_np, f)),
+                                      np.asarray(getattr(d_j, f)), f)
+
+
+def test_qos_operands_do_not_retrace():
+    cfg = ControlConfig(confirm_ticks=1, block_q=16,
+                        cooldown_ticks=13)          # fresh cache key
+
+    def run(q, hi, lo, prs):
+        control_decide(cfg, control_init(cfg, q),
+                       lam=np.full(q, 100.0), mu=np.full(q, 50.0),
+                       ready=np.ones(q, bool), replicas=np.ones(q),
+                       caps=np.full(q, 64), occ_hi=hi, occ_lo=lo,
+                       pressure=prs, impl="jit", donate=True)
+
+    base = control_decide_trace_count()
+    run(2, None, None, None)
+    warm = control_decide_trace_count()
+    assert warm > base
+    # class churn: lane counts and band/pressure values vary freely
+    for q in (2, 3, 5, 16):
+        run(q, np.full(q, 0.6, np.float32), np.full(q, 0.3, np.float32),
+            np.linspace(0, 1, q))
+        run(q, np.full(q, np.nan, np.float32), None, None)
+    assert control_decide_trace_count() == warm
+
+
+# -- engine + control loop end-to-end ---------------------------------------
+
+def test_engine_actuator_senses_bands_and_pressure():
+    eng = _WorkEngine(ServeConfig(batch_size=2, queue_capacity=8,
+                                  bulkheads=(0, 0)),
+                      arena=CounterArena(4))
+    try:
+        act = eng._actuator
+        hi, lo = act.admission_bands()
+        assert np.isnan(hi[0]) and hi[1] == pytest.approx(0.6)
+        assert np.isnan(lo[0]) and lo[1] == pytest.approx(0.3)
+        for i in range(4):                       # blocking lane half full
+            eng.lanes[BLOCKING].push(_req(i), timeout=1)
+        prs = act.pressure()
+        assert prs[0] == 0.0                     # non-patient feels none
+        assert prs[1] == pytest.approx(0.5)      # patient feels blocking
+    finally:
+        eng.stop()
+
+
+def test_control_loop_sheds_patient_class_under_blocking_pressure():
+    """End-to-end: blocking lane runs hot -> the loop's fused decision
+    (sensing admission_bands + pressure) shuts the patient gate; the
+    blocking gate stays open."""
+    eng = _WorkEngine(ServeConfig(batch_size=2, queue_capacity=8,
+                                  bulkheads=(0, 0)),
+                      arena=CounterArena(4), control=True)
+    try:
+        for i in range(8):                       # blocking lane FULL
+            eng.lanes[BLOCKING].push(_req(i), timeout=1)
+        for q in eng.lanes.values():             # make estimates ready
+            q.head.tc, q.tail.tc = 100.0, 100.0
+        for _ in range(64):
+            eng.fleet.sample()
+        eng.fleet.flush()
+        for _ in range(eng.control.cfg.confirm_ticks + 3):
+            eng.control.tick()
+        assert eng.gates[NONBLOCKING].shedding
+        assert not eng.gates[BLOCKING].shedding
+        assert not eng.submit(_req(99, qos=NONBLOCKING))
+        recs = eng.control.log.by_policy("qos")
+        assert any(r.action == "shed" and r.qos == NONBLOCKING
+                   for r in recs)
+    finally:
+        eng.stop()

@@ -413,3 +413,119 @@ def test_ft_manager_elastic_plan_from_supervised_pipeline():
     assert plan.n_chips < 8 * 4
     sup.stop()
     assert sup.heartbeats._last == {}  # stop() forgets every host
+
+
+# -- engine bulkhead supervision (PR 7) ------------------------------------
+
+from repro.control import AdmissionPolicy, ControlConfig as _CC
+from repro.control import control_decide as _decide, control_init as _init
+from repro.serve import BLOCKING, NONBLOCKING, Engine, Request, ServeConfig
+
+
+class _SleepEngine(Engine):
+    """Model-free engine whose serve round just burns a little time."""
+
+    def _serve_batch(self, batch):
+        time.sleep(2e-3)
+        for r in batch:
+            r.out = np.zeros(1, np.int32)
+            r.done.set()
+            self.served += 1
+
+
+def _breq(i):
+    return Request(rid=i, tokens=np.arange(4), max_new=1, qos=BLOCKING)
+
+
+def _wait(pred, timeout=15.0):
+    deadline = time.monotonic() + timeout
+    while not pred() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    return pred()
+
+
+def test_supervisor_respawns_borrowed_replica_into_own_bulkhead():
+    """A seeded plan kills the patient-lane worker while it is borrowed
+    into the blocking lane mid-spike: the supervisor must respawn it
+    into the NONBLOCKING partition (borrowed capacity never migrates),
+    the crash record must carry the class, and the spike still
+    completes."""
+    plan = FaultPlan([FaultEvent(0.05, "crash", NONBLOCKING)])
+    eng = _SleepEngine(None, None,
+                       ServeConfig(batch_size=2, queue_capacity=64,
+                                   bulkheads=(1, 1)),
+                       arena=CounterArena(4), fault_plan=plan)
+    sup = ReplicaSupervisor(engines=[eng], poll_s=0.01)
+    eng.start()
+    sup.start()
+    plan.arm()
+    try:
+        reqs = [_breq(i) for i in range(60)]     # the blocking spike
+        for r in reqs:
+            assert eng.submit(r, timeout=10)
+        assert _wait(lambda: len(plan.fired()) == 1)
+        assert _wait(lambda: sup.respawns >= 1)
+        # the replacement landed in the patient partition
+        sizes = eng.bulkhead_sizes()
+        assert sizes == {BLOCKING: 1, NONBLOCKING: 1}
+        live_nb = [w for w in eng.workers() if w.qos == NONBLOCKING
+                   and w.is_alive()]
+        assert live_nb and f":{NONBLOCKING}#" in live_nb[0].host
+        for r in reqs:
+            assert r.done.wait(timeout=30)
+        crash = [r for r in sup.log.records() if r.action == "crash"]
+        assert crash and crash[0].qos == NONBLOCKING
+        assert crash[0].error == "E_ENGINE_DEAD"
+        resp = [r for r in sup.log.records() if r.action == "respawn"]
+        assert resp and resp[0].qos == NONBLOCKING
+    finally:
+        sup.stop()
+        eng.stop()
+
+
+def test_engine_bulkhead_breaker_degrades_class_and_recovers():
+    """A crash-looping bulkhead trips its (engine, class) breaker: the
+    class is marked degraded, the actuator's ``faulty`` lane mask makes
+    the fused decision shut that lane's gate, and a clean healthy
+    window recovers the partition (replicas refilled)."""
+    plan = FaultPlan([FaultEvent(0.0, "crash", NONBLOCKING),
+                      FaultEvent(0.0, "crash", NONBLOCKING)])
+    eng = _SleepEngine(None, None,
+                       ServeConfig(batch_size=2, queue_capacity=16,
+                                   bulkheads=(1, 1)),
+                       arena=CounterArena(4), fault_plan=plan)
+    sup = ReplicaSupervisor(engines=[eng], poll_s=0.01,
+                            breaker_threshold=2, healthy_after_s=0.3)
+    eng.start()
+    sup.start()
+    plan.arm()
+    try:
+        assert _wait(lambda: NONBLOCKING in eng._degraded)
+        assert sup.breaker_trips == 1
+        assert eng.bulkhead_sizes()[NONBLOCKING] == 0
+        assert eng.bulkhead_sizes()[BLOCKING] == 1
+        # the faulty operand's decision semantics on the lane mask
+        mask = eng._actuator.faulty()
+        assert mask.tolist() == [False, True]
+        cfg = _CC(confirm_ticks=1, cooldown_ticks=0, min_ready=1)
+        st = _init(cfg, 2)
+        dec = None
+        for _ in range(2):
+            st, dec = _decide(
+                cfg, st, lam=np.full(2, 100.0), mu=np.full(2, 100.0),
+                ready=np.ones(2, bool), replicas=np.ones(2),
+                caps=np.full(2, 64), faulty=mask, impl="numpy")
+        assert dec.shed.tolist() == [False, True]
+        assert not dec.scale_mask[1]             # legs held, not re-tuned
+        assert any(r.error == "E_CRASH_LOOP" and r.qos == NONBLOCKING
+                   for r in sup.log.records())
+        # healthy window: breaker resets, partition refills
+        assert _wait(lambda: NONBLOCKING not in eng._degraded, timeout=20)
+        assert _wait(
+            lambda: eng.bulkhead_sizes()[NONBLOCKING] == 1, timeout=20)
+        assert eng._actuator.faulty().tolist() == [False, False]
+        assert any(r.action == "recovered" and r.qos == NONBLOCKING
+                   for r in sup.log.records())
+    finally:
+        sup.stop()
+        eng.stop()

@@ -18,20 +18,31 @@ three ways:
 * **oracle** — the hand-tuned post-change configuration from t=0 (the
   upper bound a clairvoyant operator reaches).
 
-Scenarios: a mid-run step change in per-item kernel cost (the
-acceptance gate: closed >= 2x static sustained throughput and >= 80% of
-oracle), a slow drift in service cost, bursty arrivals (a robustness
-gate: hysteresis must hold the configuration still and lose nothing),
-and a service-rate collapse under a replica ceiling (admission gate
-sheds to keep occupancy bounded).  ``control_parity`` replays the
-closed-loop run's recorded sample stream through the sequential scan
-oracle — actuation must not perturb the estimates (<= 1e-4).
-``control_tick_overhead`` measures a full sense->decide tick against
-the S=8192 monitor tick; amortized per monitor tick (one decision per
-fused dispatch) it must stay <= 10%.
+Scenarios live in ``repro.workloads`` (the scenario foundry): every
+simulated tandem here is a ``workloads.SimTandem`` driven by a
+composable rate envelope, behind the same ``SimActuator`` protocol
+``streams.Pipeline``'s adapter implements.  The named gates are: a
+mid-run step change in per-item kernel cost (the acceptance gate:
+closed >= 2x static sustained throughput and >= 80% of oracle), a slow
+drift in service cost, bursty arrivals (a robustness gate: hysteresis
+must hold the configuration still and lose nothing), a service-rate
+collapse under a replica ceiling (admission gate sheds to keep
+occupancy bounded), and the multi-tenant rebalance.  ``matrix`` sweeps
+the full scenario x policy x fault-storm grid (``workloads.run_matrix``)
+into one summary table; ``chaos_recovery`` and ``qos_spike`` run fault
+storms against REAL pipeline/engine stacks; ``qos_soak`` is the
+sustained locust-style soak (minutes in full mode, seconds in quick)
+with a mid-soak fault storm, gating on availability and bounded
+blocking-class p99.  ``control_parity`` replays the closed-loop run's
+recorded sample stream through the sequential scan oracle — actuation
+must not perturb the estimates (<= 1e-4).  ``control_tick_overhead``
+measures a full sense->decide tick against the S=8192 monitor tick;
+amortized per monitor tick it must stay <= 10%.
 
 Everything lands in ``BENCH_control.json``; ``REPRO_BENCH_QUICK=1``
-shortens the scenario windows (gates still checked).
+shortens the scenario windows (gates still checked);
+``REPRO_BENCH_SEED`` (the ``run.py --seed`` flag) reseeds every
+scenario INCLUDING the fault schedules, end to end.
 """
 
 from __future__ import annotations
@@ -51,6 +62,9 @@ from repro.control import (AdmissionPolicy, BufferPolicy, ControlConfig,
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig, run_monitor_fleet
 from repro.streams import CounterArena, FleetMonitorService, InstrumentedQueue
+from repro.workloads import (Boxcar, Constant, Diurnal, FlashCrowd, Ramp,
+                             SimActuator, SimTandem, Square, Step,
+                             run_matrix)
 
 BENCH_CONTROL_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "BENCH_control.json"
@@ -61,6 +75,13 @@ MCFG = MonitorConfig(window=16, min_q_samples=16)
 
 def _quick() -> bool:
     return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _seed() -> int:
+    """The run-level seed (``run.py --seed`` exports it): every
+    scenario derives its rng streams AND fault schedules from this, so
+    one CLI flag reproduces a whole recorded run."""
+    return int(os.environ.get("REPRO_BENCH_SEED", "0") or "0")
 
 
 def _update_report(section: str, payload) -> None:
@@ -75,91 +96,10 @@ def _update_report(section: str, payload) -> None:
     BENCH_CONTROL_JSON.write_text(json.dumps(report, indent=2))
 
 
-class _SimTandem:
-    """Per-period tandem: poisson arrivals into a finite queue drained
-    by ``replicas`` copies of a stage costing ``1/mu_r`` periods/item.
-    Mirrors what the real instrumentation sees: accepted/served counts
-    as tc, blocked flags at the ends, occupancy for admission."""
-
-    def __init__(self, seed, lam, mu_r, replicas, capacity):
-        self.rng = np.random.default_rng(seed)
-        self.lam = lam
-        self.mu_r = mu_r
-        self.replicas = replicas
-        self.capacity = capacity
-        self.backlog = 0
-        self.shedding = False
-        self.served_total = 0
-        self.offered_total = 0
-        self.shed_total = 0
-
-    def step(self):
-        """One period; returns (tail_tc, tail_blk, head_tc, head_blk)."""
-        arrivals = int(self.rng.poisson(self.lam))
-        self.offered_total += arrivals
-        if self.shedding:
-            self.shed_total += arrivals
-            arrivals = 0
-        space = self.capacity - self.backlog
-        acc = min(arrivals, space)
-        tail_blk = arrivals > acc          # producer hit a full queue
-        self.backlog += acc
-        # high-water occupancy (what an instantaneous probe mid-period
-        # would see) — the admission gate's input
-        self.occ_high = self.backlog / max(self.capacity, 1)
-        can_serve = int(self.rng.poisson(self.replicas * self.mu_r))
-        srv = min(self.backlog, can_serve)
-        head_blk = can_serve > srv         # consumer starved this period
-        self.backlog -= srv
-        self.served_total += srv
-        return float(acc), tail_blk, float(srv), head_blk
-
-    @property
-    def occupancy(self) -> float:
-        return self.backlog / max(self.capacity, 1)
-
-
-class _SimActuator:
-    """``ControlLoop`` adapter over the simulated stage — same protocol
-    ``streams.Pipeline``'s adapter implements, same rejection contract
-    (a shrink below the backlog is refused, items are never dropped)."""
-
-    def __init__(self, sim: _SimTandem):
-        self.sim = sim
-        self.actions = []
-
-    def replicas(self):
-        return np.array([self.sim.replicas], np.int64)
-
-    def capacities(self):
-        return np.array([self.sim.capacity], np.int64)
-
-    def occupancy(self):
-        return np.array([getattr(self.sim, "occ_high", 0.0)])
-
-    def scale(self, i, n):
-        self.actions.append(("scale", n))
-        self.sim.replicas = int(n)
-        return "applied"
-
-    def resize(self, i, cap):
-        if cap < self.sim.backlog:
-            self.actions.append(("resize-rejected", cap))
-            return "rejected"
-        self.actions.append(("resize", cap))
-        self.sim.capacity = int(cap)
-        return "applied"
-
-    def admit(self, i, shed):
-        self.actions.append(("shed" if shed else "admit", int(shed)))
-        self.sim.shedding = bool(shed)
-        return "applied"
-
-
-def _run_sim(sim, T, policies=None, mutate=None, record=None,
-             decide_every=16):
-    """Drive the sim through a real monitor service (+ optional control
-    loop) for T periods; returns per-period served counts."""
+def _run_sim(sim, T, policies=None, record=None, decide_every=16):
+    """Drive a ``workloads.SimTandem`` through a real monitor service
+    (+ optional control loop) for T periods; returns per-period served
+    counts.  Load/service shaping rides the sim's envelopes."""
     arena = CounterArena(4)
     q = InstrumentedQueue(8, arena=arena)
     svc = FleetMonitorService([q], MCFG, period_s=PERIOD_S,
@@ -167,13 +107,11 @@ def _run_sim(sim, T, policies=None, mutate=None, record=None,
                               scale_to_period=False, ends="both")
     loop = None
     if policies is not None:
-        loop = ControlLoop(svc, policies, _SimActuator(sim))
+        loop = ControlLoop(svc, policies, SimActuator(sim))
         loop.warmup()
     served = np.zeros(T)
     for t in range(T):
-        if mutate is not None:
-            mutate(sim, t)
-        acc, tail_blk, srv, head_blk = sim.step()
+        acc, tail_blk, srv, head_blk = sim.step(float(t))
         q.tail.tc = acc
         q.tail.blocked = tail_blk
         q.head.tc = srv
@@ -205,10 +143,7 @@ def closed_loop_step_change():
     settle = change + (300 if _quick() else 500)
     lam, mu0, mu1, r0 = 100.0, 60.0, 15.0, 2
     r_oracle = int(np.ceil(1.2 * lam / mu1))        # hand-tuned: 8
-
-    def mutate(sim, t):
-        if t == change:
-            sim.mu_r = mu1
+    mu_env = Step(mu0, mu1, change)                 # cost quadruples
 
     trace = {}
 
@@ -217,13 +152,12 @@ def closed_loop_step_change():
 
     runs = {}
     runs["static"], _, _ = _run_sim(
-        _SimTandem(0, lam, mu0, r0, 256), T, mutate=mutate)
+        SimTandem(_seed(), lam, mu_env, r0, 256), T)
     runs["closed"], svc, loop = _run_sim(
-        _SimTandem(0, lam, mu0, r0, 256), T,
-        policies=_replica_policies(), mutate=mutate, record=record)
+        SimTandem(_seed(), lam, mu_env, r0, 256), T,
+        policies=_replica_policies(), record=record)
     runs["oracle"], _, _ = _run_sim(
-        _SimTandem(0, lam, mu1 * 0 + mu0, r_oracle, 256), T,
-        mutate=mutate)
+        SimTandem(_seed(), lam, mu_env, r_oracle, 256), T)
 
     sus = {k: float(v[settle:].mean()) for k, v in runs.items()}
     vs_static = sus["closed"] / max(sus["static"], 1e-9)
@@ -269,19 +203,16 @@ def closed_loop_slow_drift():
     t0, t1 = T // 6, 5 * T // 6
     lam, mu0, mu1, r0 = 100.0, 60.0, 18.0, 2
     r_oracle = int(np.ceil(1.2 * lam / mu1))
-
-    def mutate(sim, t):
-        if t0 <= t < t1:
-            sim.mu_r = mu0 + (mu1 - mu0) * (t - t0) / (t1 - t0)
+    mu_env = Ramp(mu0, mu1, t0, t1)
 
     runs = {}
     runs["static"], _, _ = _run_sim(
-        _SimTandem(1, lam, mu0, r0, 256), T, mutate=mutate)
+        SimTandem(_seed() + 1, lam, mu_env, r0, 256), T)
     runs["closed"], _, loop = _run_sim(
-        _SimTandem(1, lam, mu0, r0, 256), T,
-        policies=_replica_policies(), mutate=mutate)
+        SimTandem(_seed() + 1, lam, mu_env, r0, 256), T,
+        policies=_replica_policies())
     runs["oracle"], _, _ = _run_sim(
-        _SimTandem(1, lam, mu0, r_oracle, 256), T, mutate=mutate)
+        SimTandem(_seed() + 1, lam, mu_env, r_oracle, 256), T)
 
     tail = slice(t1, T)
     sus = {k: float(v[tail].mean()) for k, v in runs.items()}
@@ -315,20 +246,17 @@ def closed_loop_bursty_arrivals():
     T = 2400 if _quick() else 4800
     lam_hi, lam_lo, burst = 160.0, 40.0, 100
     mu_r, r0 = 60.0, 2
-
-    def mutate(sim, t):
-        sim.lam = lam_hi if (t // burst) % 2 == 0 else lam_lo
+    lam_env = Square(lam_hi, lam_lo, 2.0 * burst)
 
     runs = {}
     runs["static"], _, _ = _run_sim(
-        _SimTandem(2, lam_hi, mu_r, r0, 64), T, mutate=mutate)
+        SimTandem(_seed() + 2, lam_env, mu_r, r0, 64), T)
     runs["closed"], _, loop = _run_sim(
-        _SimTandem(2, lam_hi, mu_r, r0, 64), T,
+        SimTandem(_seed() + 2, lam_env, mu_r, r0, 64), T,
         policies=PolicySet(
             replica=ReplicaPolicy(ParallelismController(max_replicas=16)),
             buffer=BufferPolicy(BufferAutotuner(current=64)),
-            confirm_ticks=2, cooldown_ticks=4, block_q=8),
-        mutate=mutate)
+            confirm_ticks=2, cooldown_ticks=4, block_q=8))
     thr = {k: float(v.mean()) for k, v in runs.items()}
     ratio = thr["closed"] / max(thr["static"], 1e-9)
     n_actions = loop.log.total
@@ -357,21 +285,17 @@ def closed_loop_admission_collapse():
     T = 2400 if _quick() else 4800
     change = T // 3
     lam, mu0, mu1, r0, cap = 100.0, 60.0, 10.0, 2, 64
-
-    def mutate(sim, t):
-        if t == change:
-            sim.mu_r = mu1
+    mu_env = Step(mu0, mu1, change)
 
     occ_static = np.zeros(T)
     occ_closed = np.zeros(T)
-    sim_s = _SimTandem(3, lam, mu0, r0, cap)
-    sim_c = _SimTandem(3, lam, mu0, r0, cap)
+    sim_s = SimTandem(_seed() + 3, lam, mu_env, r0, cap)
+    sim_c = SimTandem(_seed() + 3, lam, mu_env, r0, cap)
 
     def run(sim, policies, occ_out):
         def record(t, row):
             occ_out[t] = sim.occupancy
-        return _run_sim(sim, T, policies=policies, mutate=mutate,
-                        record=record)
+        return _run_sim(sim, T, policies=policies, record=record)
 
     run(sim_s, None, occ_static)
     _, _, loop = run(sim_c, PolicySet(
@@ -425,23 +349,22 @@ def closed_loop_multi_tenant():
     decide_every = 16
     lam_hi, lam_lo, mu_r, r0, cap = 160.0, 40.0, 30.0, 2, 256
     attach_c_at, churn_at = T // 3, T // 2
+    # anti-correlated pair: ONE envelope, half-period phase offset
+    lam_a = Square(lam_hi, lam_lo, 2.0 * phase)
+    lam_b = lam_a.shift(phase)
 
-    def lam_a(t):
-        return lam_hi if (t // phase) % 2 == 0 else lam_lo
-
-    def lam_b(t):
-        return lam_lo if (t // phase) % 2 == 0 else lam_hi
+    def mk_sims():
+        return [SimTandem(_seed() + 10, lam_a, mu_r, r0, cap),
+                SimTandem(_seed() + 11, lam_b, mu_r, r0, cap),
+                SimTandem(_seed() + 12, 50.0, 60.0, 1, 64)]
 
     # -- static baseline: the seed configuration, never re-tuned -------
-    sims_s = [_SimTandem(10, lam_hi, mu_r, r0, cap),
-              _SimTandem(11, lam_lo, mu_r, r0, cap),
-              _SimTandem(12, 50.0, 60.0, 1, 64)]
+    sims_s = mk_sims()
     for t in range(T):
-        sims_s[0].lam, sims_s[1].lam = lam_a(t), lam_b(t)
         for sim in sims_s[:2]:
-            sim.step()
+            sim.step(float(t))
         if t >= attach_c_at:
-            sims_s[2].step()
+            sims_s[2].step(float(t))
     static_total = sum(s.served_total for s in sims_s[:2])
 
     # -- closed loop: one group over all tenants -----------------------
@@ -458,11 +381,9 @@ def closed_loop_multi_tenant():
                   probe_period_ticks=6, probe_window_ticks=2),
         arena=arena, monitor_cfg=MCFG, period_s=PERIOD_S,
         chunk_t=decide_every, scale_to_period=False, impl="jit")
-    sims = [_SimTandem(10, lam_hi, mu_r, r0, cap),
-            _SimTandem(11, lam_lo, mu_r, r0, cap),
-            _SimTandem(12, 50.0, 60.0, 1, 64)]
+    sims = mk_sims()
     queues = [InstrumentedQueue(8, arena=arena) for _ in range(3)]
-    acts = [_SimActuator(sim) for sim in sims]
+    acts = [SimActuator(sim) for sim in sims]
     rep_only = PolicySet(replica=ReplicaPolicy(ParallelismController(
         max_replicas=16)), probe_period_ticks=6, probe_window_ticks=2)
     handles = [group.attach(([queues[i]], acts[i]), policies=rep_only,
@@ -473,7 +394,6 @@ def closed_loop_multi_tenant():
     base_traces = control_decide_trace_count()
     reps_trace = {"a": [], "b": []}
     for t in range(T):
-        sims[0].lam, sims[1].lam = lam_a(t), lam_b(t)
         if t == attach_c_at:
             h_eng = group.attach(([queues[2]], acts[2]),
                                  policies=eng_policies, name="engine")
@@ -483,7 +403,7 @@ def closed_loop_multi_tenant():
                                  policies=eng_policies, name="engine")
         live = sims[:2] + ([sims[2]] if h_eng is not None else [])
         for sim, q in zip(live, queues):
-            acc, tail_blk, srv, head_blk = sim.step()
+            acc, tail_blk, srv, head_blk = sim.step(float(t))
             q.tail.tc, q.tail.blocked = acc, tail_blk
             q.head.tc, q.head.blocked = srv, head_blk
         group.service.sample()
@@ -720,7 +640,7 @@ def chaos_recovery():
     base_med = float(np.median(base_counts)) if base_counts.size else 1.0
 
     # chaos run: 3 replica kills + 1 monitor death
-    plan = FaultPlan.chaos(seed=0, targets=["work"], n_crashes=3,
+    plan = FaultPlan.chaos(seed=_seed(), targets=["work"], n_crashes=3,
                            window_s=kill_window,
                            monitor_death_at=mon_death_at)
     pipe = build(plan)
@@ -838,6 +758,10 @@ def qos_spike():
     quick = _quick()
     pre_s, burst_s, post_s = (0.6, 0.8, 0.6) if quick else (1.0, 1.5, 1.0)
     nb_rate, b_rate, burst_rate = 5000.0, 200.0, 3000.0
+    # blocking-class offered load as a foundry envelope: base rate with
+    # the burst boxcar superposed over the burst window
+    b_env = Constant(b_rate) + Boxcar(burst_rate - b_rate, pre_s,
+                                      pre_s + burst_s)
     work_s = 4e-3                  # per generation round (batch of 8)
     deadline_s = 0.25              # blocking availability budget
     tick_s = 5e-3
@@ -894,7 +818,7 @@ def qos_spike():
                 nb_marks[phase] = nb_served()
                 phase = p
             dt, last = now - last, now
-            owed_b += (burst_rate if p == "burst" else b_rate) * dt
+            owed_b += b_env.rate(now) * dt
             owed_nb += nb_rate * dt
             while owed_b >= 1.0:
                 owed_b -= 1.0
@@ -1012,7 +936,209 @@ def qos_spike():
         f"{churn_retraces} churn retraces, ok={ok}")
 
 
+def matrix():
+    """The scenario x policy x fault-storm grid (``workloads.run_matrix``):
+    every cell is a real ``ControlGroup`` over the scenario's tenant
+    sims with the storm's ``FaultPlan`` interpreted in simulated time,
+    the static column suffering the identical storm.  Gates: >= 12
+    cells; every controlled cell keeps availability >= 0.9; control
+    never hurts a fault-free cell (vs_static >= 0.95); and under the
+    full storm control beats static by >= 1.2x in every scenario."""
+    seed = _seed()
+    m = run_matrix(seed=seed, quick=_quick())
+    cells = m["cells"]
+    ctl = [c for c in cells if c["policy"] != "static"]
+    storm_ctl = [c for c in ctl if c["fault"] != "none"]
+    min_avail = min(c["availability"] for c in ctl)
+    min_noharm = min(c["vs_static"] for c in ctl if c["fault"] == "none")
+    min_storm = min(c["vs_static"] for c in storm_ctl)
+    ok = (m["n_cells"] >= 12 and min_avail >= 0.9
+          and min_noharm >= 0.95 and min_storm >= 1.2)
+    m["target"] = {"n_cells": 12, "min_availability": 0.9,
+                   "no_harm_vs_static": 0.95,
+                   "storm_vs_static": 1.2, "met": ok}
+    _update_report("matrix", m)
+    rows = [f"matrix/cells,{m['n_cells']},seed={seed}",
+            f"matrix/min_availability,{min_avail:.3f},controlled_cells",
+            f"matrix/min_vs_static_faultfree,{min_noharm:.2f},"
+            f"target>=0.95",
+            f"matrix/min_vs_static_storm,{min_storm:.2f},target>=1.2"]
+    return rows, (f"matrix: {m['n_cells']} cells "
+                  f"({'x'.join(str(len(v)) for v in m['axes'].values())}"
+                  f" axes), controlled availability >= "
+                  f"{min_avail:.3f}, fault-free no-harm {min_noharm:.2f}x"
+                  f", storm improvement >= {min_storm:.2f}x, ok={ok}")
+
+
+def qos_soak():
+    """The ROADMAP's sustained locust-style soak: a compressed diurnal
+    day of multi-class load against a REAL serving engine (per-class
+    lanes, bulkheads, borrowing, closed-loop control), with a seeded
+    mid-soak fault storm — nonblocking-lane crash storm + a straggler
+    stall + a monitor-thread death — and a blocking-class flash crowd
+    riding the storm window (the worst case: the patient lane that
+    blocking would borrow from is the lane being killed).
+
+    Minutes-long in full mode, seconds in quick mode (same shape).
+    Gates (the acceptance criteria): blocking-class availability
+    (completed within the deadline budget) >= 90% over the WHOLE soak,
+    storm-phase blocking p99 <= 2.5x pre-storm p99, every injected
+    crash respawned, and the post-storm lane recovered.  The engine's
+    ``ControlLog`` is drained to JSONL on a cadence mid-soak (the
+    flight recorder must not be bounded by its ring during a soak)."""
+    import tempfile
+
+    from repro.ft import FaultPlan, ReplicaSupervisor
+    from repro.serve import (BLOCKING, NONBLOCKING, Engine, Request,
+                             ServeConfig)
+    quick = _quick()
+    pre_s, storm_s, post_s = ((1.2, 1.6, 1.2) if quick
+                              else (25.0, 60.0, 35.0))
+    T = pre_s + storm_s + post_s
+    nb_env = Diurnal(base=4000.0, amplitude=1500.0, period=T)
+    b_env = (Diurnal(base=200.0, amplitude=60.0, period=T / 2)
+             + FlashCrowd(peak=600.0, at=pre_s + 0.5 * storm_s,
+                          rise=0.2 * storm_s, fall=0.15 * storm_s))
+    work_s, deadline_s, tick_s = 4e-3, 0.25, 5e-3
+    toks = np.arange(4)
+    plan = FaultPlan.chaos(
+        seed=_seed(), targets=[NONBLOCKING], n_crashes=2,
+        window_s=(pre_s + 0.1 * storm_s, pre_s + 0.6 * storm_s),
+        n_stalls=1, stall_s=0.15,
+        monitor_death_at=pre_s + 0.7 * storm_s)
+
+    class _Work(Engine):
+        """Model-free engine: a round burns work_s and completes."""
+
+        def _serve_batch(self, batch):
+            time.sleep(work_s)
+            for r in batch:
+                r.out = np.zeros(1, np.int32)
+                r.done.set()
+                self.served += 1
+
+    scfg = ServeConfig(batch_size=8, queue_capacity=64, bulkheads=(1, 2))
+    eng = _Work(None, None, scfg, arena=CounterArena(8), control=True,
+                fault_plan=plan)
+    eng.control.period_s = 0.01        # react within the storm
+    sup = ReplicaSupervisor(engines=[eng], poll_s=0.01)
+    eng.start()
+    sup.start()
+    drain_path = pathlib.Path(
+        tempfile.mkdtemp(prefix="qos_soak_")) / "control_log.jsonl"
+    drains = 0
+    blocking = []                      # (submit_rel_s, Request, ok)
+    rid = 0
+    owed_b = owed_nb = 0.0
+    last = last_drain = 0.0
+    t0 = time.monotonic()
+    plan.arm(t0)
+    while True:
+        now = time.monotonic() - t0
+        if now >= T:
+            break
+        dt, last = now - last, now
+        owed_b += b_env.rate(now) * dt
+        owed_nb += nb_env.rate(now) * dt
+        while owed_b >= 1.0:
+            owed_b -= 1.0
+            r = Request(rid=rid, tokens=toks, max_new=1, qos=BLOCKING,
+                        deadline_s=deadline_s)
+            rid += 1
+            blocking.append((now, r, eng.submit(r, timeout=0.02)))
+        while owed_nb >= 1.0:
+            owed_nb -= 1.0
+            eng.submit(Request(rid=rid, tokens=toks, max_new=1,
+                               qos=NONBLOCKING), timeout=0.0)
+            rid += 1
+        if now - last_drain >= 0.5:    # mid-soak flight-recorder drain
+            eng.control.log.drain_jsonl(drain_path)
+            drains += 1
+            last_drain = now
+        time.sleep(tick_s)
+    time.sleep(2 * deadline_s)         # let in-flight tails land
+    sup.stop()
+    eng.stop()
+    eng.control.log.drain_jsonl(drain_path)
+    drained_lines = len(drain_path.read_text().splitlines())
+
+    lat = {"pre": [], "storm": [], "post": []}
+    ok_within, offered = 0, 0
+    for ts, r, sub_ok in blocking:
+        p = ("pre" if ts < pre_s
+             else "storm" if ts < pre_s + storm_s else "post")
+        offered += 1
+        done = sub_ok and r.done.is_set() and r.out is not None
+        if done:
+            d = r.t_done - r.t_submit
+            lat[p].append(d)
+            if d <= deadline_s:
+                ok_within += 1
+    p99 = {p: (float(np.percentile(v, 99)) if v else 0.0)
+           for p, v in lat.items()}
+    availability = ok_within / max(offered, 1)
+    p99_ratio = p99["storm"] / max(p99["pre"], 1e-9)
+    post_ratio = p99["post"] / max(p99["pre"], 1e-9)
+
+    fired = plan.fired()
+    crash_ts = [t - t0 for t, e in fired if e.kind == "crash"]
+    # recovery: rolling windows after the LAST crash until blocking
+    # availability re-reaches 90% within a window
+    win = 0.4 if quick else 2.0
+    recovery_s = -1.0
+    if crash_ts:
+        last_c = max(crash_ts)
+        k = 0
+        while last_c + (k + 1) * win <= T + 2 * deadline_s:
+            lo, hi = last_c + k * win, last_c + (k + 1) * win
+            sub = [(r, s) for ts, r, s in blocking if lo <= ts < hi]
+            if sub:
+                good = sum(1 for r, s in sub
+                           if s and r.done.is_set() and r.out is not None
+                           and (r.t_done - r.t_submit) <= deadline_s)
+                if good / len(sub) >= 0.9:
+                    recovery_s = k * win
+                    break
+            k += 1
+    nb_state = eng.admission_state()["classes"][NONBLOCKING]
+    ok = (availability >= 0.9 and p99_ratio <= 2.5
+          and sup.respawns >= len(crash_ts) and recovery_s >= 0)
+    section = {
+        "phases_s": [pre_s, storm_s, post_s], "seed": _seed(),
+        "faults_fired": [{"kind": e.kind, "target": e.target,
+                          "at_s": e.at_s} for _, e in fired],
+        "blocking_offered": offered,
+        "availability": availability,
+        "p99_ms": {p: v * 1e3 for p, v in p99.items()},
+        "p99_storm_over_pre": p99_ratio,
+        "p99_post_over_pre": post_ratio,
+        "recovery_s": recovery_s,
+        "respawns": sup.respawns,
+        "monitor_restarts": eng.control.health()["monitor_restarts"],
+        "nonblocking": {k: nb_state[k]
+                        for k in ("served", "shed", "deadline_dropped")
+                        if k in nb_state},
+        "log_drains": drains, "log_drained_lines": drained_lines,
+        "target": {"availability": 0.9, "p99_storm_over_pre": 2.5,
+                   "met": ok},
+    }
+    _update_report("qos_soak", section)
+    rows = [f"qos_soak/availability,{availability:.3f},target>=0.9",
+            f"qos_soak/p99_ratio,{p99_ratio:.2f},target<=2.5",
+            f"qos_soak/recovery_s,{recovery_s:.1f},"
+            f"respawns={sup.respawns}",
+            f"qos_soak/log_lines,{drained_lines},drains={drains}"]
+    return rows, (
+        f"qos soak ({T:.0f}s): availability "
+        f"{availability * 100:.1f}% (target >=90%), storm p99 "
+        f"{p99['storm'] * 1e3:.0f} ms = {p99_ratio:.2f}x pre "
+        f"(target <=2.5x), post {post_ratio:.2f}x, "
+        f"{len(crash_ts)} crashes -> {sup.respawns} respawns, "
+        f"recovered in {recovery_s:.1f}s, "
+        f"{drained_lines} audit lines drained, ok={ok}")
+
+
 ALL = [closed_loop_step_change, closed_loop_slow_drift,
        closed_loop_bursty_arrivals, closed_loop_admission_collapse,
        closed_loop_multi_tenant, control_parity, control_tick_overhead,
-       chaos_recovery, qos_spike]
+       matrix, chaos_recovery, qos_spike, qos_soak]

@@ -11,26 +11,34 @@
 # spike scenario (blocking burst + mid-spike replica kill: blocking
 # p99 <= 3x pre-burst and availability >= 90% on the QoS engine while
 # the shared-pool baseline misses both, nonblocking throughput
-# recovers post-burst, zero decision retraces across class churn).
+# recovers post-burst, zero decision retraces across class churn),
+# plus the scenario-foundry corners: the full scenario x policy x
+# fault matrix (>= 12 cells, controlled availability >= 90%, control
+# never hurts fault-free, >= 1.2x over static under the storm) and the
+# quick-mode qos_soak (sustained multi-class diurnal load on a real
+# engine with a mid-soak crash/stall/monitor-death storm: availability
+# >= 90%, storm blocking p99 <= 2.5x pre-storm).
 #
 #   scripts/smoke.sh
 #
-# Runs the full test suite, then the pipeline monitoring suite
+# Runs the full test suite (soak/slow-marked tests stay deselected by
+# the repo-default pytest addopts), then the pipeline monitoring suite
 # (fleet-vs-per-queue overhead ratio + scan-oracle parity), then the
 # arena-collector suite in quick mode (REPRO_BENCH_QUICK=1 skips the
-# 2*10^5-end ladder rung).  BENCH_pipeline.json / BENCH_collector.json
-# are regenerated at the repo root; run-level JSON reports land next to
-# them as *.run.json.  Fails on any estimate-parity regression vs the
-# sequential scan oracle and on collector/pipeline overhead ratios
-# falling below acceptance.
+# 2*10^5-end ladder rung).  Each suite updates exactly one canonical
+# BENCH_<suite>.json at the repo root (suite sections + the run's
+# verdicts, merge-on-update — no *.run.json duplicates); --seed 0 pins
+# every seeded draw (workload sample paths, chaos fault schedules) so
+# a smoke failure reproduces.  Fails on any estimate-parity regression
+# vs the sequential scan oracle and on collector/pipeline overhead
+# ratios falling below acceptance.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
 
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/run.py --suite pipeline \
-    --json BENCH_pipeline.run.json
+    python benchmarks/run.py --suite pipeline --seed 0
 
 python - <<'EOF'
 import json
@@ -43,8 +51,7 @@ assert ratio >= 3.0 and parity, "pipeline bench below acceptance"
 EOF
 
 REPRO_BENCH_QUICK=1 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/run.py --suite collector \
-    --json BENCH_collector.run.json
+    python benchmarks/run.py --suite collector --seed 0
 
 python - <<'EOF'
 import json
@@ -59,8 +66,7 @@ assert parity["ok"], "arena-path estimate parity regression vs scan oracle"
 EOF
 
 REPRO_BENCH_QUICK=1 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    python benchmarks/run.py --suite control \
-    --json BENCH_control.run.json
+    python benchmarks/run.py --suite control --seed 0
 
 python - <<'EOF'
 import json
@@ -127,5 +133,23 @@ assert qs["decide_retraces_across_class_churn"] == 0, \
     "qos spike: class churn retraced the decision dispatch"
 assert qs["decide_retraces_during_run"] == 0, \
     "qos spike: the serving run retraced the decision dispatch"
+mx = rep["matrix"]
+print(f"smoke: matrix = {mx['n_cells']} cells (target >= 12), controlled "
+      f"availability >= {min(c['availability'] for c in mx['cells'] if c['policy'] != 'static'):.3f} "
+      f"(target >= 0.9), storm improvement >= "
+      f"{min(c['vs_static'] for c in mx['cells'] if c['policy'] != 'static' and c['fault'] != 'none'):.2f}x "
+      f"(target >= 1.2x)")
+assert mx["target"]["met"], "scenario matrix below acceptance"
+assert mx["n_cells"] >= 12, "scenario matrix smaller than 12 cells"
+qk = rep["qos_soak"]
+print(f"smoke: qos soak availability = {qk['availability'] * 100:.1f}% "
+      f"(target >= 90%), storm p99 = {qk['p99_storm_over_pre']:.2f}x "
+      f"pre-storm (target <= 2.5x), {qk['respawns']} respawns, "
+      f"{qk['monitor_restarts']} monitor restarts, recovery "
+      f"{qk['recovery_s']:.1f}s, {qk['log_drained_lines']} audit lines")
+assert qk["target"]["met"], "qos soak below acceptance"
+assert qk["availability"] >= 0.9, "qos soak availability below 90%"
+assert qk["p99_storm_over_pre"] <= 2.5, \
+    "qos soak: storm blocking p99 above 2.5x pre-storm"
 EOF
 echo "smoke: OK"

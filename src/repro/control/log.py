@@ -13,7 +13,9 @@ dispatch regardless of fleet size.
 from __future__ import annotations
 
 import dataclasses
+import json
 import threading
+import time
 from typing import Iterator, Optional
 
 __all__ = ["ControlRecord", "ControlLog"]
@@ -58,6 +60,11 @@ class ControlRecord:
                                # class-less): engine per-class gate
                                # flips (policy 'qos') and supervisor
                                # bulkhead crash/respawn records tag it
+    # wall-clock twin of ``t``: ``t`` (monotonic) orders records within
+    # one process and is what replay alignment uses; ``t_wall`` anchors
+    # a drained trace to records from OTHER processes/hosts (monotonic
+    # clocks share no epoch across processes)
+    t_wall: float = dataclasses.field(default_factory=time.time)
 
 
 class ControlLog:
@@ -67,6 +74,7 @@ class ControlLog:
         self.capacity = max(int(capacity), 1)
         self._buf: list[Optional[ControlRecord]] = [None] * self.capacity
         self._n = 0                     # total appended, ever
+        self._drained = 0               # records drained to JSONL, ever
         self._lock = threading.Lock()
 
     def append(self, rec: ControlRecord) -> None:
@@ -110,3 +118,25 @@ class ControlLog:
             key = f"{r.policy}/{r.outcome}"
             out[key] = out.get(key, 0) + 1
         return out
+
+    def drain_jsonl(self, path) -> int:
+        """Append every record since the last drain to ``path`` as JSON
+        lines; returns how many were written.  Incremental and
+        restart-safe for periodic draining (the soak harness drains on
+        a cadence so a minutes-long run is not limited by the ring).
+        Records that fell off the ring between drains are acknowledged
+        with one ``{"dropped": n}`` line rather than silently lost."""
+        with self._lock:
+            n, cap = self._n, self.capacity
+            start = max(self._drained, n - cap)
+            dropped = start - self._drained
+            recs = [self._buf[i % cap] for i in range(start, n)]
+            self._drained = n
+        # serialize outside the lock: records are frozen, and appends
+        # racing us will be picked up by the next drain
+        with open(path, "a") as f:
+            if dropped:
+                f.write(json.dumps({"dropped": dropped}) + "\n")
+            for r in recs:
+                f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+        return len(recs)

@@ -105,25 +105,57 @@ class FaultPlan:
               n_crashes: int = 3,
               window_s: tuple[float, float] = (0.5, 2.0),
               monitor_death_at: Optional[float] = None,
-              n_stalls: int = 0, stall_s: float = 0.2) -> "FaultPlan":
-        """The chaos-scenario generator: ``n_crashes`` replica kills at
-        seeded-uniform times over ``window_s`` targeting seeded-choice
-        stages, plus an optional monitor-thread death."""
+              n_stalls: int = 0, stall_s: float = 0.2,
+              n_skews: int = 0, skew_s: float = 0.0,
+              skew_factor: float = 1.0,
+              monitor_outage_s: float = 0.0) -> "FaultPlan":
+        """The chaos-scenario generator: ``n_crashes`` replica kills and
+        ``n_stalls`` stragglers at seeded-uniform times over ``window_s``
+        targeting seeded-choice stages, ``n_skews`` clock-skew windows
+        (``skew_s`` long, multiplying the realized sampling period by
+        ``skew_factor``), plus an optional monitor-thread death
+        (``monitor_outage_s`` rides the event's ``duration_s`` — the
+        scenario foundry's simulated-time driver reads it as the sensing
+        outage length; the real monitor hook ignores it, a dead thread
+        stays dead until a watchdog acts).
+
+        ``targets`` may be empty only when nothing targets a stage
+        (``n_crashes == n_stalls == 0``) — an all-window storm (skew
+        only) or an empty plan is a legitimate matrix corner.  Draw
+        order is append-only (crashes, stalls, monitor, skews), so a
+        given ``(seed, args)`` prefix reproduces the same schedule when
+        new storm kinds are added after it."""
         rng = np.random.default_rng(seed)
+        targets = list(targets)
+        if (n_crashes or n_stalls) and not targets:
+            raise ValueError("chaos() with crashes/stalls needs targets")
         events = [FaultEvent(at_s=float(rng.uniform(*window_s)),
                              kind="crash",
-                             target=str(rng.choice(list(targets))))
+                             target=str(rng.choice(targets)))
                   for _ in range(n_crashes)]
         events += [FaultEvent(at_s=float(rng.uniform(*window_s)),
                               kind="stall",
-                              target=str(rng.choice(list(targets))),
+                              target=str(rng.choice(targets)),
                               duration_s=stall_s)
                    for _ in range(n_stalls)]
         if monitor_death_at is not None:
             events.append(FaultEvent(at_s=float(monitor_death_at),
                                      kind="monitor_death",
-                                     target="monitor"))
+                                     target="monitor",
+                                     duration_s=float(monitor_outage_s)))
+        events += [FaultEvent(at_s=float(rng.uniform(*window_s)),
+                              kind="clock_skew", target="monitor",
+                              duration_s=float(skew_s),
+                              factor=float(skew_factor))
+                   for _ in range(n_skews)]
         return cls(events)
+
+    def events(self) -> tuple[FaultEvent, ...]:
+        """The pending schedule, chronological — the scenario foundry's
+        deterministic simulated-time driver reads (never consumes) it;
+        the wall-clock hook API above consumes events instead."""
+        with self._lock:
+            return tuple(self._events)
 
     # -- lifecycle --------------------------------------------------------
     def arm(self, t0: Optional[float] = None) -> "FaultPlan":

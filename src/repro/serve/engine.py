@@ -345,7 +345,8 @@ class Engine:
                 [self.lanes[n] for n in self.class_names],
                 monitor_cfg or MonitorConfig(window=16, min_q_samples=16),
                 period_s=10e-3, chunk_t=16, ends="both")
-            self.monitor_thread = FleetMonitorThread(self.fleet)
+            self.monitor_thread = FleetMonitorThread(self.fleet,
+                                                     fault_plan=fault_plan)
         else:
             self.fleet = None          # bound by ControlGroup.attach
             self.monitor_thread = None
@@ -368,6 +369,11 @@ class Engine:
                           admission=self.admission_policy),
                 self._actuator, log=control_log)
             self._actuator.bind_log(self.control.log)
+            # same self-healing posture as Pipeline: the loop's
+            # watchdog restarts a dead monitor thread (the service —
+            # which holds every estimator's state — survives it)
+            self.control.watch_monitor(lambda: self.monitor_thread,
+                                       self._restart_monitor)
         # -- accounting ------------------------------------------------------
         self._acct_lock = threading.Lock()
         self._lane_stats = {n: _LaneStats() for n in self.class_names}
@@ -459,6 +465,20 @@ class Engine:
             self.control.stop()
         if self.monitor_thread is not None:
             self.monitor_thread.stop()
+
+    def _restart_monitor(self) -> FleetMonitorThread:
+        """Watchdog restart path (mirrors ``Pipeline._restart_monitor``):
+        fold any partially staged chunk, then hand the same service —
+        and the same adaptive-period controller — to a fresh timer."""
+        old = self.monitor_thread
+        self.fleet.flush()
+        m = FleetMonitorThread(self.fleet, period=old.period,
+                               adapt_period=old.adapt_period,
+                               min_sleep_s=old.min_sleep_s,
+                               fault_plan=old.fault_plan)
+        self.monitor_thread = m
+        m.start()
+        return m
 
     # ---------------- multi-tenant protocol ----------------------------------
     def control_tenant(self) -> tuple[list, "_EngineActuator"]:

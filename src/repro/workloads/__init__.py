@@ -1,0 +1,37 @@
+"""``repro.workloads`` — the scenario foundry.
+
+Seedable, composable workload generation + chaos-soak harnessing for
+the control plane: arrival-rate envelopes (:mod:`.arrivals`),
+simulated tandem stages behind the real actuator protocol
+(:mod:`.sim`), named scenario x policy x fault specs
+(:mod:`.scenario`), the cell/matrix driver (:mod:`.harness`) and
+trace record/replay (:mod:`.trace`).
+
+The benchmarks in ``benchmarks/control_bench.py`` are thin gates over
+this package; tests drive it directly.
+"""
+
+from repro.workloads.arrivals import (Boxcar, Clip, Constant, Diurnal,
+                                      FlashCrowd, Process, Product, Ramp,
+                                      Shift, Square, Step, Sum, as_process)
+from repro.workloads.harness import (CellResult, StormDriver, run_cell,
+                                     run_matrix)
+from repro.workloads.scenario import (FAULTS, POLICIES, SCENARIOS,
+                                      FaultStorm, Scenario, TenantSpec,
+                                      make_policies)
+from repro.workloads.sim import (ParetoService, PoissonService,
+                                 ServiceModel, SimActuator, SimTandem)
+from repro.workloads.trace import (DECISION_FIELDS, ReplayActuator, Trace,
+                                   TraceRecorder, replay)
+
+__all__ = [
+    "Process", "Constant", "Step", "Ramp", "Square", "Diurnal", "Boxcar",
+    "FlashCrowd", "Sum", "Product", "Clip", "Shift", "as_process",
+    "ServiceModel", "PoissonService", "ParetoService", "SimTandem",
+    "SimActuator",
+    "TenantSpec", "Scenario", "FaultStorm", "SCENARIOS", "FAULTS",
+    "POLICIES", "make_policies",
+    "StormDriver", "CellResult", "run_cell", "run_matrix",
+    "DECISION_FIELDS", "Trace", "TraceRecorder", "ReplayActuator",
+    "replay",
+]

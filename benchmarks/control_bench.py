@@ -57,7 +57,7 @@ import numpy as np
 
 from repro.control import (AdmissionPolicy, BufferPolicy, ControlConfig,
                            ControlGroup, ControlLoop, PolicySet,
-                           ReplicaPolicy, control_decide,
+                           ReplicaPolicy, SLOPolicy, control_decide,
                            control_decide_trace_count, control_init)
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig, run_monitor_fleet
@@ -1138,7 +1138,158 @@ def qos_soak():
         f"{drained_lines} audit lines drained, ok={ok}")
 
 
+def slo_burn():
+    """The honest-tail-latency gate: at the change point a slow
+    downstream hop makes every served item carry latency inversely
+    proportional to the replica count — but *throughput still
+    balances* (the pipelined hop keeps up, served tracks offered, the
+    queue never blocks, and the rate formula's target equals the live
+    replica count throughout).  A throughput-only policy sails through
+    its own gates and ships a terrible p99; the SLO burn-rate leg
+    reads the arena latency histograms, watches its error budget burn,
+    and escalates replicas even though every rate looks healthy.
+
+    Gates: with the SLO leg, sustained p99 latency <= 0.6x the
+    throughput-only policy's p99, at >= 99% availability.  A mid-run
+    exporter scrape under full load must return a well-formed
+    exposition in < 50 ms with ZERO decision retraces.
+    """
+    import urllib.request
+    from repro.obs import MetricsExporter
+
+    T = 2400 if _quick() else 4800
+    change = T // 3
+    settle = change + (T - change) // 3
+    # rates are healthy and CONSTANT: ceil(1.2 * 100 / 60) = 2 = r0,
+    # so the rate-based replica leg is satisfied for the whole run
+    lam, mu_r, r0 = 100.0, 60.0, 2
+    slo_s = 4 * PERIOD_S          # latency target: 4 periods
+    # per-item latency through the slow hop, at r0 replicas: 1 period
+    # before the change, 24 after (6x over target at r0; recovers to
+    # 3 periods — under target — once the SLO leg reaches 16 replicas)
+    hop0_s, hop1_s = 1 * PERIOD_S, 24 * PERIOD_S
+
+    def run(policies, scrape=False):
+        sim = SimTandem(_seed() + 17, lam, mu_r, r0, 4096)
+        arena = CounterArena(4)
+        q = InstrumentedQueue(8, arena=arena)
+        svc = FleetMonitorService([q], MCFG, period_s=PERIOD_S,
+                                  chunk_t=16, scale_to_period=False,
+                                  ends="both")
+        loop = ControlLoop(svc, policies, SimActuator(sim))
+        loop.warmup()
+        wait_s = np.zeros(T)
+        peak_burn = 0.0
+        scrapes, exp = [], None
+        if scrape:
+            exp = MetricsExporter(service=svc, loop=loop).start()
+        try:
+            for t in range(T):
+                acc, tail_blk, srv, head_blk = sim.step(float(t))
+                q.tail.tc, q.tail.blocked = acc, tail_blk
+                q.head.tc, q.head.blocked = srv, head_blk
+                hop = hop0_s if t < change else hop1_s
+                # end-to-end item latency: the slow hop's share per
+                # replica plus actual queueing delay.  Invisible to
+                # every rate counter — the arena histogram row is the
+                # ONLY signal that carries it to the control plane
+                wait_s[t] = (hop * r0 / max(sim.replicas, 1)
+                             + sim.wait * PERIOD_S)
+                if srv:
+                    q.head.record_latency(wait_s[t], n=int(srv))
+                svc.sample()
+                if t % 16 == 15:
+                    loop.tick()
+                    peak_burn = max(peak_burn,
+                                    float(np.max(loop.slo_burn_fast)))
+                if exp is not None and t > settle and t % 600 == 599:
+                    n0 = control_decide_trace_count()
+                    t0 = time.perf_counter()
+                    body = urllib.request.urlopen(
+                        exp.url + "/metrics", timeout=10).read().decode()
+                    ms = (time.perf_counter() - t0) * 1e3
+                    scrapes.append((ms, body,
+                                    control_decide_trace_count() - n0))
+        finally:
+            if exp is not None:
+                exp.stop()
+        svc.flush()
+        avail = sim.served_total / max(sim.offered_total, 1)
+        return wait_s, avail, loop, scrapes, peak_burn
+
+    rep = lambda: ReplicaPolicy(ParallelismController(max_replicas=16))
+    wait_tput, avail_tput, loop_tput, _, _ = run(
+        PolicySet(replica=rep(), confirm_ticks=2, cooldown_ticks=4,
+                  block_q=8))
+    wait_slo, avail_slo, loop_slo, scrapes, burn_seen = run(
+        PolicySet(replica=rep(), slo=SLOPolicy(slo_s),
+                  confirm_ticks=2, cooldown_ticks=4, block_q=8),
+        scrape=True)
+
+    p99_tput = float(np.percentile(wait_tput[settle:], 99))
+    p99_slo = float(np.percentile(wait_slo[settle:], 99))
+    ratio = p99_slo / max(p99_tput, 1e-12)
+    slo_escalations = len([r for r in loop_slo.log.by_policy("replicas")
+                           if r.outcome == "applied"])
+    tput_actions = len([r for r in loop_tput.log.by_policy("replicas")
+                        if r.outcome == "applied"])
+
+    # exporter well-formedness: every sample line parses, and the
+    # families this PR exports are present
+    import re
+    pat = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^{}]*\})? "
+                     r"(-?\d+\.?\d*(e[+-]?\d+)?|NaN|[+-]Inf)$")
+    well_formed = bool(scrapes)
+    for _, body, _ in scrapes:
+        for ln in body.splitlines():
+            if ln and not ln.startswith("#") and not pat.match(ln):
+                well_formed = False
+        for fam in ("repro_latency_seconds", "repro_slo_burn_rate",
+                    "repro_control_ticks_total"):
+            if fam not in body:
+                well_formed = False
+    scrape_ms = max((ms for ms, _, _ in scrapes), default=float("nan"))
+    retraces = sum(r for _, _, r in scrapes)
+
+    ok = (ratio <= 0.6 and avail_slo >= 0.99 and well_formed
+          and scrape_ms < 50.0 and retraces == 0)
+    section = {
+        "periods": T, "change_at": change, "settle_at": settle,
+        "lam": lam, "mu_r": mu_r, "hop_s_path": [hop0_s, hop1_s],
+        "slo_target_s": slo_s,
+        "p99_wait_s": {"throughput_only": p99_tput, "slo_leg": p99_slo},
+        "p99_ratio_slo_over_tput": ratio,
+        "availability": {"throughput_only": avail_tput,
+                         "slo_leg": avail_slo},
+        "replicas_final": {"throughput_only":
+                           int(loop_tput.actuator.sim.replicas),
+                           "slo_leg": int(loop_slo.actuator.sim.replicas)},
+        "scale_actions": {"throughput_only": tput_actions,
+                          "slo_leg": slo_escalations},
+        "max_burn_fast": burn_seen,
+        "exporter": {"scrapes": len(scrapes),
+                     "max_scrape_ms": scrape_ms,
+                     "well_formed": well_formed,
+                     "decision_retraces": retraces},
+        "target": {"p99_ratio": 0.6, "availability": 0.99,
+                   "scrape_ms": 50.0, "met": ok},
+    }
+    _update_report("slo_burn", section)
+    rows = [f"slo_burn/p99_tput_only,{p99_tput * 1e3:.1f},ms",
+            f"slo_burn/p99_slo_leg,{p99_slo * 1e3:.1f},ms",
+            f"slo_burn/ratio,{ratio:.2f},target<=0.6",
+            f"slo_burn/scrape,{scrape_ms:.1f},ms_target<50"]
+    return rows, (
+        f"SLO burn-rate leg: p99 {p99_slo * 1e3:.0f} ms vs "
+        f"{p99_tput * 1e3:.0f} ms throughput-only ({ratio:.2f}x, "
+        f"target <=0.6x) at {avail_slo * 100:.1f}% availability; "
+        f"{slo_escalations} scale actions, peak burn "
+        f"{burn_seen:.0f}x budget; exporter scrape "
+        f"{scrape_ms:.1f} ms, {retraces} retraces, "
+        f"well_formed={well_formed}, ok={ok}")
+
+
 ALL = [closed_loop_step_change, closed_loop_slow_drift,
        closed_loop_bursty_arrivals, closed_loop_admission_collapse,
        closed_loop_multi_tenant, control_parity, control_tick_overhead,
-       matrix, chaos_recovery, qos_spike, qos_soak]
+       matrix, chaos_recovery, qos_spike, qos_soak, slo_burn]

@@ -17,7 +17,14 @@
 # never hurts fault-free, >= 1.2x over static under the storm) and the
 # quick-mode qos_soak (sustained multi-class diurnal load on a real
 # engine with a mid-soak crash/stall/monitor-death storm: availability
-# >= 90%, storm blocking p99 <= 2.5x pre-storm).
+# >= 90%, storm blocking p99 <= 2.5x pre-storm), plus the SLO plane
+# (PR 9): the slo_burn scenario (latency regression invisible to the
+# throughput legs: SLO-on p99-over-target <= 0.6x SLO-off, 100%
+# availability, a mid-storm /metrics scrape <= 50 ms and well-formed,
+# zero retraces with the leg enabled), the count-gated histogram
+# harvest staying <= 10% of the collector tick at S=2e5 with 1% hot
+# ends, and a live-exporter scrape holding the Prometheus text
+# grammar.
 #
 #   scripts/smoke.sh
 #
@@ -63,6 +70,15 @@ print(f"smoke: arena/PR-2-loop collector ratio at S=8192 = {ratio:.1f}x "
       f"(target <= 1e-4), ok = {parity['ok']}")
 assert ratio >= 10.0, "collector bench below acceptance"
 assert parity["ok"], "arena-path estimate parity regression vs scan oracle"
+hh = rep["hist_harvest"]["target"]
+if hh["measured"] is None:
+    print("smoke: SLO histogram harvest S=2e5 rung skipped (quick mode)")
+else:
+    print(f"smoke: SLO histogram harvest = {hh['measured'] * 100:.1f}% of "
+          f"the collector tick at S=2e5, 1% hot (target <= "
+          f"{hh['frac_of_tick_at_200k_hot1pct'] * 100:.0f}%)")
+    assert hh["met"] is True, \
+        "count-gated SLO harvest above 10% of the collector tick"
 EOF
 
 REPRO_BENCH_QUICK=1 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
@@ -151,5 +167,70 @@ assert qk["target"]["met"], "qos soak below acceptance"
 assert qk["availability"] >= 0.9, "qos soak availability below 90%"
 assert qk["p99_storm_over_pre"] <= 2.5, \
     "qos soak: storm blocking p99 above 2.5x pre-storm"
+sb = rep["slo_burn"]
+ex = sb["exporter"]
+print(f"smoke: slo burn = {sb['p99_ratio_slo_over_tput']:.2f}x SLO-leg "
+      f"p99 over throughput-only (target <= 0.6x), availability "
+      f"{sb['availability']['slo_leg'] * 100:.0f}% (target >= 99%), "
+      f"scrape {ex['max_scrape_ms']:.1f}ms over {ex['scrapes']} scrapes "
+      f"(target <= 50ms), well-formed = {ex['well_formed']}, "
+      f"{ex['decision_retraces']} retraces with the SLO leg armed")
+assert sb["target"]["met"], "slo burn scenario below acceptance"
+assert sb["p99_ratio_slo_over_tput"] <= 0.6, \
+    "slo burn: SLO leg did not beat the throughput-only p99 by 0.6x"
+assert sb["availability"]["slo_leg"] >= 0.99, \
+    "slo burn: availability under the latency storm below 99%"
+assert ex["max_scrape_ms"] <= 50.0, \
+    "slo burn: mid-storm /metrics scrape above 50ms"
+assert ex["well_formed"] is True, \
+    "slo burn: a mid-storm scrape violated the exposition grammar"
+assert ex["decision_retraces"] == 0, \
+    "slo burn: arming the SLO leg retraced the decision dispatch"
+EOF
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import re
+import numpy as np
+from repro.control import ControlGroup, PolicySet, ReplicaPolicy, SLOPolicy
+from repro.core.monitor import MonitorConfig
+from repro.obs import render_metrics
+from repro.streams import CounterArena, FleetMonitorService, InstrumentedQueue
+
+# live-exporter scrape well-formedness: every sample line must parse
+# under the Prometheus text grammar, one HELP per family
+SAMPLE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"'
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="[^"]*")*\})? '
+    r'(NaN|[+-]Inf|-?\d+(\.\d+)?([eE][+-]?\d+)?)$')
+arena = CounterArena(64)
+queues = [InstrumentedQueue(16, arena=arena) for _ in range(3)]
+svc = FleetMonitorService(queues, MonitorConfig(window=8, min_q_samples=8),
+                          period_s=1e-3, chunk_t=2, scale_to_period=False,
+                          ends="both")
+group = ControlGroup(PolicySet(replica=ReplicaPolicy(),
+                               slo=SLOPolicy(target_s=4e-3), block_q=8),
+                     arena=arena,
+                     monitor_cfg=MonitorConfig(window=8, min_q_samples=8),
+                     obs=True)
+try:
+    svc.sample(); svc.sample()
+    queues[0].head.record_latency(np.full(64, 2e-3))
+    queues[1].head.record_error(5)
+    svc.sample(); svc.sample()
+    for text in (group.exporter.render(), render_metrics(svc, None)):
+        fams = []
+        for line in text.splitlines():
+            if line.startswith("# "):
+                if line.startswith("# HELP "):
+                    fams.append(line.split()[2])
+                continue
+            assert SAMPLE.match(line), f"malformed sample line: {line!r}"
+        assert len(fams) == len(set(fams)), "HELP emitted twice"
+    print(f"smoke: exporter exposition well-formed "
+          f"({len(text.splitlines())} lines, {len(set(fams))} families)")
+finally:
+    group.stop()
+    svc.stop()
 EOF
 echo "smoke: OK"

@@ -2,14 +2,15 @@ from repro.control.log import ControlLog, ControlRecord
 from repro.control.loop import ControlLoop
 from repro.control.policy import (AdmissionPolicy, BufferPolicy,
                                   ControlConfig, ControlState, Decision,
-                                  PolicySet, ReplicaPolicy, control_decide,
+                                  PolicySet, ReplicaPolicy, SLOPolicy,
+                                  control_decide,
                                   control_decide_trace_count, control_init)
 
 __all__ = [
     "ControlLog", "ControlRecord", "ControlLoop",
     "ControlGroup", "CompositeActuator", "TenantHandle",
-    "AdmissionPolicy", "BufferPolicy", "ReplicaPolicy", "PolicySet",
-    "ControlConfig", "ControlState", "Decision",
+    "AdmissionPolicy", "BufferPolicy", "ReplicaPolicy", "SLOPolicy",
+    "PolicySet", "ControlConfig", "ControlState", "Decision",
     "control_decide", "control_decide_trace_count", "control_init",
 ]
 

@@ -151,6 +151,26 @@ class CompositeActuator:
             return z, z
         return np.concatenate(his), np.concatenate(los)
 
+    def slo_targets(self) -> np.ndarray:
+        """Concatenated per-queue latency SLO targets (NaN = no SLO):
+        a tenant attached with its own ``SLOPolicy`` contributes that
+        policy's targets, a QoS-aware actuator (``serve.Engine``)
+        overlays deadline-derived per-lane targets on top, and
+        everything else contributes NaN — the loop's sense step overlays
+        the whole thing over the group ``SLOPolicy``'s defaults."""
+        parts = []
+        for t in self._group._tenants:
+            p = t.policies.slo if t.policies is not None else None
+            base = (p.targets(len(t)) if p is not None
+                    else np.full(len(t), np.nan, np.float32))
+            a = t.actuator
+            if hasattr(a, "slo_targets"):
+                ta = np.asarray(a.slo_targets(), np.float32)
+                base = np.where(np.isnan(ta), base, ta)
+            parts.append(base)
+        return (np.concatenate(parts) if parts
+                else np.zeros(0, np.float32))
+
     def pressure(self) -> np.ndarray:
         """Concatenated sibling-lane pressure: tenants without QoS
         lanes contribute zero (pressure never crosses tenants — one
@@ -271,7 +291,8 @@ class ControlGroup:
                  chunk_t: int = 32, scale_to_period: bool = True,
                  block_q: int = 32, log: Optional[ControlLog] = None,
                  impl: str = "auto",
-                 loop_period_s: Optional[float] = None):
+                 loop_period_s: Optional[float] = None,
+                 obs=None):
         self.arena = arena if arena is not None else default_arena()
         self.policies = policies
         # the service is born empty; arena= seeds it so monitoring
@@ -292,6 +313,39 @@ class ControlGroup:
         self._lock = threading.Lock()   # serializes attach/detach/stop
         self._started = False
         self._stopped = False
+        # observability knob: None/False = off, True = exporter on an
+        # ephemeral port, int = that port, dict = MetricsExporter
+        # kwargs; the exporter reads the shared service/loop mirrors
+        # and labels each queue with its tenant's name
+        from repro.obs import make_exporter     # no cycle: obs is leaf
+        self.exporter = make_exporter(
+            obs, service=self.service, loop=self.loop,
+            log=self.loop.log, names=self._queue_names,
+            extra=self._extra_metrics)
+
+    def _queue_names(self) -> list[str]:
+        return [t.name for t in self._tenants for _ in range(len(t))]
+
+    def _extra_metrics(self) -> dict:
+        """Per-tenant process gauges for the exporter: degraded-queue
+        counts (crash-loop breaker states ride the ``faulty`` mask) and
+        supervisor breaker-trip counters where a tenant has them."""
+        faulty: dict[str, float] = {}
+        trips: dict[str, float] = {}
+        for t in self._tenants:
+            a = t.actuator
+            if hasattr(a, "faulty"):
+                faulty[t.name] = float(
+                    np.sum(np.asarray(a.faulty(), bool)))
+            sup = getattr(t.obj, "supervisor", None)
+            if sup is not None and hasattr(sup, "breaker_trips"):
+                trips[t.name] = float(sup.breaker_trips)
+        out: dict = {}
+        if faulty:
+            out["repro_tenant_faulty_queues"] = faulty
+        if trips:
+            out["repro_tenant_breaker_trips_total"] = trips
+        return out
 
     def _rebuild_overrides_locked(self) -> None:
         ts = self._tenants
@@ -334,7 +388,7 @@ class ControlGroup:
     def _resolve(self, handle: TenantHandle) -> None:
         eff = (handle.policies if handle.policies is not None
                else self.policies)
-        for leg in ("replica", "buffer", "admission"):
+        for leg in ("replica", "buffer", "admission", "slo"):
             if (getattr(eff, leg) is not None
                     and getattr(self.policies, leg) is None):
                 raise ValueError(
@@ -363,7 +417,7 @@ class ControlGroup:
         # live in the ONE shared ControlConfig — so a tenant policy
         # carrying different knobs would be silently overridden by the
         # group's: reject it instead (replica knobs ARE overridable)
-        for leg in ("buffer", "admission"):
+        for leg in ("buffer", "admission", "slo"):
             tp, gp = getattr(eff, leg), getattr(self.policies, leg)
             if (handle.policies is not None and tp is not None
                     and tp.config_kwargs() != gp.config_kwargs()):
@@ -371,7 +425,8 @@ class ControlGroup:
                     f"tenant {handle.name!r} carries {leg} knobs "
                     f"{tp.config_kwargs()} that differ from the "
                     f"group's {gp.config_kwargs()} — only replica "
-                    "knobs (headroom/max_replicas) are per-tenant")
+                    "knobs (headroom/max_replicas) and SLO targets "
+                    "are per-tenant")
         handle.leg_rep = eff.replica is not None
         handle.leg_buf = eff.buffer is not None
         handle.leg_adm = eff.admission is not None
@@ -480,6 +535,8 @@ class ControlGroup:
                 self._started = True
                 self.monitor.start()
                 self.loop.start()
+                if self.exporter is not None:
+                    self.exporter.start()
         return self
 
     def stop(self) -> None:
@@ -492,6 +549,8 @@ class ControlGroup:
         take the group lock, and they run on tenant threads)."""
         with self._lock:
             self._stopped = True
+            if self.exporter is not None:
+                self.exporter.stop()
             self.loop.stop()
             self.monitor.stop()
             self.service.stop()

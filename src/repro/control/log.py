@@ -75,7 +75,21 @@ class ControlLog:
         self._buf: list[Optional[ControlRecord]] = [None] * self.capacity
         self._n = 0                     # total appended, ever
         self._drained = 0               # records drained to JSONL, ever
+        self._dropped = 0               # drain-acknowledged ring drops
         self._lock = threading.Lock()
+
+    @property
+    def dropped_total(self) -> int:
+        """Records that fell (or have already fallen) off the ring
+        undrained, ever — monotone: drain-acknowledged drops plus the
+        live overhang the next drain would acknowledge.  Exported as
+        ``control_log_dropped_total`` and surfaced in
+        ``ControlLoop.health()``: a climbing value means the ring is
+        undersized (or the drain cadence too slow) for the decision
+        rate, and the audit trail has holes."""
+        with self._lock:
+            live = max(0, self._n - self.capacity - self._drained)
+            return self._dropped + live
 
     def append(self, rec: ControlRecord) -> None:
         with self._lock:
@@ -126,12 +140,7 @@ class ControlLog:
         a cadence so a minutes-long run is not limited by the ring).
         Records that fell off the ring between drains are acknowledged
         with one ``{"dropped": n}`` line rather than silently lost."""
-        with self._lock:
-            n, cap = self._n, self.capacity
-            start = max(self._drained, n - cap)
-            dropped = start - self._drained
-            recs = [self._buf[i % cap] for i in range(start, n)]
-            self._drained = n
+        dropped, recs = self._take_undrained()
         # serialize outside the lock: records are frozen, and appends
         # racing us will be picked up by the next drain
         with open(path, "a") as f:
@@ -140,3 +149,25 @@ class ControlLog:
             for r in recs:
                 f.write(json.dumps(dataclasses.asdict(r)) + "\n")
         return len(recs)
+
+    def drain_lines(self) -> list[str]:
+        """The JSONL drain as in-memory lines (same cursor and drop
+        acknowledgement as ``drain_jsonl``) — backs the exporter's
+        ``/control_log`` endpoint, where the scraper, not this process,
+        owns the file."""
+        dropped, recs = self._take_undrained()
+        lines = []
+        if dropped:
+            lines.append(json.dumps({"dropped": dropped}))
+        lines.extend(json.dumps(dataclasses.asdict(r)) for r in recs)
+        return lines
+
+    def _take_undrained(self) -> tuple[int, list[ControlRecord]]:
+        with self._lock:
+            n, cap = self._n, self.capacity
+            start = max(self._drained, n - cap)
+            dropped = start - self._drained
+            recs = [self._buf[i % cap] for i in range(start, n)]
+            self._drained = n
+            self._dropped += dropped
+        return dropped, recs

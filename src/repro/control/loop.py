@@ -37,7 +37,12 @@ of upward dependencies.  An adapter provides:
 * ``pressure()`` -> (Q,) float (optional): sibling-lane urgency (a
   patient QoS lane carries the hottest blocking lane's occupancy), so
   patient traffic sheds first under a blocking burst — both ride the
-  same fused dispatch as padded operands (no retraces).
+  same fused dispatch as padded operands (no retraces);
+* ``slo_targets()`` -> (Q,) float seconds (optional): per-queue latency
+  SLO targets, NaN = no target — ``serve.Engine`` derives them from its
+  QoS class deadlines; they overlay the ``SLOPolicy`` default and feed
+  the burn-rate leg together with the service's windowed
+  ``over_fraction`` readout (one more padded operand, no retraces).
 
 The loop is hardened against the failure modes a long-running control
 plane actually sees — each is audited in the ``ControlLog`` with an
@@ -139,6 +144,13 @@ class ControlLoop(threading.Thread):
         self._last_good_mu = np.zeros(q)
         self._last_good_lam = np.zeros(q)
         self.quarantined = 0               # estimates quarantined, ever
+        # SLO-leg mirrors for the exporter/health surface: numpy copies
+        # refreshed once per tick (never the live, donation-bound jax
+        # state), so a scrape thread reads without racing the dispatch
+        self.slo_burn_fast = np.zeros(q)
+        self.slo_burn_slow = np.zeros(q)
+        self.slo_targets = np.full(q, np.nan)
+        self._slo_hot_prev = np.zeros(q, bool)
         # actuation failure policy: retry with backoff, then record the
         # failure (outcome 'error' + code) and roll back what we can
         self.actuation_retries = int(actuation_retries)
@@ -191,7 +203,7 @@ class ControlLoop(threading.Thread):
             zi, zb = np.zeros(0, np.int32), np.zeros(0, bool)
             return Decision(target_replicas=zi, scale_mask=zb,
                             target_caps=zi, resize_mask=zb, shed=zb,
-                            straggler=zb, probing=zb)
+                            straggler=zb, probing=zb, slo_hot=zb)
         # -- sense: one gated readout for both ends ----------------------
         rates = svc.gated_rates()
         mu, lam = rates[:q], rates[q:]
@@ -256,6 +268,21 @@ class ControlLoop(threading.Thread):
             occ_lo = np.asarray(bands[1], np.float32)
         pressure = (np.asarray(act.pressure(), float)
                     if hasattr(act, "pressure") else None)
+        # SLO leg sense: per-queue latency targets (actuator-supplied
+        # targets overlay the SLOPolicy default) and the fraction of
+        # the last harvest window over target.  Only sensed when the
+        # leg is enabled — SLO-less loops pay nothing here.
+        slo_t = over = None
+        if self.cfg.slo_enabled:
+            p = self.policies.slo
+            slo_t = (p.targets(q) if p is not None
+                     else np.full(q, np.nan, np.float32))
+            if hasattr(act, "slo_targets"):
+                t_act = np.asarray(act.slo_targets(), np.float32)
+                slo_t = np.where(np.isnan(t_act), slo_t, t_act)
+            if hasattr(svc, "over_fraction"):
+                over = svc.over_fraction(slo_t, which="head")
+            self.slo_targets = slo_t
         # multi-tenant per-queue overrides (leg masks, replica knobs) —
         # a plain single-tenant actuator has none and the config rules
         overrides = (act.policy_overrides()
@@ -275,6 +302,7 @@ class ControlLoop(threading.Thread):
                 cv2=cv2, occupancy=occ, saturated=saturated,
                 scalable=scalable, stale=stale, faulty=faulty,
                 occ_hi=occ_hi, occ_lo=occ_lo, pressure=pressure,
+                slo_target=slo_t, over_frac=over,
                 impl=impl, donate=True, **overrides)
         except Exception:
             if impl == "numpy":
@@ -299,8 +327,17 @@ class ControlLoop(threading.Thread):
                 cv2=cv2, occupancy=occ, saturated=saturated,
                 scalable=scalable, stale=stale, faulty=faulty,
                 occ_hi=occ_hi, occ_lo=occ_lo, pressure=pressure,
+                slo_target=slo_t, over_frac=over,
                 impl="numpy", donate=True, **overrides)
         self.ticks += 1
+        if self.cfg.slo_enabled:
+            # refresh the burn mirrors from the fresh state before the
+            # next dispatch can donate it (numpy copies: the exporter's
+            # scrape thread must never touch the live jax leaves)
+            self.slo_burn_fast = np.array(self.state.burn_fast,
+                                          dtype=float)[:q]
+            self.slo_burn_slow = np.array(self.state.burn_slow,
+                                          dtype=float)[:q]
         self._actuate(dec, lam, mu, replicas, caps)
         return dec
 
@@ -400,6 +437,15 @@ class ControlLoop(threading.Thread):
                 else:
                     applied[i] = shed[i]
             self._shed = applied
+        if self.cfg.slo_enabled:
+            # audit burn-rate escalation transitions (observations, not
+            # actions — the replica/admission records above carry the
+            # actuation; this marks WHY in the decision taxonomy)
+            hot = np.asarray(dec.slo_hot)
+            for i in np.nonzero(hot != self._slo_hot_prev)[0]:
+                record(i, "slo", "burn-hot" if hot[i] else "burn-clear",
+                       int(hot[i]), "observed")
+            self._slo_hot_prev = hot.copy()
 
     # -- fleet restructure (multi-tenant attach/detach) --------------------
     def _remap_locked(self, old_index_of_new) -> None:
@@ -434,7 +480,10 @@ class ControlLoop(threading.Thread):
             shedding=take(st.shedding, False),
             peak_mu=take(st.peak_mu, 0.0),
             escalated=take(st.escalated, False),
-            probe_timer=take(st.probe_timer, 0))
+            probe_timer=take(st.probe_timer, 0),
+            burn_fast=take(st.burn_fast, 0.0),
+            burn_slow=take(st.burn_slow, 0.0),
+            slo_hot=take(st.slo_hot, False))
         self._shed = take(self._shed, False)
         self._mu_basis = take(self._mu_basis, 1)
         self._last_mu = take(self._last_mu, np.nan)
@@ -442,6 +491,10 @@ class ControlLoop(threading.Thread):
         self._last_tot = take(self._last_tot, 0)
         self._last_good_mu = take(self._last_good_mu, 0.0)
         self._last_good_lam = take(self._last_good_lam, 0.0)
+        self.slo_burn_fast = take(self.slo_burn_fast, 0.0)
+        self.slo_burn_slow = take(self.slo_burn_slow, 0.0)
+        self.slo_targets = take(self.slo_targets, np.nan)
+        self._slo_hot_prev = take(self._slo_hot_prev, False)
         self.n_queues = nq
 
     # -- monitor watchdog --------------------------------------------------
@@ -488,6 +541,7 @@ class ControlLoop(threading.Thread):
             "monitor_restarts": self.monitor_restarts,
             "jit_failures": self._jit_fail,
             "impl_degraded": self.impl_degraded,
+            "control_log_dropped": self.log.dropped_total,
         }
 
     # -- thread plumbing ---------------------------------------------------

@@ -48,7 +48,8 @@ from repro.core.controller import (BufferAutotuner, ParallelismController,
 __all__ = [
     "ControlConfig", "ControlState", "Decision",
     "control_init", "control_decide", "control_decide_trace_count",
-    "ReplicaPolicy", "BufferPolicy", "AdmissionPolicy", "PolicySet",
+    "ReplicaPolicy", "BufferPolicy", "AdmissionPolicy", "SLOPolicy",
+    "PolicySet",
 ]
 
 
@@ -96,6 +97,22 @@ class ControlConfig:
     stale_frac: float = 0.5        # window mean below this x gated lam => stale
     probe_period_ticks: int = 16   # ticks between probe windows
     probe_window_ticks: int = 4    # gate-open ticks per probe window
+    # SLO / error-budget leg (multi-window burn rate a la the SRE
+    # runbooks): per-queue latency targets arrive as a queue-padded
+    # operand (NaN = no SLO); the fraction of the last window's
+    # observations over target, divided by the budget fraction, is the
+    # instantaneous burn rate, folded into fast (~5-tick) and slow
+    # (~60-tick) EMAs carried in ControlState.  Both windows hot =>
+    # the replica leg escalates (latency pressure scales the stage even
+    # when rates balance); a fast burn above ``slo_shed_burn`` arms the
+    # admission gate (the budget is burning too fast to scale out of).
+    slo_enabled: bool = False
+    slo_budget_frac: float = 0.01  # error budget: frac of traffic allowed over
+    slo_fast_ticks: int = 5        # fast burn EMA window (control ticks)
+    slo_slow_ticks: int = 60       # slow burn EMA window (control ticks)
+    slo_burn_hi: float = 1.0       # both EMAs above => SLO-hot (escalate)
+    slo_burn_lo: float = 0.5       # fast EMA below => SLO-hot releases
+    slo_shed_burn: float = 6.0     # fast EMA above => arm admission
     # gating
     confirm_ticks: int = 2         # consecutive agreeing ticks before acting
     cooldown_ticks: int = 4        # ticks a queue rests after an actuation
@@ -119,6 +136,9 @@ class ControlState(NamedTuple):
     peak_mu: jnp.ndarray       # (Q,) f32  decayed peak service rate seen
     escalated: jnp.ndarray     # (Q,) bool provision last set by escalation
     probe_timer: jnp.ndarray   # (Q,) i32  ticks into the probe cycle
+    burn_fast: jnp.ndarray     # (Q,) f32  fast-window SLO burn-rate EMA
+    burn_slow: jnp.ndarray     # (Q,) f32  slow-window SLO burn-rate EMA
+    slo_hot: jnp.ndarray       # (Q,) bool SLO-escalation memory (hysteresis)
 
 
 class Decision(NamedTuple):
@@ -130,6 +150,7 @@ class Decision(NamedTuple):
     shed: jnp.ndarray              # (Q,) bool  admission gate shut
     straggler: jnp.ndarray         # (Q,) bool  below fleet-median threshold
     probing: jnp.ndarray           # (Q,) bool  gate-open demand-probe window
+    slo_hot: jnp.ndarray           # (Q,) bool  burn-rate escalation active
 
 
 def control_init(cfg: ControlConfig, n: int) -> ControlState:
@@ -141,6 +162,9 @@ def control_init(cfg: ControlConfig, n: int) -> ControlState:
         peak_mu=jnp.zeros((n,), jnp.float32),
         escalated=jnp.zeros((n,), bool),
         probe_timer=jnp.zeros((n,), jnp.int32),
+        burn_fast=jnp.zeros((n,), jnp.float32),
+        burn_slow=jnp.zeros((n,), jnp.float32),
+        slo_hot=jnp.zeros((n,), bool),
     )
 
 
@@ -223,7 +247,7 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
                ready, replicas, rep_basis, caps, cv2, occupancy,
                saturated, scalable, fleet_med, stale, faulty, leg_rep,
                leg_buf, leg_adm, headroom, max_reps, occ_hi, occ_lo,
-               pressure):
+               pressure, slo_target, over_frac):
     """The fused decision, once, against either array namespace.
 
     ``leg_rep``/``leg_buf``/``leg_adm`` are the per-queue tenant masks
@@ -249,7 +273,16 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     occ_hi`` arms regardless of the lane's own collapse state) and is
     held shed until the pressure clears (``pressure <= occ_lo`` gates
     disarm).  The defaults (config scalars, zero pressure) reproduce
-    the class-less behavior exactly."""
+    the class-less behavior exactly.
+
+    ``slo_target``/``over_frac`` are the SLO leg's queue-padded
+    operands: per-queue latency targets (seconds, NaN = no SLO) and the
+    fraction of the last harvest window's observations over target
+    (NaN = no observations this window, which folds as zero burn —
+    nothing served consumes no error budget, and an idle/shed queue's
+    burn must decay, not pin).  The leg is a static config branch
+    (``cfg.slo_enabled``), so SLO-less loops trace and run the exact
+    pre-SLO decision."""
     lam = lam.astype(xp.float32)
     mu = mu.astype(xp.float32)
     cv2 = cv2.astype(xp.float32)
@@ -273,6 +306,45 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     escalated = xp.clip(
         xp.ceil(replicas.astype(xp.float32) * cfg.saturation_growth),
         1, max_reps).astype(xp.int32)
+
+    # -- SLO burn-rate leg (multi-window error-budget consumption) ------
+    if cfg.slo_enabled:
+        tgt = slo_target.astype(xp.float32)
+        have_slo = ~xp.isnan(tgt)
+        # instantaneous burn: fraction over target / budget fraction.
+        # NaN over_frac (empty window) folds as zero — serving nothing
+        # burns nothing, so idle/shed queues decay instead of pinning.
+        ovf = over_frac.astype(xp.float32)
+        inst = xp.where(xp.isnan(ovf), 0.0, ovf) \
+            / xp.float32(max(cfg.slo_budget_frac, 1e-9))
+        a_f = xp.float32(2.0 / (cfg.slo_fast_ticks + 1.0))
+        a_s = xp.float32(2.0 / (cfg.slo_slow_ticks + 1.0))
+        burn_fast = xp.where(
+            have_slo, (1.0 - a_f) * state.burn_fast + a_f * inst, 0.0)
+        burn_slow = xp.where(
+            have_slo, (1.0 - a_s) * state.burn_slow + a_s * inst, 0.0)
+        # hot needs BOTH windows over (the runbooks' page condition:
+        # fast = it is burning now, slow = it has been long enough to
+        # matter); hysteresis releases only once the fast window cools
+        slo_hot = have_slo & xp.where(
+            state.slo_hot, burn_fast > cfg.slo_burn_lo,
+            (burn_fast > cfg.slo_burn_hi)
+            & (burn_slow > cfg.slo_burn_hi))
+        # burning faster than scale-out can save: shed to stop the bleed
+        shed_slo = have_slo & (burn_fast >= cfg.slo_shed_burn)
+        # scale-down freeze: while the SLOW window still remembers a
+        # burn, handing capacity back would re-ignite the violation the
+        # escalation just paid to put out (the fast window cools in a
+        # few ticks; the slow window is the runbooks' "has the budget
+        # actually recovered" question)
+        slo_dn_hold = have_slo & (burn_slow > cfg.slo_burn_lo)
+    else:
+        burn_fast = state.burn_fast
+        burn_slow = state.burn_slow
+        slo_hot = xp.zeros_like(saturated)
+        shed_slo = slo_hot
+        have_slo = slo_hot
+        slo_dn_hold = slo_hot
 
     # -- demand probe: scale-down for the escalated / stale regime ------
     # provision counts as escalation-driven from the tick saturation
@@ -303,6 +375,19 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     rep_t = xp.where(decay, decayed,
                      xp.where(saturated & ready, escalated,
                               xp.where(known, rep_formula, replicas)))
+    # SLO pressure escalates the replica target even when the rate
+    # formula is satisfied — tail latency burns while throughput
+    # balances (the slo_burn bench's regime).  Multiplicative like
+    # saturation: each confirmed step recomputes off live replicas,
+    # and the formula's want_dn walks it back once the burn cools.
+    rep_t = xp.where(slo_hot, xp.maximum(rep_t, escalated), rep_t)
+    # with an SLO armed, scale-down walks one multiplicative notch per
+    # confirmed step (the probe's decay target) instead of snapping to
+    # the rate formula: the formula is latency-blind, so a snap-down
+    # can overshoot straight back into violation — stepping gives the
+    # burn signal a veto point between steps
+    rep_t = xp.where(have_slo & (rep_t < replicas),
+                     xp.maximum(rep_t, decayed), rep_t)
     cap_t = _capacity_targets(cfg, lam, mu, cv2, caps, xp)
 
     # -- replica gating: confirmation counter + cooldown.  The leg is
@@ -312,10 +397,11 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     #    wants there would only burn cooldown ---------------------------
     # degraded mode: a faulty queue's replica leg is held outright
     can_scale = scalable & leg_rep & ~faulty
-    want_up = (rep_t > replicas) & (known | (saturated & ready)) \
+    want_up = (rep_t > replicas) & (known | (saturated & ready)
+                                    | slo_hot) \
         & can_scale & ~probing
-    want_dn = (rep_t < replicas) & known & ~saturated & can_scale \
-        & ~probing
+    want_dn = (rep_t < replicas) & known & ~saturated & ~slo_hot \
+        & ~slo_dn_hold & can_scale & ~probing
     rep_agree = xp.where(
         want_up, xp.maximum(state.rep_agree, 0) + 1,
         xp.where(want_dn, xp.minimum(state.rep_agree, 0) - 1, 0))
@@ -361,10 +447,10 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
     lo = occ_lo.astype(xp.float32)
     prs = pressure.astype(xp.float32)
     arm = ((collapsed | straggler | exhausted) & (occ >= hi)) \
-        | (prs >= hi)
+        | (prs >= hi) | shed_slo
     recovered = (mu >= cfg.recover_frac * peak) & ~straggler \
         & ~exhausted
-    disarm = (recovered | (occ <= lo)) & (prs <= lo)
+    disarm = (recovered | (occ <= lo)) & (prs <= lo) & ~shed_slo
     # the arm/disarm memory keeps running through a probe window; only
     # the *output* gate is forced open so shed demand can show itself.
     # A faulty queue's gate is forced SHUT regardless — feeding load to
@@ -380,9 +466,12 @@ def _step_math(xp, cfg: ControlConfig, state: ControlState, lam, mu,
         rep_agree=xp.where(scale, 0, rep_agree).astype(xp.int32),
         cap_agree=xp.where(resize, 0, cap_agree).astype(xp.int32),
         shedding=shed_m, peak_mu=peak.astype(xp.float32),
-        escalated=esc, probe_timer=timer.astype(xp.int32))
+        escalated=esc, probe_timer=timer.astype(xp.int32),
+        burn_fast=burn_fast.astype(xp.float32),
+        burn_slow=burn_slow.astype(xp.float32),
+        slo_hot=slo_hot)
     return new_state, Decision(rep_t, scale, cap_t, resize, shed,
-                               straggler, probing)
+                               straggler, probing, slo_hot)
 
 
 @functools.lru_cache(maxsize=None)
@@ -418,6 +507,7 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
                    stale=None, faulty=None, leg_rep=None, leg_buf=None,
                    leg_adm=None, headroom=None, max_replicas=None,
                    occ_hi=None, occ_lo=None, pressure=None,
+                   slo_target=None, over_frac=None,
                    impl: str = "auto", donate: bool = True
                    ) -> tuple[ControlState, Decision]:
     """Evaluate every policy for the whole fleet in one fused pass.
@@ -447,7 +537,11 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
     is the per-queue sibling-lane urgency (``>= occ_hi`` arms shedding
     outright; ``<= occ_lo`` is required to disarm) — all three are
     queue-padded operands with semantics-preserving defaults, so class
-    churn never retraces the dispatch.
+    churn never retraces the dispatch.  ``slo_target``/``over_frac``
+    feed the burn-rate leg (see ``_step_math``): per-queue latency
+    targets in seconds (NaN = no SLO) and the observed fraction of the
+    last window over target (NaN = empty window), defaulting to
+    all-NaN so SLO-less callers decide identically.
     Under ``"jit"`` the ``state`` is donated by default — callers keep
     only the returned state, exactly like the fleet monitor dispatch.
     """
@@ -485,6 +579,12 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
     occ_lo = band(occ_lo, cfg.occupancy_lo)
     if pressure is None:
         pressure = 0.0
+    # SLO operands: NaN target = no SLO, NaN over_frac = empty window
+    # (zero burn).  NaN defaults keep the leg inert without retracing.
+    if slo_target is None:
+        slo_target = np.nan
+    if over_frac is None:
+        over_frac = np.nan
     # fleet median of the ready service rates, for the straggler leg
     # (numpy introselect off-dispatch: XLA CPU would sort, ~30x slower)
     mu_np = np.asarray(mu, np.float32)
@@ -520,7 +620,9 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
                 max_reps=npa(max_replicas, np.int32),
                 occ_hi=npa(occ_hi, np.float32),
                 occ_lo=npa(occ_lo, np.float32),
-                pressure=npa(pressure, np.float32))
+                pressure=npa(pressure, np.float32),
+                slo_target=npa(slo_target, np.float32),
+                over_frac=npa(over_frac, np.float32))
     if impl != "jit":
         raise ValueError(f"bad impl {impl!r}")
 
@@ -553,7 +655,10 @@ def control_decide(cfg: ControlConfig, state: ControlState, *,
         # padded rows must never arm via pressure: hi=2 is unreachable
         occ_hi=pad(jnp.asarray(occ_hi, jnp.float32), 2.0),
         occ_lo=pad(jnp.asarray(occ_lo, jnp.float32), 0.0),
-        pressure=pad(jnp.asarray(pressure, jnp.float32), 0.0))
+        pressure=pad(jnp.asarray(pressure, jnp.float32), 0.0),
+        # NaN pad = no SLO on padded rows (the leg's own neutral value)
+        slo_target=pad(jnp.asarray(slo_target, jnp.float32), np.nan),
+        over_frac=pad(jnp.asarray(over_frac, jnp.float32), np.nan))
     state = ControlState(*(jnp.asarray(leaf) for leaf in state))
     if rpad:
         state = jax.tree_util.tree_map(
@@ -647,6 +752,50 @@ class AdmissionPolicy:
                 "min_ready": self.detector.min_hosts}
 
 
+class SLOPolicy:
+    """Latency-SLO / error-budget policy (the burn-rate leg).
+
+    ``target_s`` is the default per-queue latency target in seconds
+    (scalar, (Q,) array, or None to rely entirely on actuator-supplied
+    targets — ``serve.Engine`` derives per-lane targets from its QoS
+    class deadlines).  ``budget_frac`` is the error budget: the
+    fraction of observations allowed over target; the burn rate is
+    budget consumed per unit budgeted (1.0 = burning exactly at
+    budget).  Fast/slow window lengths and thresholds follow the
+    multi-window burn-rate runbooks: escalate replicas when both
+    windows exceed ``burn_hi``; arm admission when the fast window
+    exceeds ``shed_burn`` (too hot to scale out of)."""
+
+    def __init__(self, target_s=None, *, budget_frac: float = 0.01,
+                 fast_ticks: int = 5, slow_ticks: int = 60,
+                 burn_hi: float = 1.0, burn_lo: float = 0.5,
+                 shed_burn: float = 6.0):
+        self.target_s = target_s
+        self.budget_frac = float(budget_frac)
+        self.fast_ticks = int(fast_ticks)
+        self.slow_ticks = int(slow_ticks)
+        self.burn_hi = float(burn_hi)
+        self.burn_lo = float(burn_lo)
+        self.shed_burn = float(shed_burn)
+
+    def config_kwargs(self) -> dict:
+        return {"slo_enabled": True,
+                "slo_budget_frac": self.budget_frac,
+                "slo_fast_ticks": self.fast_ticks,
+                "slo_slow_ticks": self.slow_ticks,
+                "slo_burn_hi": self.burn_hi,
+                "slo_burn_lo": self.burn_lo,
+                "slo_shed_burn": self.shed_burn}
+
+    def targets(self, q: int) -> np.ndarray:
+        """(Q,) default latency targets (NaN = no SLO) — the loop's
+        sense step overlays actuator-supplied per-queue targets."""
+        if self.target_s is None:
+            return np.full(q, np.nan, np.float32)
+        t = np.asarray(self.target_s, np.float32)
+        return np.broadcast_to(t, (q,)).copy() if t.ndim == 0 else t
+
+
 @dataclasses.dataclass
 class PolicySet:
     """The policies one control loop evaluates (any may be None).  The
@@ -655,6 +804,7 @@ class PolicySet:
     replica: Optional[ReplicaPolicy] = None
     buffer: Optional[BufferPolicy] = None
     admission: Optional[AdmissionPolicy] = None
+    slo: Optional[SLOPolicy] = None
     confirm_ticks: int = 2
     cooldown_ticks: int = 4
     block_q: int = 256
@@ -670,7 +820,7 @@ class PolicySet:
                     "replica_enabled": self.replica is not None,
                     "buffer_enabled": self.buffer is not None,
                     "admission_enabled": self.admission is not None}
-        for p in (self.replica, self.buffer, self.admission):
+        for p in (self.replica, self.buffer, self.admission, self.slo):
             if p is not None:
                 kw.update(p.config_kwargs())
         return ControlConfig(**kw)

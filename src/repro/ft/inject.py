@@ -108,7 +108,10 @@ class FaultPlan:
               n_stalls: int = 0, stall_s: float = 0.2,
               n_skews: int = 0, skew_s: float = 0.0,
               skew_factor: float = 1.0,
-              monitor_outage_s: float = 0.0) -> "FaultPlan":
+              monitor_outage_s: float = 0.0,
+              n_act_fails: int = 0,
+              act_verbs: Sequence[str] = ("scale", "resize", "admit")
+              ) -> "FaultPlan":
         """The chaos-scenario generator: ``n_crashes`` replica kills and
         ``n_stalls`` stragglers at seeded-uniform times over ``window_s``
         targeting seeded-choice stages, ``n_skews`` clock-skew windows
@@ -119,12 +122,20 @@ class FaultPlan:
         outage length; the real monitor hook ignores it, a dead thread
         stays dead until a watchdog acts).
 
+        ``n_act_fails`` schedules actuation failures: each picks a
+        seeded-choice verb from ``act_verbs`` at a seeded-uniform time
+        — the next matching actuator verb raises (``FaultyActuator``
+        wall-clock, or the scenario foundry's simulated-time driver,
+        which routes them to ``SimActuator.fail_verbs``), and the
+        control loop's retry/rollback path must absorb it.
+
         ``targets`` may be empty only when nothing targets a stage
         (``n_crashes == n_stalls == 0``) — an all-window storm (skew
         only) or an empty plan is a legitimate matrix corner.  Draw
-        order is append-only (crashes, stalls, monitor, skews), so a
-        given ``(seed, args)`` prefix reproduces the same schedule when
-        new storm kinds are added after it."""
+        order is append-only (crashes, stalls, monitor, skews,
+        actuation failures), so a given ``(seed, args)`` prefix
+        reproduces the same schedule when new storm kinds are added
+        after it."""
         rng = np.random.default_rng(seed)
         targets = list(targets)
         if (n_crashes or n_stalls) and not targets:
@@ -148,6 +159,10 @@ class FaultPlan:
                               duration_s=float(skew_s),
                               factor=float(skew_factor))
                    for _ in range(n_skews)]
+        events += [FaultEvent(at_s=float(rng.uniform(*window_s)),
+                              kind="actuation",
+                              target=str(rng.choice(list(act_verbs))))
+                   for _ in range(n_act_fails)]
         return cls(events)
 
     def events(self) -> tuple[FaultEvent, ...]:

@@ -1,0 +1,12 @@
+"""Observability plane: Prometheus-style exporter over the fleet SLO
+mirrors (rates, latency percentiles, burn rates, decision audit).
+
+Everything here reads mirrors the collector and control loop already
+maintain — a scrape never touches the hot path and never causes a
+decision retrace.  See ``exporter.py`` for the endpoints and
+``README.md`` for the metric reference.
+"""
+
+from repro.obs.exporter import MetricsExporter, make_exporter, render_metrics
+
+__all__ = ["MetricsExporter", "make_exporter", "render_metrics"]

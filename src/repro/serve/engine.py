@@ -44,7 +44,6 @@ under the gate condition only — no path holds two lane locks at once.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import threading
 import time
@@ -63,7 +62,7 @@ from repro.models.api import Model
 from repro.serve.qos import BLOCKING, QoSClass, qos_class
 from repro.streams import (CounterArena, FleetMonitorService,
                            FleetMonitorThread, InstrumentedQueue)
-from repro.streams.arena import default_arena
+from repro.streams.arena import default_arena, hist_quantiles
 
 __all__ = ["Request", "ServeConfig", "Engine", "AdmissionGate"]
 
@@ -248,6 +247,13 @@ class _EngineActuator:
                        else c.occupancy_lo for c in cs], np.float32)
         return hi, lo
 
+    def slo_targets(self) -> np.ndarray:
+        """Per-lane latency SLO targets for the burn-rate leg: a QoS
+        class's deadline IS its latency target (NaN = deadline-less
+        class, no SLO) — serve and control share one latency truth."""
+        return np.array([np.nan if c.deadline_s is None else c.deadline_s
+                         for c in self.eng.qos], np.float32)
+
     def pressure(self) -> np.ndarray:
         """Patient lanes feel the hottest non-patient lane's occupancy
         — the shed-patient-traffic-first leg's operand.  Non-patient
@@ -295,7 +301,8 @@ class Engine:
                  admission: Optional[AdmissionPolicy] = None,
                  control_log: Optional[ControlLog] = None,
                  monitor: bool = True,
-                 fault_plan=None):
+                 fault_plan=None,
+                 obs=None):
         self.model = model
         self.params = params
         self.scfg = scfg
@@ -377,8 +384,6 @@ class Engine:
         # -- accounting ------------------------------------------------------
         self._acct_lock = threading.Lock()
         self._lane_stats = {n: _LaneStats() for n in self.class_names}
-        self._latency: dict[str, collections.deque] = {
-            n: collections.deque(maxlen=4096) for n in self.class_names}
         self.served = 0
         # -- bulkhead workers ------------------------------------------------
         self._stop = threading.Event()
@@ -403,6 +408,21 @@ class Engine:
             self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
         else:                           # model-free subclass / harness
             self._prefill = self._decode = None
+        # observability knob (None/False/True/port/dict — see
+        # repro.obs.make_exporter): exposes this engine's fleet mirrors
+        # and (under control=True) its loop on /metrics, labelled by
+        # QoS class.  An externally monitored engine (monitor=False)
+        # is scraped through its ControlGroup's exporter instead.
+        from repro.obs import make_exporter
+        if obs and self.fleet is None:
+            raise ValueError(
+                "obs= on a monitor=False engine has no mirrors to "
+                "export — pass obs= to the owning ControlGroup")
+        self.exporter = make_exporter(
+            obs, service=self.fleet, loop=self.control,
+            names=self.class_names,
+            extra=lambda: {"repro_engine_breaker_open": {
+                n: float(n in self._degraded) for n in self.class_names}})
 
     # ---------------- client API --------------------------------------------
     def submit(self, req: Request, timeout: float = 10.0) -> bool:
@@ -425,17 +445,21 @@ class Engine:
         deadline = time.monotonic() + budget
         req.t_submit = time.monotonic()
         st = self._lane_stats[req.qos]
+        lane = self.lanes[req.qos]
         with self._acct_lock:
             st.submitted += 1
         if not self.gates[req.qos].allow(budget):
+            lane.head.record_error()   # shed / defer-timeout: SLO error
             return False
-        ok = self.lanes[req.qos].push(
+        ok = lane.push(
             req, timeout=max(deadline - time.monotonic(), 0.0))
         with self._acct_lock:
             if ok:
                 st.admitted += 1
             else:
                 st.queue_timeouts += 1
+        if not ok:
+            lane.head.record_error()
         return ok
 
     def start(self):
@@ -443,6 +467,8 @@ class Engine:
             self.monitor_thread.start()
         if self.control is not None:
             self.control.start()
+        if self.exporter is not None:
+            self.exporter.start()
         with self._scale_lock:
             self._started = True
             for n in self.class_names:
@@ -461,6 +487,8 @@ class Engine:
         for w in self.workers():
             if w.ident is not None:
                 w.join(timeout=30)
+        if self.exporter is not None:
+            self.exporter.stop()
         if self.control is not None:
             self.control.stop()
         if self.monitor_thread is not None:
@@ -603,6 +631,7 @@ class Engine:
         if time.monotonic() - r.t_submit <= r.deadline_s:
             return False
         r.done.set()                   # out stays None: caller sees it
+        self.lanes[r.qos].head.record_error()   # deadline miss
         with self._acct_lock:
             self._lane_stats[r.qos].deadline_dropped += 1
         return True
@@ -688,6 +717,7 @@ class Engine:
                 self._serve_batch(batch)
             except Exception as exc:
                 self._record_crash(exc, w)
+                self.lanes[lane_name].head.record_error(len(reqs))
                 for r in reqs:
                     r.done.set()       # r.out stays None: caller sees it
                 return
@@ -711,7 +741,11 @@ class Engine:
             w.borrowed += 1
         with self._acct_lock:
             self._lane_stats[lane_name].served += len(reqs)
-            self._latency[lane_name].extend(lats)
+        if lats:
+            # one batched fold into the lane's arena histogram row — the
+            # single latency truth latency_stats(), the fleet collector
+            # and the control loop's burn-rate leg all read
+            self.lanes[lane_name].head.record_latency(np.asarray(lats))
 
     def _record_crash(self, exc: BaseException,
                       w: Optional[_ServeWorker] = None) -> None:
@@ -796,17 +830,21 @@ class Engine:
                 for n in self.class_names}
 
     def latency_stats(self) -> dict[str, dict[str, float]]:
-        """Per-class submit-to-done latency percentiles over the recent
-        window (empty classes read 0)."""
+        """Per-class submit-to-done latency percentiles (empty classes
+        read 0).  Reads the lane head-slot histogram rows in the shared
+        counter arena — the same columns the fleet collector harvests
+        and the control loop's burn-rate leg consumes — so serve and
+        control report one latency truth.  Percentiles interpolate
+        within log-spaced buckets (cumulative since engine start)."""
         out = {}
-        with self._acct_lock:
-            snap = {n: np.asarray(dq, float)
-                    for n, dq in self._latency.items()}
-        for n, arr in snap.items():
-            if arr.size:
-                out[n] = {"n": int(arr.size),
-                          "p50": float(np.percentile(arr, 50)),
-                          "p99": float(np.percentile(arr, 99))}
+        for n in self.class_names:
+            hist = self.lanes[n].head.latency_histogram()
+            tot = int(hist.sum())
+            if tot:
+                q = hist_quantiles(hist[None, :].astype(np.int64),
+                                   (0.5, 0.99))[0]
+                out[n] = {"n": tot, "p50": float(q[0]),
+                          "p99": float(q[1])}
             else:
                 out[n] = {"n": 0, "p50": 0.0, "p99": 0.0}
         return out

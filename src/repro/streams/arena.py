@@ -4,12 +4,13 @@ The paper instruments each queue end with a non-blocking transaction
 counter ``tc`` and a ``blocked`` flag (§III).  At fleet scale the
 monitor cannot afford to touch S python objects per sampling tick, so
 every monitored end is a *slot view* into one process-wide
-``CounterArena``: three contiguous numpy arrays (``tc``, ``blocked``,
-``bytes_count``) indexed by slot.  Producers and consumers increment
-single cells (single-writer per cell, as in the paper); the fleet
-collector samples every monitored end in a handful of vectorized ops —
-one gather, one fused scale, one zero-fill — with no per-end python
-iteration (the 10^5-queue step).
+``CounterArena``: contiguous per-slot columns (``tc``, ``blocked``,
+``bytes_count``, ``err_count``, and the (S, B) ``lat_hist`` latency
+histogram — see the bucket constants below) indexed by slot.  Producers
+and consumers increment single cells (single-writer per cell, as in the
+paper); the fleet collector samples every monitored end in a handful of
+vectorized ops — one gather, one fused scale, one zero-fill — with no
+per-end python iteration (the 10^5-queue step).
 
 The paper's non-locking copy-and-zero contract carries over unchanged
 to arena cells: a monitor clear racing a cell increment can drop either
@@ -20,6 +21,19 @@ lock guards only *structural* transitions (slot alloc/retire, geometric
 growth) plus the collector's copy-and-zero window, so an arena grow can
 never lose a whole sampling tick; it is never taken on the push/pop hot
 path.
+
+The SLO observability columns ride the same contract with one twist:
+``lat_hist`` (cumulative (S, B) log-bucket latency histogram, fed by
+``record_latency``), ``err_count`` and the (S,) ``lat_count`` change
+detector are **cumulative** — the collector never zeroes them; windows
+are formed downstream by differencing against mirrors, so a torn
+gather costs at worst a one-window delay instead of lost samples.
+``record_latency`` bumps ``lat_count`` strictly AFTER folding the
+histogram row (same thread, program order), so a harvester that sees a
+moved count is guaranteed the entries the bump announces are already
+in the row it gathers — that is what lets the fleet harvest gather
+only (S,) scalars per window and pay for full (B,) rows ONLY on slots
+whose count moved (see ``fleet._refresh_slo_locked``).
 
 Slots are recycled: an ``EndStats`` returns its slot when explicitly
 ``release()``-d (``InstrumentedQueue.close()``) or when garbage
@@ -50,7 +64,103 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["CounterArena", "EndStats", "default_arena"]
+__all__ = ["CounterArena", "EndStats", "default_arena",
+           "LAT_BUCKETS", "LAT_EDGES", "LAT_BOUNDS", "lat_bucket",
+           "hist_quantiles", "hist_over_fraction"]
+
+# -- fixed log-spaced latency buckets (the SLO observability plane) ----------
+#
+# Every slot carries one (LAT_BUCKETS,) row of a contiguous (S, B) int
+# histogram column: bucket 0 is [0, LAT_EDGES[0]), bucket i is
+# [LAT_EDGES[i-1], LAT_EDGES[i]), and the last bucket is the +inf
+# overflow.  The edges are fixed at import time (log-spaced, 100 us to
+# 100 s, ~1.59x per bucket) so every recorder and every reader in the
+# process agrees on the layout and the fleet harvest is pure array math
+# — no per-slot edge metadata, no per-end python state.
+LAT_BUCKETS = 32
+LAT_EDGES = np.logspace(-4.0, 2.0, LAT_BUCKETS - 1)
+# interpolation bounds: LAT_BOUNDS[b] .. LAT_BOUNDS[b+1] brackets bucket
+# b; the open-ended overflow bucket gets one more log step so
+# within-bucket interpolation stays finite there too
+LAT_BOUNDS = np.concatenate((
+    [0.0], LAT_EDGES, [LAT_EDGES[-1] * (LAT_EDGES[-1] / LAT_EDGES[-2])]))
+
+# names of the per-slot arena columns; (S,) unless noted.  _grow /
+# _defragment_locked / slot recycling iterate this tuple so a new
+# column automatically inherits the benign-race growth contract.
+_COLUMNS = ("tc", "blocked", "bytes_count", "err_count", "lat_count",
+            "lat_hist")
+
+
+def lat_bucket(seconds: float) -> int:
+    """Bucket index for one latency sample (scalar or array)."""
+    return np.searchsorted(LAT_EDGES, seconds, side="right")
+
+
+def hist_quantiles(hist: np.ndarray, qs=(0.5, 0.9, 0.99, 0.999)
+                   ) -> np.ndarray:
+    """Per-row quantiles from (R, B) bucket counts via within-bucket
+    linear interpolation against ``LAT_BOUNDS``.  Returns (R, len(qs))
+    seconds; rows with zero observations come back NaN.  Pure
+    vectorized numpy — the fleet harvest calls this once per dispatch
+    for every monitored stream at once."""
+    hist = np.asarray(hist)
+    if hist.ndim == 1:
+        hist = hist[None, :]
+    r, b = hist.shape
+    cum = np.cumsum(hist, axis=1, dtype=np.float64)
+    total = cum[:, -1]
+    lo = LAT_BOUNDS[:-1]
+    width = LAT_BOUNDS[1:] - LAT_BOUNDS[:-1]
+    has = total > 0
+    if not has.any():
+        return np.full((r, len(qs)), np.nan)
+    # all quantiles at once: the (R, K, B) comparison is tiny (B = 32,
+    # K a handful) and one broadcast beats K python-level passes — this
+    # runs on every harvest's fresh rows
+    target = np.asarray(qs, np.float64)[None, :] * total[:, None]
+    # first bucket whose cumulative count reaches each target
+    bi = np.minimum((cum[:, None, :] < target[:, :, None]).sum(axis=2),
+                    b - 1)
+    prev = np.where(bi > 0,
+                    np.take_along_axis(cum, np.maximum(bi - 1, 0), 1),
+                    0.0)
+    cnt = np.take_along_axis(hist, bi, 1)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        frac = np.clip((target - prev) / np.maximum(cnt, 1e-300),
+                       0.0, 1.0)
+    return np.where(has[:, None], lo[bi] + frac * width[bi], np.nan)
+
+
+def hist_over_fraction(hist: np.ndarray, thresholds) -> np.ndarray:
+    """Per-row fraction of observations strictly above ``thresholds``
+    (seconds; scalar or (R,), NaN = no threshold), with the threshold's
+    own bucket apportioned by within-bucket linear interpolation.
+    Rows with zero observations (or a NaN threshold) come back NaN —
+    the burn-rate leg treats those as "no evidence", not "no burn"."""
+    hist = np.asarray(hist)
+    if hist.ndim == 1:
+        hist = hist[None, :]
+    r, b = hist.shape
+    th = np.broadcast_to(np.asarray(thresholds, np.float64), (r,))
+    total = hist.sum(axis=1, dtype=np.float64)
+    safe_th = np.where(np.isfinite(th), th, 0.0)
+    bi = np.minimum(np.searchsorted(LAT_EDGES, safe_th, side="right"),
+                    b - 1)
+    cum = np.cumsum(hist, axis=1, dtype=np.float64)
+    below = np.where(bi > 0,
+                     np.take_along_axis(
+                         cum, np.maximum(bi - 1, 0)[:, None], 1)[:, 0],
+                     0.0)
+    cnt = np.take_along_axis(hist, bi[:, None], 1)[:, 0]
+    lo = LAT_BOUNDS[:-1][bi]
+    width = (LAT_BOUNDS[1:] - LAT_BOUNDS[:-1])[bi]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        infrac = np.clip((safe_th - lo) / np.maximum(width, 1e-300),
+                         0.0, 1.0)
+        over = total - below - infrac * cnt
+        frac = np.clip(over / total, 0.0, 1.0)
+    return np.where((total > 0) & np.isfinite(th), frac, np.nan)
 
 
 class EndStats:
@@ -63,8 +173,8 @@ class EndStats:
     going through the properties.
     """
 
-    __slots__ = ("_arena", "_slot", "_tc", "_blk", "_byt", "_finalizer",
-                 "_pins", "__weakref__")
+    __slots__ = ("_arena", "_slot", "_tc", "_blk", "_byt", "_err",
+                 "_hist", "_cnt", "_finalizer", "_pins", "__weakref__")
 
     def __init__(self, arena: Optional["CounterArena"] = None):
         # monitors that currently gather this slot; weak so a dead
@@ -87,6 +197,9 @@ class EndStats:
         self._tc = arena.tc
         self._blk = arena.blocked
         self._byt = arena.bytes_count
+        self._err = arena.err_count
+        self._hist = arena.lat_hist
+        self._cnt = arena.lat_count
 
     @property
     def arena(self) -> "CounterArena":
@@ -120,6 +233,55 @@ class EndStats:
     @bytes_count.setter
     def bytes_count(self, v) -> None:
         self._byt[self._slot] = v
+
+    @property
+    def err_count(self):
+        return self._err[self._slot]
+
+    @err_count.setter
+    def err_count(self, v) -> None:
+        self._err[self._slot] = v
+
+    def record_latency(self, seconds, n: int = 1) -> None:
+        """Fold latency observations into this slot's histogram row —
+        the hot-path recording primitive (one searchsorted + one cell
+        increment for a scalar, one ``bincount`` fold for a batch),
+        lock-free.  Cumulative: never zeroed by the collector tick,
+        only by slot recycling.  Array ref before slot, like every
+        hot-path write — a record torn by a concurrent grow/defrag
+        lands in the abandoned array (a dropped sample, the benign
+        race), never in another live slot's row.
+
+        The scalar ``lat_count`` cell is bumped AFTER the row: a
+        harvest that observes the new count therefore observes the new
+        entries too (same-thread write order), so the count is a sound
+        change detector — a record torn across a rebind can at worst
+        delay one window's entries to the next count bump, the same
+        single-period tolerance as everything else here."""
+        hist = self._hist
+        cnt = self._cnt
+        slot = self._slot
+        b = np.searchsorted(LAT_EDGES, seconds, side="right")
+        if np.ndim(b):
+            # batch fold: fancy-index += drops duplicate buckets, so
+            # aggregate first; one row-add keeps the torn-write story
+            # identical to the scalar path (one array touched once)
+            hist[slot] += np.bincount(b, minlength=LAT_BUCKETS) * n
+            cnt[slot] += b.size * n
+        else:
+            hist[slot, b] += n
+            cnt[slot] += n
+
+    def record_error(self, n: int = 1) -> None:
+        """Count ``n`` errors (deadline misses, sheds, failures) against
+        this slot — cumulative, same contract as ``record_latency``."""
+        err = self._err
+        err[self._slot] += n
+
+    def latency_histogram(self) -> np.ndarray:
+        """Copy of this slot's cumulative (LAT_BUCKETS,) bucket row."""
+        hist = self._hist
+        return hist[self._slot].copy()
 
     def sample_and_reset(self) -> tuple[float, bool, int]:
         """Monitor-side copy-and-zero of one end (non-locking) — the
@@ -161,6 +323,16 @@ class CounterArena:
         self.tc = np.zeros(capacity)
         self.blocked = np.zeros(capacity, bool)
         self.bytes_count = np.zeros(capacity, np.int64)
+        # SLO plane: per-slot cumulative error counters and fixed-bucket
+        # latency histogram rows — one contiguous (S, B) column so the
+        # fleet harvest is a single row gather (see module header)
+        self.err_count = np.zeros(capacity, np.int64)
+        self.lat_hist = np.zeros((capacity, LAT_BUCKETS), np.int64)
+        # per-slot cumulative observation count, written AFTER the
+        # histogram row by ``record_latency`` — the fleet harvest's
+        # change detector: an (S,) count gather decides which (B,) rows
+        # actually need the expensive (S, B) gather this window
+        self.lat_count = np.zeros(capacity, np.int64)
         # compact when holes exceed this fraction of the live span
         # (<= 0 disables; 1.0 compacts only a fully-dead span)
         self.defrag_threshold = float(defrag_threshold)
@@ -263,6 +435,9 @@ class CounterArena:
             self.tc[slot] = 0.0
             self.blocked[slot] = False
             self.bytes_count[slot] = 0
+            self.err_count[slot] = 0
+            self.lat_hist[slot] = 0
+            self.lat_count[slot] = 0
             self._ends.pop(slot, None)
             self._free.append(slot)
 
@@ -272,9 +447,9 @@ class CounterArena:
         race as the monitor's copy-and-zero, and growth is rare."""
         old_cap = self.capacity
         new_cap = old_cap * 2
-        for name in ("tc", "blocked", "bytes_count"):
+        for name in _COLUMNS:
             old = getattr(self, name)
-            new = np.zeros(new_cap, old.dtype)
+            new = np.zeros((new_cap,) + old.shape[1:], old.dtype)
             new[:old_cap] = old
             setattr(self, name, new)
         self._free.extend(range(new_cap - 1, old_cap - 1, -1))
@@ -342,9 +517,10 @@ class CounterArena:
             return False
         cap = self.capacity
         arrays = {}
-        for name in ("tc", "blocked", "bytes_count"):
+        for name in _COLUMNS:
             old = getattr(self, name)
-            arrays[name] = (old, np.zeros(cap, old.dtype))
+            arrays[name] = (old, np.zeros((cap,) + old.shape[1:],
+                                          old.dtype))
         for slot in live:
             t = target[slot]
             for old, new in arrays.values():

@@ -53,6 +53,19 @@ replicas.  Estimates come back through the Welford-count-gated
 ``on_fleet(indices, rates)`` convergence callback (a scalar per-stream
 ``on_converged(i, rate)`` is kept for compatibility).
 
+The same chunk cadence also harvests the **SLO plane**
+(``_refresh_slo_locked``, run at dispatch/flush — never on the per-tick
+hot path): latency-percentile / error-rate windows are formed by
+differencing the arena's *cumulative* ``lat_hist`` / ``err_count`` /
+``lat_count`` columns against per-service mirrors.  The harvest is
+count-gated — it gathers only the (S,) ``lat_count`` scalars every
+window and pays for full (B,)-row histogram traffic ONLY on slots whose
+count moved, so an idle fleet costs O(S) and a 1%-hot fleet stays a few
+percent of the collector tick even at S=2e5.  Readouts are
+``latency_percentiles()`` / ``latency_counts()`` / ``error_totals()`` /
+``error_rates()`` / ``over_fraction()`` (the control loop's burn-rate
+sense input) and the exporter's single-lock ``obs_snapshot()``.
+
 Lock ordering (deadlock audit, also see ``control.loop``): the
 collector tick takes ``self._lock`` then ``arena.lock`` and releases
 both before firing callbacks; readouts take ``self._lock`` alone;
@@ -81,7 +94,8 @@ from repro.core.controller import DistributionClassifier
 from repro.core.monitor import (FleetMonitorState, MonitorConfig,
                                 fleet_monitor_init, fleet_rate_readout,
                                 gated_rate_arrays, run_monitor_fleet)
-from repro.streams.arena import default_arena
+from repro.streams.arena import (LAT_BUCKETS, default_arena,
+                                 hist_over_fraction, hist_quantiles)
 from repro.streams.queue import InstrumentedQueue
 
 __all__ = ["FleetMonitorService"]
@@ -107,6 +121,10 @@ class FleetMonitorService:
     All monitored queues must back into one ``CounterArena`` (the
     default process-wide arena makes this automatic).
     """
+
+    # harvested quantiles (p50/p90/p99/p999), column order of
+    # ``latency_percentiles()``
+    _QS = (0.5, 0.9, 0.99, 0.999)
 
     def __init__(self, queues: Sequence[InstrumentedQueue],
                  cfg: Optional[MonitorConfig] = None, *,
@@ -225,6 +243,33 @@ class FleetMonitorService:
         self._qbar_np = np.zeros((s,))
         self._nblk_np = np.zeros((s,), np.int64)
         self._ntot_np = np.zeros((s,), np.int64)
+        # SLO-plane mirrors (internal row order, refreshed once per
+        # dispatch by ``_refresh_slo_locked``).  The arena's latency
+        # histograms / error counters are CUMULATIVE — the service never
+        # zeroes them; it differences per-chunk gathers against the
+        # ``*_prev`` snapshots, so the per-tick collector cost is
+        # untouched and two services could in principle window the same
+        # ends independently.
+        self._pctl_np = np.full((s, len(self._QS)), np.nan)
+        self._err_rate_np = np.zeros((s,))
+        self._err_total_np = np.zeros((s,), np.int64)
+        self._lat_count_np = np.zeros((s,), np.int64)
+        # the last chunk window's histogram, SPARSE: (C,) internal rows
+        # that saw observations + their (C, B) window rows.  Dense (s, B)
+        # storage would cost an O(s*B) allocate-and-zero per harvest —
+        # at s=2e5 that alone is several ms, dwarfing the collector tick
+        # — while the window is by construction supported only on the
+        # slots the change detector fired on.  Published by replacement
+        # (both arrays swapped together under the lock), never mutated.
+        self._win_idx = np.empty((0,), np.intp)
+        self._win_hist = np.empty((0, LAT_BUCKETS), np.int64)
+        self._hist_prev = np.zeros((s, LAT_BUCKETS), np.int64)
+        self._err_prev = np.zeros((s,), np.int64)
+        # (S,) observation-count snapshot: the cheap change detector
+        # that keeps the harvest from re-gathering every (B,) histogram
+        # row of a mostly-idle fleet each window
+        self._cnt_prev = np.zeros((s,), np.int64)
+        self._slo_t: Optional[float] = None
 
     def __len__(self) -> int:
         return len(self.queues)
@@ -285,7 +330,14 @@ class FleetMonitorService:
             arena.tc[idx] = 0.0
             arena.blocked[idx] = False
             arena.bytes_count[idx] = 0
+            # the latency/error columns are cumulative (other readers —
+            # Engine.latency_stats — share them), so discard means
+            # re-baselining the window snapshots, not zeroing the cells
+            self._hist_prev = np.array(arena.lat_hist[idx], np.int64)
+            self._err_prev = np.array(arena.err_count[idx], np.int64)
+            self._cnt_prev = np.array(arena.lat_count[idx], np.int64)
         self._last_t = time.monotonic()
+        self._slo_t = None
 
     # -- sampling ---------------------------------------------------------
     def sample(self) -> bool:
@@ -341,6 +393,8 @@ class FleetMonitorService:
         with self._lock:
             if self._col:
                 emits.append(self._dispatch_locked())
+            else:
+                self._refresh_slo_locked()
             emits.append(self._harvest_locked())
         for emit in emits:
             self._fire(emit)
@@ -420,7 +474,10 @@ class FleetMonitorService:
             old_queues, old_ends = self.queues, self._end_stats
             old_state = [np.asarray(leaf) for leaf in self._state]
             old_mirrors = (self._epochs, self._count_np, self._mean_np,
-                           self._qbar_np, self._nblk_np, self._ntot_np)
+                           self._qbar_np, self._nblk_np, self._ntot_np,
+                           self._pctl_np, self._err_rate_np,
+                           self._err_total_np, self._lat_count_np)
+            old_win_idx, old_win_hist = self._win_idx, self._win_hist
             old_row = {id(end): int(self._row_of_stream[i])
                        for i, end in enumerate(old_ends)}
 
@@ -462,10 +519,27 @@ class FleetMonitorService:
             self._init_mirrors()
             for mirror, old in zip(
                     (self._epochs, self._count_np, self._mean_np,
-                     self._qbar_np, self._nblk_np, self._ntot_np),
+                     self._qbar_np, self._nblk_np, self._ntot_np,
+                     self._pctl_np, self._err_rate_np,
+                     self._err_total_np, self._lat_count_np),
                     old_mirrors):
                 if keep.any():
                     mirror[keep] = old[src[keep]]
+            if keep.any() and old_win_idx.size:
+                # re-key the sparse window support: a retained stream
+                # whose old row was in the support keeps its window row
+                # at its new position; dropped streams fall out with it
+                old_pos = np.full(old_mirrors[0].shape[0], -1, np.intp)
+                old_pos[old_win_idx] = np.arange(old_win_idx.size,
+                                                 dtype=np.intp)
+                new_rows = np.flatnonzero(keep)
+                hit = old_pos[src[new_rows]] >= 0
+                self._win_idx = np.array(new_rows[hit], np.intp)
+                self._win_hist = old_win_hist[
+                    old_pos[src[new_rows[hit]]]]
+            # (_hist_prev/_err_prev are re-baselined from the live arena
+            # by _discard_counters_locked below, not carried: retained
+            # streams simply start a fresh window at the restructure)
             self._alloc_staging()
             # per-queue classifier moments follow their queues
             old_q_idx = {id(qu): i for i, qu in enumerate(old_queues)}
@@ -505,6 +579,7 @@ class FleetMonitorService:
         self._col = 0
         self._blocked[:] = True
         emit = self._harvest_locked()   # previous dispatch, now complete
+        self._refresh_slo_locked()      # once per chunk, off the tick
 
         # the estimator consumes (S, cols): one transpose-copy per
         # dispatch, amortized over chunk_t ticks
@@ -555,6 +630,92 @@ class FleetMonitorService:
         # a consumer resolve a stale index against the new fleet
         return tuple((self._end_stats[si], float(ests[r]) / self.period_s)
                      for si, r in zip(streams, newly))
+
+    def _refresh_slo_locked(self) -> None:
+        """Fold the latest latency-histogram / error-counter window into
+        the SLO mirrors (``self._lock`` held).  Under the arena lock the
+        harvest gathers only the (S,) scalar columns (error and
+        observation counts); the per-slot count is the change detector —
+        full (B,) histogram rows are gathered ONLY for slots whose count
+        moved since the previous window, so a mostly-idle 1e5-end fleet
+        pays for its hot ends, not its span.  Runs once per fused
+        dispatch (every ``chunk_t`` ticks), never on the per-tick
+        collector path, with no per-end python loop.
+
+        Windows with zero observations keep their last known percentiles
+        (display stability) but publish a ZERO histogram window, so
+        ``over_fraction`` reports NaN = "no evidence" and the control
+        loop's burn EMA decays toward zero — an idle or fully-shed queue
+        must not pin a stale-hot burn rate forever."""
+        if self.n_streams == 0:
+            return
+        arena = self._arena
+        with arena.lock:
+            if arena.layout_version != self._layout_version:
+                self._rebind_slots_locked()
+            idx = self._slots
+            cnts = np.array(arena.lat_count[idx], np.int64)
+            errs = np.array(arena.err_count[idx], np.int64)
+            # lat_count is written after the row (see record_latency),
+            # so every entry a count bump announces is already in the
+            # row this same gather sees
+            changed = np.flatnonzero(cnts != self._cnt_prev)
+            rows_at = (idx.start + changed if isinstance(idx, slice)
+                       else idx[changed])
+            rows = np.array(arena.lat_hist[rows_at], np.int64)
+        now = time.monotonic()
+        dt = 0.0 if self._slo_t is None else max(now - self._slo_t, 0.0)
+        self._slo_t = now
+        # error deltas, sparse like the histogram window: one (S,)
+        # compare finds the rows that moved, then only those pay the
+        # delta/total/rate arithmetic — the dense (S,) maximum+add+
+        # divide chain was half the idle fold's cost at S=2e5.  A
+        # recycled slot re-zeroes its counter between gathers: clip the
+        # delta at zero rather than folding a huge negative wrap.
+        err_moved = np.flatnonzero(errs != self._err_prev)
+        d_err = (np.maximum(errs[err_moved] - self._err_prev[err_moved],
+                            0) if err_moved.size
+                 else np.empty((0,), np.int64))
+        self._err_prev = errs
+        self._cnt_prev = cnts
+        # mirrors publish by array replacement so readers holding the
+        # old arrays stay internally consistent (same contract as
+        # harvest) — except _pctl_np, which mutates in place and is
+        # only ever indexed under the lock
+        if changed.size:
+            d_rows = np.maximum(rows - self._hist_prev[changed], 0)
+            self._hist_prev[changed] = rows
+            row_tot = d_rows.sum(axis=1)
+            pos = row_tot > 0
+            if pos.any():
+                # the percentile mirror mutates IN PLACE (a full (s, K)
+                # copy per harvest is real money at s=2e5): every reader
+                # — latency_percentiles, obs_snapshot, the restructure
+                # carry — indexes it under ``self._lock``, which this
+                # fold holds, so no torn row is ever observable
+                self._pctl_np[changed[pos]] = hist_quantiles(d_rows[pos],
+                                                             self._QS)
+            lat_count = self._lat_count_np.copy()
+            lat_count[changed] += row_tot
+            self._lat_count_np = lat_count
+            # publish the window sparsely — the hot set and its rows —
+            # so the fold's cost scales with the slots that MOVED, never
+            # with the span (a dense (s, B) publish would re-zero the
+            # whole plane every window)
+            self._win_idx, self._win_hist = changed, d_rows
+        else:
+            # untouched fleet: an empty support set IS the zero window,
+            # and the idle fold stays O(S) scalars, no (S, B) traffic
+            self._win_idx = np.empty((0,), np.intp)
+            self._win_hist = np.empty((0, LAT_BUCKETS), np.int64)
+        if err_moved.size:
+            err_total = self._err_total_np.copy()
+            err_total[err_moved] += d_err
+            self._err_total_np = err_total
+        rate = np.zeros((errs.shape[0],))
+        if dt > 0 and err_moved.size:
+            rate[err_moved] = d_err / dt
+        self._err_rate_np = rate
 
     def _fire(self, emit: tuple) -> None:
         """Run user callbacks outside the lock: a slow or re-entrant
@@ -707,3 +868,103 @@ class FleetMonitorService:
         cv2 = np.asarray(self.classifier.cv2)
         # queues without enough samples fall back to M/M (cv2 = 1)
         return np.where(self.classifier.counts >= 16, cv2, 1.0)
+
+    # -- SLO-plane readouts (latency histograms / errors) -----------------
+    def _rows_for(self, which: str) -> np.ndarray:
+        """Public->internal row map for a stream subset, captured by the
+        caller under ``self._lock`` together with the mirrors it
+        indexes."""
+        rows = self._row_of_stream
+        q = self._public_q(rows.shape[0])
+        if which == "head":
+            return rows[:q]
+        if which == "tail":
+            return rows[q:]
+        if which != "both":
+            raise ValueError(f"bad which {which!r}")
+        return rows
+
+    def latency_percentiles(self, which: str = "head") -> np.ndarray:
+        """(N, 4) seconds — p50/p90/p99/p999 (``_QS``) of the most
+        recent non-empty chunk window, public stream order; NaN until a
+        stream has recorded any latency.  Interpolated within the
+        log-spaced arena buckets (see ``arena.hist_quantiles``)."""
+        with self._lock:
+            return self._pctl_np[self._rows_for(which)]
+
+    def latency_counts(self, which: str = "head") -> np.ndarray:
+        """(N,) cumulative latency observations since monitoring began
+        (window totals accumulated at harvest), public stream order."""
+        with self._lock:
+            return self._lat_count_np[self._rows_for(which)]
+
+    def error_totals(self, which: str = "head") -> np.ndarray:
+        """(N,) cumulative error counts, public stream order."""
+        with self._lock:
+            return self._err_total_np[self._rows_for(which)]
+
+    def error_rates(self, which: str = "head") -> np.ndarray:
+        """(N,) errors/s over the last chunk window, public order."""
+        with self._lock:
+            return self._err_rate_np[self._rows_for(which)]
+
+    def over_fraction(self, thresholds,
+                      which: str = "head") -> np.ndarray:
+        """(N,) fraction of the last chunk window's observations whose
+        latency exceeded ``thresholds`` (seconds, broadcastable to N;
+        NaN threshold = no SLO).  NaN where the window holds no
+        observations — "no evidence", which the control loop's burn EMA
+        treats as zero budget consumption (nothing served = nothing
+        over SLO).  This is the SLO leg's sense input."""
+        with self._lock:
+            rows = np.asarray(self._rows_for(which))
+            win_idx, win_hist = self._win_idx, self._win_hist
+            n_rows = self._epochs.shape[0]
+        out = np.full(rows.shape[0], np.nan)
+        if win_idx.size:
+            # scatter the sparse window support onto the requested rows;
+            # rows outside the support had no observations -> NaN
+            pos = np.full(n_rows, -1, np.intp)
+            pos[win_idx] = np.arange(win_idx.size, dtype=np.intp)
+            hit = pos[rows] >= 0
+            if hit.any():
+                th = np.broadcast_to(
+                    np.asarray(thresholds, float), out.shape)
+                out[hit] = hist_over_fraction(win_hist[pos[rows[hit]]],
+                                              th[hit])
+        return out
+
+    def obs_snapshot(self) -> dict:
+        """One consistent observability snapshot for the exporter: every
+        SLO mirror plus the rate mirrors, captured under a single lock
+        acquisition so a scrape never mixes two harvest generations.
+        Arrays are the internal mirrors permuted to public stream order
+        (mirrors are replaced, never mutated — except the percentile
+        mirror, which mutates in place and is therefore permuted-copied
+        here UNDER the lock; the returned arrays are stable after
+        return)."""
+        with self._lock:
+            rows = self._row_of_stream
+            q = self._public_q(rows.shape[0])
+            epoch, count = self._epochs, self._count_np
+            mean, last = self._mean_np, self._qbar_np
+            pctl = self._pctl_np[rows]
+            err_rate, err_total = self._err_rate_np, self._err_total_np
+            lat_count = self._lat_count_np
+            nblk, ntot = self._nblk_np, self._ntot_np
+            dispatches = self.dispatches
+        rates = gated_rate_arrays(self.cfg, epoch, count, mean, last,
+                                  self.period_s)
+        return {
+            "q": q,
+            "rates": rates[rows],
+            "epochs": epoch[rows],
+            "percentiles": pctl,
+            "quantile_qs": np.array(self._QS),
+            "error_rates": err_rate[rows],
+            "error_totals": err_total[rows],
+            "latency_counts": lat_count[rows],
+            "n_blocked": nblk[rows],
+            "n_total": ntot[rows],
+            "dispatches": dispatches,
+        }

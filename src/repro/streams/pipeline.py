@@ -264,7 +264,8 @@ class Pipeline:
                  policies: Optional[PolicySet] = None,
                  control_log: Optional[ControlLog] = None,
                  monitor: bool = True,
-                 fault_plan=None):
+                 fault_plan=None,
+                 obs=None):
         self.stages = stages
         self.queues: list[InstrumentedQueue] = []
         self.sink: list[Any] = []
@@ -331,6 +332,19 @@ class Pipeline:
                                        self._restart_monitor)
             autotune = False       # the loop owns actuation
         self.autotune = autotune
+        # observability knob (None/False/True/port/dict — see
+        # repro.obs.make_exporter): /metrics over this pipeline's fleet
+        # mirrors (and loop, when control=True), one queue label per
+        # link.  Externally monitored pipelines are scraped through
+        # their ControlGroup's exporter.
+        from repro.obs import make_exporter
+        if obs and self.fleet is None:
+            raise ValueError(
+                "obs= on a monitor=False pipeline has no mirrors to "
+                "export — pass obs= to the owning ControlGroup")
+        self.exporter = make_exporter(
+            obs, service=self.fleet, loop=self.control,
+            names=[q.name for q in self.queues])
 
     def _on_fleet(self, idx: np.ndarray, rates: np.ndarray) -> None:
         """Batched convergence callback (legacy advisory autotuning):
@@ -550,12 +564,16 @@ class Pipeline:
             self.monitor.start()
         if self.control is not None:
             self.control.start()
+        if self.exporter is not None:
+            self.exporter.start()
         with self._scale_lock:
             workers = [w for ws in self._workers for w in ws]
         for w in workers:
             w.start()
         drainer.start()
         drainer.join(timeout_s)
+        if self.exporter is not None:
+            self.exporter.stop()
         if self.control is not None:
             self.control.stop()
         if self.monitor is not None:

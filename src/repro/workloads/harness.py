@@ -14,6 +14,10 @@ with the compiled ``FaultPlan`` interpreted in *simulated* time by
 * ``monitor_death`` -> the harness stops folding samples for the
   outage (estimates freeze exactly as they do when the real monitor
   thread dies);
+* ``actuation``     -> the next matching actuator verb raises
+  ``InjectedFault`` through the shared ``SimActuator.fail_verbs``
+  gate (the loop's retry/rollback must absorb it — same contract as
+  ``ft.inject.FaultyActuator`` on a real stack);
 * ``clock_skew``    -> measured counters are distorted by ``1/factor``
   while the physical system is untouched (the monitor sees a drifted
   clock).
@@ -62,7 +66,7 @@ class StormDriver:
     this period.  Keeps its own audit (the plan object stays pure data
     — the wall-clock consumption API is untouched for real stacks)."""
 
-    def __init__(self, plan):
+    def __init__(self, plan, fail_verbs: Optional[dict] = None):
         evs = sorted(plan.events(), key=lambda e: e.at_s) if plan else []
         self._oneshots = [e for e in evs if e.kind != "clock_skew"]
         self._skews = [e for e in evs if e.kind == "clock_skew"]
@@ -70,6 +74,10 @@ class StormDriver:
         self._stalls: list[tuple[float, SimTandem]] = []
         self._outage_until = -1.0
         self.fired: list[tuple[float, object]] = []
+        # shared {verb: pending-failure count} — the same dict every
+        # tenant's SimActuator gates on, so one "actuation" event fails
+        # exactly the next matching verb the loop issues
+        self.fail_verbs = fail_verbs if fail_verbs is not None else {}
 
     def _sim_for(self, target: str, sims: dict) -> SimTandem:
         return sims.get(target, next(iter(sims.values())))
@@ -91,6 +99,9 @@ class StormDriver:
                 self._stalls.append((t + e.duration_s, sim))
             elif e.kind == "monitor_death":
                 self._outage_until = t + e.duration_s
+            elif e.kind == "actuation":
+                self.fail_verbs[e.target] = (
+                    self.fail_verbs.get(e.target, 0) + 1)
             self.fired.append((t, e))
         f = 1.0
         for e in self._skews:
@@ -171,7 +182,8 @@ def run_cell(scenario: Union[str, Scenario], policy: str = "full",
     sims = {spec.name: sim for spec, sim in built}
     ordered = [sim for _, sim in built]
     plan = storm.build(seed + 7919, T, [spec.name for spec, _ in built])
-    driver = StormDriver(plan)
+    fail_verbs: dict = {}
+    driver = StormDriver(plan, fail_verbs)
     pol = policies if policies is not None else make_policies(
         policy, max_replicas=max_replicas, decide_every=scn.decide_every)
 
@@ -186,7 +198,8 @@ def run_cell(scenario: Union[str, Scenario], policy: str = "full",
                              scale_to_period=False, block_q=8, impl=impl)
         queues = [InstrumentedQueue(8, arena=arena) for _ in ordered]
         for (spec, sim), q in zip(built, queues):
-            group.attach(([q], SimActuator(sim)), name=spec.name)
+            group.attach(([q], SimActuator(sim, fail_verbs=fail_verbs)),
+                         name=spec.name)
 
     served = np.zeros(T)
     wait = np.zeros(T)

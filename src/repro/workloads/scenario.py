@@ -120,12 +120,13 @@ class FaultStorm:
     skew_frac: float = 0.06        # each skew window, fraction of T
     skew_factor: float = 2.0
     monitor_outage_frac: float = 0.0   # >0: monitor death + outage
+    n_act_fails: int = 0           # injected actuation failures
     window: tuple[float, float] = (0.35, 0.6)   # storm window, frac of T
 
     def build(self, seed: int, T: int,
               targets: Sequence[str]) -> Optional[FaultPlan]:
         if not (self.n_crashes or self.n_stalls or self.n_skews
-                or self.monitor_outage_frac > 0):
+                or self.n_act_fails or self.monitor_outage_frac > 0):
             return None
         win = (self.window[0] * T, self.window[1] * T)
         death_at = win[0] if self.monitor_outage_frac > 0 else None
@@ -136,7 +137,8 @@ class FaultStorm:
             n_skews=self.n_skews, skew_s=self.skew_frac * T,
             skew_factor=self.skew_factor,
             monitor_death_at=death_at,
-            monitor_outage_s=self.monitor_outage_frac * T)
+            monitor_outage_s=self.monitor_outage_frac * T,
+            n_act_fails=self.n_act_fails)
 
 
 FAULTS: dict[str, FaultStorm] = {
@@ -144,6 +146,9 @@ FAULTS: dict[str, FaultStorm] = {
     "crash_storm": FaultStorm("crash_storm", n_crashes=3),
     "stall_storm": FaultStorm("stall_storm", n_stalls=4),
     "skew": FaultStorm("skew", n_skews=2, skew_factor=2.0),
+    # actuation failures only: every verb the loop issues may raise —
+    # proves the retry/rollback path under a storm of refused actuations
+    "act_fail": FaultStorm("act_fail", n_act_fails=4),
     # the full soak storm: everything at once, monitor outage included
     "storm": FaultStorm("storm", n_crashes=2, n_stalls=2, n_skews=1,
                         monitor_outage_frac=0.03),

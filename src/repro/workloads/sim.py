@@ -215,13 +215,31 @@ class SimTandem:
 
 class SimActuator:
     """``ControlLoop`` adapter over one simulated tandem (same protocol
-    as ``streams.Pipeline``'s adapter, same rejection contract)."""
+    as ``streams.Pipeline``'s adapter, same rejection contract).
+
+    ``fail_verbs`` is the simulated-time twin of
+    ``ft.inject.FaultyActuator``: a (shareable) ``{verb: count}`` dict
+    of pending injected actuation failures — the scenario harness
+    shares ONE dict across all tenants' actuators and the storm driver,
+    so one ``"actuation"`` event makes exactly the next matching verb
+    raise, whichever tenant the loop actuates first (the loop's
+    retry/rollback path must absorb it)."""
 
     def __init__(self, sim: SimTandem,
-                 max_replicas: Optional[int] = None):
+                 max_replicas: Optional[int] = None,
+                 fail_verbs: Optional[dict] = None):
         self.sim = sim
         self.actions: list[tuple] = []
         self.max_replicas = max_replicas
+        self.fail_verbs = fail_verbs if fail_verbs is not None else {}
+
+    def _gate(self, verb: str) -> None:
+        if self.fail_verbs.get(verb, 0) > 0:
+            self.fail_verbs[verb] -= 1
+            self.actions.append((verb + "-injected-fail", -1))
+            from repro.ft.inject import InjectedFault
+            raise InjectedFault(
+                f"injected actuation failure: {verb} (simulated)")
 
     def replicas(self) -> np.ndarray:
         return np.array([self.sim.replicas], np.int64)
@@ -233,11 +251,13 @@ class SimActuator:
         return np.array([self.sim.occ_high])
 
     def scale(self, i: int, n: int) -> str:
+        self._gate("scale")
         self.actions.append(("scale", int(n)))
         self.sim.replicas = int(n)
         return "applied"
 
     def resize(self, i: int, cap: int) -> str:
+        self._gate("resize")
         if cap < self.sim.backlog:
             self.actions.append(("resize-rejected", int(cap)))
             return "rejected"
@@ -246,6 +266,7 @@ class SimActuator:
         return "applied"
 
     def admit(self, i: int, shed: bool) -> str:
+        self._gate("admit")
         self.actions.append(("shed" if shed else "admit", int(shed)))
         self.sim.shedding = bool(shed)
         return "applied"

@@ -4,10 +4,15 @@ Covers arena slot alloc/retire/reuse and growth-rebinding, the
 vectorized ``FleetMonitorService.sample()`` path under scrambled
 (non-contiguous, unsorted) slot layouts, ``warmup()``'s counter
 discard, double-``flush()`` being a no-op, and the one-arena-per-fleet
-contract.
+contract.  PR 9 adds the latency-histogram columns: bucket-quantile
+accuracy against a sorted oracle, the batch/scalar recording
+equivalence, the benign-race contract under grow/defrag, and the
+collector's count-gated window fold.
 """
 
 import gc
+import threading
+import time
 
 import numpy as np
 import pytest
@@ -15,6 +20,8 @@ import pytest
 from repro.core.monitor import MonitorConfig, run_monitor_fleet
 from repro.streams import (CounterArena, EndStats, FleetMonitorService,
                            InstrumentedQueue)
+from repro.streams.arena import (LAT_BOUNDS, LAT_BUCKETS, hist_quantiles,
+                                 lat_bucket)
 
 
 def _drive(svc, queues, tc, blocked=None):
@@ -277,3 +284,152 @@ def test_live_service_survives_defrag_mid_stream():
     got = svc.service_rates() * svc.period_s
     want = np.asarray(st.last_qbar)
     np.testing.assert_allclose(got[:Q][conv], want[conv], rtol=1e-4)
+
+
+# -- PR 9: per-slot latency histograms (SLO observability plane) -------------
+
+
+def test_latency_histogram_quantiles_vs_sorted_oracle():
+    """Tentpole: bucket-interpolated quantiles must land within one
+    bucket width of the exact sorted-sample quantile — the resolution
+    the log-spaced layout promises, on a realistic heavy-tailed mix."""
+    rng = np.random.default_rng(11)
+    samples = np.exp(rng.normal(-4.0, 1.2, 5000))     # ~67us median tail
+    arena = CounterArena(capacity=4)
+    q = InstrumentedQueue(2, arena=arena)
+    q.head.record_latency(samples)
+    hist = q.head.latency_histogram()
+    assert int(hist.sum()) == samples.size
+    qs = (0.5, 0.9, 0.99, 0.999)
+    est = hist_quantiles(hist[None, :].astype(np.int64), qs)[0]
+    assert np.all(np.diff(est) >= 0)                  # monotone in q
+    for j, p in enumerate(qs):
+        exact = float(np.quantile(samples, p))
+        b = int(lat_bucket(exact))
+        width = LAT_BOUNDS[b + 1] - LAT_BOUNDS[b]
+        assert abs(est[j] - exact) <= width, (p, est[j], exact)
+
+
+def test_hist_quantiles_empty_rows_nan():
+    """A row with zero observations is "no evidence", not "zero
+    latency": NaN, while populated rows interpolate inside their
+    bucket's bounds."""
+    hist = np.zeros((3, LAT_BUCKETS), np.int64)
+    hist[1, 5] = 10
+    out = hist_quantiles(hist)
+    assert np.isnan(out[0]).all() and np.isnan(out[2]).all()
+    assert np.isfinite(out[1]).all()
+    assert (LAT_BOUNDS[5] <= out[1]).all()
+    assert (out[1] <= LAT_BOUNDS[6]).all()
+
+
+def test_record_latency_batch_matches_scalar_fold():
+    """The bincount batch path and the single-cell scalar path must
+    produce identical rows and identical change-detector counts —
+    including underflow (< first edge) and overflow (> last edge)."""
+    arena = CounterArena(capacity=4)
+    qa = InstrumentedQueue(2, arena=arena)
+    qb = InstrumentedQueue(2, arena=arena)
+    samples = np.array([1e-6, 1e-4, 5e-3, 5e-3, 0.2, 3.0, 150.0])
+    qa.head.record_latency(samples, n=3)
+    for s in samples:
+        for _ in range(3):
+            qb.head.record_latency(float(s))
+    np.testing.assert_array_equal(qa.head.latency_histogram(),
+                                  qb.head.latency_histogram())
+    assert arena.lat_count[qa.head.slot] == samples.size * 3
+    assert arena.lat_count[qb.head.slot] == samples.size * 3
+
+
+def test_record_latency_race_with_grow_and_defrag_never_misattributes():
+    """Benign-race contract: a hot recorder racing arena growth,
+    defragmentation and slot recycling may *lose* increments (they land
+    on abandoned arrays) but must never misattribute them to another
+    slot's next owner, and the change-detector count stays consistent
+    with the row."""
+    arena = CounterArena(capacity=4, defrag_threshold=2.0)  # manual defrag
+    hot = InstrumentedQueue(2, arena=arena)
+    stop = threading.Event()
+    recorded = [0]
+
+    def pound():
+        end = hot.head
+        while not stop.is_set():
+            recorded[0] += 1
+            end.record_latency(1e-3)
+
+    th = threading.Thread(target=pound)
+    th.start()
+    try:
+        live = []
+        for _ in range(40):                   # repeated growth rebinding
+            live.append(InstrumentedQueue(2, arena=arena))
+        for q in live[::2]:
+            q.close()                         # punch holes...
+        assert arena.defragment() is True     # ...and move every slot
+        live2 = [InstrumentedQueue(2, arena=arena) for _ in range(10)]
+        # let the recorder land increments on the *post-churn* arrays
+        # too (pre-churn ones may be benignly lost to abandoned arrays)
+        seen = int(hot.head.latency_histogram().sum())
+        deadline = time.monotonic() + 5.0
+        while seen == 0 and time.monotonic() < deadline:
+            time.sleep(0.005)
+            seen = int(hot.head.latency_histogram().sum())
+    finally:
+        stop.set()
+        th.join()
+    hist = hot.head.latency_histogram()
+    total = int(hist.sum())
+    b = int(lat_bucket(1e-3))
+    assert 0 < total <= recorded[0]
+    assert hist[b] == total                   # one bucket, nothing smeared
+    assert int(arena.lat_count[hot.head.slot]) <= recorded[0]
+    # nobody else's row caught a stray increment
+    for q in live[1::2] + live2:
+        assert int(q.head.latency_histogram().sum()) == 0
+        assert int(q.tail.latency_histogram().sum()) == 0
+    hot.close()
+
+
+def test_fleet_window_fold_count_gated():
+    """Collector harvest semantics: percentiles/over-fraction reflect
+    the *last non-empty window* per queue (NaN = never observed), an
+    empty follow-up window reads as no-evidence over-fraction while
+    percentiles hold, and cumulative counts only ever grow."""
+    arena = CounterArena(capacity=8)
+    queues = [InstrumentedQueue(4, arena=arena) for _ in range(3)]
+    svc = FleetMonitorService(queues, MonitorConfig(window=8,
+                                                    min_q_samples=8),
+                              period_s=1e-3, chunk_t=2,
+                              scale_to_period=False, ends="both")
+    svc.sample()
+    svc.sample()                              # anchors the window clock
+    queues[0].head.record_latency(np.full(100, 2e-3))
+    queues[1].head.record_error(7)
+    svc.sample()
+    svc.sample()                              # chunk boundary -> harvest
+
+    p = svc.latency_percentiles(which="head")
+    assert p.shape == (3, 4)
+    assert np.isfinite(p[0]).all()
+    assert np.isnan(p[1]).all() and np.isnan(p[2]).all()
+    over = svc.over_fraction([1e-3, 1e-3, 1e-3], which="head")
+    assert over[0] == pytest.approx(1.0)      # 2e-3 >> 1e-3, whole window
+    assert np.isnan(over[1]) and np.isnan(over[2])
+    np.testing.assert_array_equal(svc.latency_counts(which="head"),
+                                  [100, 0, 0])
+    np.testing.assert_array_equal(svc.error_totals(which="head"),
+                                  [0, 7, 0])
+    assert svc.error_rates(which="head")[1] > 0
+
+    svc.sample()                              # empty window
+    svc.sample()
+    over2 = svc.over_fraction([1e-3, 1e-3, 1e-3], which="head")
+    assert np.isnan(over2).all()              # no evidence anywhere now
+    p2 = svc.latency_percentiles(which="head")
+    np.testing.assert_array_equal(p2[0], p[0])   # held, not wiped
+    np.testing.assert_array_equal(svc.latency_counts(which="head"),
+                                  [100, 0, 0])
+    np.testing.assert_array_equal(svc.error_totals(which="head"),
+                                  [0, 7, 0])
+    assert svc.error_rates(which="head")[1] == 0.0

@@ -957,3 +957,137 @@ def test_engine_control_loop_sheds_submits():
     assert eng.submit(Request(rid=2, tokens=np.zeros(4, np.int32)))
     # capacity advice delegates to the loop's own BufferPolicy
     assert eng.recommended_queue_capacity() == 8
+
+
+# -- PR 9: SLO burn-rate leg (latency-aware scaling) -------------------------
+
+
+def _slo_cfg(**kw):
+    base = dict(confirm_ticks=1, cooldown_ticks=1, block_q=8,
+                slo_enabled=True, slo_fast_ticks=2, slo_slow_ticks=4,
+                max_replicas=16)
+    base.update(kw)
+    return ControlConfig(**base)
+
+
+def test_slo_burn_escalates_on_latency_alone_and_impl_parity():
+    """Tentpole: with throughput balanced (rate formula satisfied), a
+    sustained over-SLO window alone must escalate replicas
+    multiplicatively — and the jit and numpy forms of the same
+    ``_step_math`` must agree bit-for-bit on the decisions and closely
+    on the burn EMAs, with at most one fresh trace."""
+    cfg = _slo_cfg()
+    results = {}
+    for impl in ("numpy", "jit"):
+        state = control_init(cfg, 1)
+        t0 = control_decide_trace_count()
+        targets, burns, hots = [], [], []
+        for _ in range(8):
+            state, dec = control_decide(
+                cfg, state, lam=[100.0], mu=[150.0], ready=[True],
+                replicas=[2], caps=[64], slo_target=[4e-3],
+                over_frac=[1.0], impl=impl, donate=False)
+            targets.append(int(np.asarray(dec.target_replicas)[0])
+                           if np.asarray(dec.scale_mask)[0] else 0)
+            hots.append(bool(np.asarray(dec.slo_hot)[0]))
+            burns.append((float(np.asarray(state.burn_fast)[0]),
+                          float(np.asarray(state.burn_slow)[0])))
+        if impl == "jit":
+            assert control_decide_trace_count() - t0 <= 1
+        results[impl] = (targets, hots, burns)
+    targets, hots, burns = results["numpy"]
+    # formula is quiet (ceil(1.2*100*2/150) == 2 == live replicas), so
+    # every scale decision is the SLO leg's multiplicative escalation
+    fired = [t for t in targets if t]
+    assert fired and all(t == 4 for t in fired)       # 2 * saturation_growth
+    assert any(hots)
+    assert results["jit"][0] == targets
+    assert results["jit"][1] == hots
+    np.testing.assert_allclose(results["jit"][2], burns, rtol=1e-5)
+
+    # contrast: same traffic, within-SLO windows -> the leg stays cold
+    state = control_init(cfg, 1)
+    for _ in range(8):
+        state, dec = control_decide(
+            cfg, state, lam=[100.0], mu=[150.0], ready=[True],
+            replicas=[2], caps=[64], slo_target=[4e-3], over_frac=[0.0],
+            impl="numpy", donate=False)
+        assert not np.asarray(dec.scale_mask)[0]
+        assert not np.asarray(dec.slo_hot)[0]
+
+
+def test_nan_slo_target_never_escalates():
+    """A queue with no SLO (NaN target) must decide exactly like the
+    pre-SLO path no matter what over_frac claims: zero burn, never
+    hot."""
+    cfg = _slo_cfg()
+    state = control_init(cfg, 1)
+    for _ in range(6):
+        state, dec = control_decide(
+            cfg, state, lam=[100.0], mu=[150.0], ready=[True],
+            replicas=[2], caps=[64], slo_target=[np.nan], over_frac=[1.0],
+            impl="numpy", donate=False)
+        assert not np.asarray(dec.scale_mask)[0]
+        assert not np.asarray(dec.slo_hot)[0]
+        assert float(np.asarray(state.burn_fast)[0]) == 0.0
+        assert float(np.asarray(state.burn_slow)[0]) == 0.0
+
+
+def test_slo_cooldown_holds_then_steps_down_one_notch():
+    """After a burn episode the slow window must freeze scale-down
+    (handing capacity straight back would re-ignite the violation),
+    then release into ONE multiplicative notch per confirmed step —
+    16 -> 8 -> 4 -> 2 — never a snap to the latency-blind formula."""
+    cfg = _slo_cfg(slo_slow_ticks=8)
+
+    def run(slo_target):
+        state = control_init(cfg, 1)
+        reps, downs, first_down = 16, [], None
+        for t in range(60):
+            over = 1.0 if t < 3 else 0.0
+            # mu = 100*reps keeps the formula target pinned at 2:
+            # ceil(1.2 * 100 * reps / (100 * reps)) == 2
+            state, dec = control_decide(
+                cfg, state, lam=[100.0], mu=[100.0 * reps],
+                ready=[True], replicas=[reps], caps=[64],
+                slo_target=[slo_target], over_frac=[over],
+                impl="numpy", donate=False)
+            if np.asarray(dec.scale_mask)[0]:
+                tgt = int(np.asarray(dec.target_replicas)[0])
+                if tgt < reps:
+                    downs.append(tgt)
+                    if first_down is None:
+                        first_down = t
+                reps = tgt               # actuate
+        return downs, first_down
+
+    downs, first_down = run(slo_target=4e-3)
+    assert downs == [8, 4, 2]            # one notch per confirmed step
+    assert first_down is not None and first_down > 10   # slow-window hold
+
+    # contrast: no SLO armed -> the formula snaps straight down
+    downs, first_down = run(slo_target=np.nan)
+    assert downs[:1] == [2]
+    assert first_down <= 2
+
+
+def test_empty_window_burn_decays_and_releases():
+    """NaN over_frac (nothing served) folds as zero budget consumption:
+    the burn EMAs decay instead of pinning, and slo_hot releases once
+    the fast window cools below slo_burn_lo."""
+    cfg = _slo_cfg()
+    state = control_init(cfg, 1)
+    kw = dict(lam=[100.0], mu=[1600.0], ready=[True], replicas=[16],
+              caps=[64], slo_target=[4e-3], impl="numpy", donate=False)
+    for _ in range(3):
+        state, dec = control_decide(cfg, state, over_frac=[1.0], **kw)
+    assert np.asarray(dec.slo_hot)[0]
+    bf = float(np.asarray(state.burn_fast)[0])
+    assert bf > cfg.slo_burn_hi
+    for _ in range(16):
+        state, dec = control_decide(cfg, state, over_frac=[np.nan], **kw)
+        nbf = float(np.asarray(state.burn_fast)[0])
+        assert nbf < bf
+        bf = nbf
+    assert not np.asarray(dec.slo_hot)[0]
+    assert bf < cfg.slo_burn_lo

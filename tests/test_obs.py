@@ -1,0 +1,209 @@
+"""Prometheus-style observability plane (repro.obs) — PR 9.
+
+Covers: well-formed text exposition (every sample line parses, one
+HELP/TYPE per family), the single-snapshot consistency surface over
+the fleet SLO mirrors, the three HTTP endpoints (/metrics,
+/control_log drain with ring-drop acknowledgement, /healthz), the
+``obs=`` knob resolution shared by Engine/ControlGroup/Pipeline, and
+the monitor=False rejection.
+"""
+
+import json
+import re
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.control import (ControlGroup, ControlLog, ControlLoop,
+                           ControlRecord, PolicySet, ReplicaPolicy,
+                           SLOPolicy)
+from repro.core.monitor import MonitorConfig
+from repro.obs import MetricsExporter, make_exporter, render_metrics
+from repro.streams import (CounterArena, FleetMonitorService,
+                           InstrumentedQueue, Pipeline, Stage)
+
+# one exposition sample line: name{label="v",...} value
+SAMPLE = re.compile(
+    r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+    r'(\{[a-zA-Z_][a-zA-Z0-9_]*="[^"]*"'
+    r'(,[a-zA-Z_][a-zA-Z0-9_]*="[^"]*")*\})? '
+    r'(NaN|[+-]Inf|-?\d+(\.\d+)?([eE][+-]?\d+)?)$')
+
+
+def _assert_well_formed(text):
+    families = []
+    for line in text.splitlines():
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            if line.startswith("# HELP "):
+                families.append(line.split()[2])
+            continue
+        assert SAMPLE.match(line), f"malformed sample line: {line!r}"
+    assert len(families) == len(set(families)), "HELP emitted twice"
+    return families
+
+
+def _stack():
+    """Tiny fleet + control loop with real harvested latency/errors."""
+    arena = CounterArena(8)
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(2)]
+    svc = FleetMonitorService(queues, MonitorConfig(window=8,
+                                                    min_q_samples=8),
+                              period_s=1e-3, chunk_t=2,
+                              scale_to_period=False, ends="both")
+    class _Act:
+        def replicas(self):
+            return np.array([1, 1], np.int64)
+
+        def capacities(self):
+            return np.array([8, 8], np.int64)
+
+        def occupancy(self):
+            return np.zeros(2)
+
+        def scale(self, i, n):
+            return "applied"
+
+        def resize(self, i, cap):
+            return "applied"
+
+        def admit(self, i, shed):
+            return "applied"
+
+    loop = ControlLoop(svc, PolicySet(replica=ReplicaPolicy(),
+                                      slo=SLOPolicy(target_s=4e-3),
+                                      block_q=8), _Act())
+    svc.sample()
+    svc.sample()                          # anchor the SLO window clock
+    queues[0].head.record_latency(np.full(50, 2e-3))
+    queues[1].head.record_error(3)
+    svc.sample()
+    svc.sample()                          # chunk boundary -> harvest
+    loop.tick()
+    return arena, queues, svc, loop
+
+
+def test_render_metrics_well_formed_and_complete():
+    _, queues, svc, loop = _stack()
+    loop.log.append(ControlRecord(
+        t=0.0, tick=0, queue=0, policy="replicas", observed_lam=1.0,
+        observed_mu=2.0, action="scale", value=3, outcome="applied"))
+    text = render_metrics(svc, loop, names=["alpha", "beta"])
+    families = _assert_well_formed(text)
+    for fam in ("repro_stream_rate_items_per_s", "repro_latency_seconds",
+                "repro_latency_observations_total", "repro_errors_total",
+                "repro_error_rate_per_s", "repro_periods_total",
+                "repro_monitor_dispatches_total", "repro_slo_burn_rate",
+                "repro_slo_target_seconds", "repro_control_ticks_total",
+                "repro_control_log_dropped_total",
+                "repro_control_decisions_total",
+                "repro_exporter_scrapes_total"):
+        assert fam in families, f"missing family {fam}"
+    # queue labels carry the caller's names
+    assert 'queue="0",name="alpha"' in text
+    # the harvested window is in the exposition: 50 observations on
+    # queue 0, 3 errors on queue 1, NaN percentiles where never observed
+    assert ('repro_latency_observations_total'
+            '{queue="0",name="alpha"} 50') in text
+    assert 'repro_errors_total{queue="1",name="beta"} 3' in text
+    assert re.search(r'repro_latency_seconds\{queue="0",name="alpha",'
+                     r'quantile="0\.5"\} 0\.00\d', text)
+    assert re.search(r'repro_latency_seconds\{queue="1",name="beta",'
+                     r'quantile="0\.5"\} NaN', text)
+    assert 'repro_control_decisions_total{policy="replicas"'in text
+
+
+def test_exporter_http_endpoints():
+    _, queues, svc, loop = _stack()
+    log = loop.log
+    for i in range(5):
+        log.append(ControlRecord(
+            t=float(i), tick=i, queue=0, policy="replicas", observed_lam=1.0,
+            observed_mu=2.0, action="scale", value=2, outcome="noop"))
+    with MetricsExporter(service=svc, loop=loop) as ex:
+        assert ex.port and ex.url
+        r = urllib.request.urlopen(ex.url + "/metrics", timeout=10)
+        assert r.status == 200
+        assert r.headers["Content-Type"].startswith("text/plain")
+        _assert_well_formed(r.read().decode())
+
+        h = json.loads(urllib.request.urlopen(
+            ex.url + "/healthz", timeout=10).read())
+        assert h["ok"] is True and h["ticks"] >= 1
+
+        lines = urllib.request.urlopen(
+            ex.url + "/control_log", timeout=10).read().decode()
+        recs = [json.loads(ln) for ln in lines.splitlines()]
+        ts = [r["t"] for r in recs if r.get("policy") == "replicas"]
+        assert ts == [float(i) for i in range(5)]
+        # the drain cursor advanced: a second GET returns nothing new
+        again = urllib.request.urlopen(
+            ex.url + "/control_log", timeout=10).read().decode()
+        assert again == ""
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(ex.url + "/nope", timeout=10)
+    assert ex.port is None                # stopped
+
+
+def test_control_log_endpoint_acknowledges_ring_drops():
+    log = ControlLog(capacity=2)
+    for i in range(5):
+        log.append(ControlRecord(
+            t=float(i), tick=i, queue=0, policy="loop", observed_lam=0.0,
+            observed_mu=0.0, action="tick", value=0, outcome="observed"))
+    assert log.dropped_total == 3
+    with MetricsExporter(log=log) as ex:
+        lines = urllib.request.urlopen(
+            ex.url + "/control_log", timeout=10).read().decode()
+    recs = [json.loads(ln) for ln in lines.splitlines()]
+    assert recs[0] == {"dropped": 3}      # holes acknowledged, not silent
+    assert [r["t"] for r in recs[1:]] == [3.0, 4.0]
+
+
+def test_make_exporter_knob_forms():
+    assert make_exporter(None) is None
+    assert make_exporter(False) is None
+    ex = make_exporter(True)
+    assert isinstance(ex, MetricsExporter) and ex.port is None
+    ex = make_exporter(9137)
+    assert ex._want_port == 9137          # int = that port (not started)
+    ex = make_exporter({"host": "127.0.0.1"}, port=7)
+    assert ex.host == "127.0.0.1" and ex._want_port == 7
+    adopted = MetricsExporter()
+    assert make_exporter(adopted) is adopted
+    with pytest.raises(TypeError, match="obs="):
+        make_exporter("yes")
+
+
+def test_group_obs_knob_wires_shared_mirrors():
+    group = ControlGroup(PolicySet(replica=ReplicaPolicy(), block_q=8),
+                         arena=CounterArena(8),
+                         monitor_cfg=MonitorConfig(window=8,
+                                                   min_q_samples=8),
+                         obs=True)
+    try:
+        ex = group.exporter
+        assert isinstance(ex, MetricsExporter)
+        assert ex.service is group.service and ex.loop is group.loop
+        _assert_well_formed(ex.render())  # renders even while fleet empty
+    finally:
+        group.stop()
+    off = ControlGroup(PolicySet(replica=ReplicaPolicy(), block_q=8),
+                       arena=CounterArena(8),
+                       monitor_cfg=MonitorConfig(window=8,
+                                                 min_q_samples=8))
+    assert off.exporter is None
+    off.stop()
+
+
+def test_pipeline_obs_requires_monitor():
+    with pytest.raises(ValueError, match="monitor=False"):
+        Pipeline([Stage("src", source=range(4)),
+                  Stage("id", fn=lambda x: x)], capacity=8,
+                 arena=CounterArena(8), monitor=False, obs=True)
+    pipe = Pipeline([Stage("src", source=range(4)),
+                     Stage("id", fn=lambda x: x)], capacity=8,
+                    arena=CounterArena(8), obs=True)
+    assert isinstance(pipe.exporter, MetricsExporter)
+    assert pipe.exporter.service is pipe.fleet

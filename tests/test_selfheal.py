@@ -267,7 +267,7 @@ def test_admission_failure_rolls_back_gate_memory():
     zb = np.zeros(1, bool)
     dec = Decision(target_replicas=z, scale_mask=zb, target_caps=z,
                    resize_mask=zb, shed=np.ones(1, bool), straggler=zb,
-                   probing=zb)
+                   probing=zb, slo_hot=zb)
     loop._actuate(dec, np.zeros(1), np.zeros(1),
                   np.ones(1, np.int64), np.full(1, 64, np.int64))
     # the shed flip failed: memory stays False (retried next tick) and

@@ -62,3 +62,37 @@ def test_engine_monitor_surfaces_rates(engine):
     # after the previous tests the request-queue monitor has samples
     assert eng.queue.head.tc >= 0
     assert eng.recommended_queue_capacity() >= 1
+
+
+def test_engine_latency_stats_reads_arena_histograms(engine):
+    """PR 9 satellite: latency_stats() reads the lane head-slot
+    histogram rows in the shared counter arena — the same columns the
+    fleet collector harvests — so serve and control report one latency
+    truth, with bucket-interpolated percentiles."""
+    from repro.streams.arena import hist_quantiles
+    eng, model, params, cfg = engine
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=1000 + i,
+                    tokens=rng.integers(0, cfg.vocab_size, size=8),
+                    max_new=2) for i in range(3)]
+    for r in reqs:
+        assert eng.submit(r)
+    for r in reqs:
+        assert r.done.wait(timeout=120)
+    stats = eng.latency_stats()
+    assert set(stats) == set(eng.class_names)
+    total = 0
+    for n in eng.class_names:
+        hist = eng.lanes[n].head.latency_histogram()
+        s = stats[n]
+        assert s["n"] == int(hist.sum())          # arena is the truth
+        if s["n"]:
+            q = hist_quantiles(hist[None, :].astype(np.int64),
+                               (0.5, 0.99))[0]
+            assert s["p50"] == pytest.approx(float(q[0]))
+            assert s["p99"] == pytest.approx(float(q[1]))
+            assert 0 < s["p50"] <= s["p99"]
+        else:
+            assert s["p50"] == 0.0 and s["p99"] == 0.0
+        total += s["n"]
+    assert total >= 3                             # our requests landed

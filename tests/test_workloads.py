@@ -22,9 +22,9 @@ import pytest
 from repro.control import ControlLog, ControlRecord
 from repro.ft import FaultEvent, FaultPlan, InjectedFault
 from repro.workloads import (Boxcar, Constant, Diurnal, FlashCrowd,
-                             ParetoService, Ramp, SimTandem, Square, Step,
-                             StormDriver, Trace, make_policies, replay,
-                             run_cell, run_matrix)
+                             ParetoService, Ramp, SimActuator, SimTandem,
+                             Square, Step, StormDriver, Trace, make_policies,
+                             replay, run_cell, run_matrix)
 
 # -- arrival envelopes ------------------------------------------------------
 
@@ -368,3 +368,60 @@ def test_engine_monitor_watchdog_restarts_dead_thread():
         assert eng.control.health()["monitor_restarts"] == 1
     finally:
         eng.stop()
+
+
+# -- PR 9: injected actuation failures (sim-time twin of FaultyActuator) -----
+
+
+def test_sim_actuator_injected_failure_consumed_once():
+    """A pending failure makes exactly ONE matching verb raise before
+    actuating anything; the next call goes through — the retry contract
+    the control loop's rollback path is built against."""
+    sim = SimTandem(0, Constant(100), Constant(60), 2, 64)
+    act = SimActuator(sim, fail_verbs={"scale": 1})
+    with pytest.raises(InjectedFault):
+        act.scale(0, 5)
+    assert sim.replicas == 2               # failed verb actuated nothing
+    assert act.fail_verbs["scale"] == 0
+    assert act.scale(0, 5) == "applied"    # consumed: next call applies
+    assert sim.replicas == 5
+    assert ("scale-injected-fail", -1) in act.actions
+
+
+def test_storm_driver_routes_actuation_events_to_shared_gate():
+    """An "actuation" storm event lands in the shared fail_verbs dict
+    (sim-time twin of FaultyActuator): every actuator gating on that
+    dict sees it, and the first matching verb consumes it."""
+    plan = FaultPlan([FaultEvent(1.0, "actuation", "scale"),
+                      FaultEvent(1.0, "actuation", "resize")])
+    fail: dict = {}
+    drv = StormDriver(plan, fail)
+    sims = {"a": SimTandem(0, Constant(10), Constant(10), 2, 64)}
+    act = SimActuator(sims["a"], fail_verbs=fail)
+    assert drv.apply(0.0, sims)
+    assert fail == {}
+    drv.apply(1.0, sims)
+    assert fail == {"scale": 1, "resize": 1}
+    with pytest.raises(InjectedFault):
+        act.scale(0, 3)
+    with pytest.raises(InjectedFault):
+        act.resize(0, 32)
+    assert act.scale(0, 3) == "applied"
+    assert act.resize(0, 128) == "applied"
+    assert drv.fired_kinds == ["actuation", "actuation"]
+
+
+def test_chaos_act_fail_draws_append_only_and_verb_targeted():
+    """n_act_fails extends a chaos schedule without disturbing the
+    earlier draws (seed-prefix stability), and each event targets an
+    actuator verb, not a stage."""
+    base = FaultPlan.chaos(seed=5, targets=["a"], n_crashes=2, n_stalls=1)
+    more = FaultPlan.chaos(seed=5, targets=["a"], n_crashes=2, n_stalls=1,
+                           n_act_fails=3)
+    key = lambda e: (e.at_s, e.kind, e.target, e.duration_s)  # noqa
+    small = sorted(key(e) for e in base.events())
+    big = sorted(key(e) for e in more.events())
+    assert all(k in big for k in small)
+    acts = [e for e in more.events() if e.kind == "actuation"]
+    assert len(acts) == 3
+    assert all(e.target in ("scale", "resize", "admit") for e in acts)

@@ -42,6 +42,11 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Contract analyzer gate: lock-order, layering, benign-race, retrace
+# and style checkers over the whole tree (see src/repro/analysis/).
+# The baseline ships empty, so any finding fails the smoke.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m repro.analysis src/
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q
 
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \

@@ -1,0 +1,157 @@
+"""LayerGuard: machine-enforced import DAG for the ``repro`` package.
+
+The layering contract (previously prose scattered across module
+headers):
+
+* ``obs`` is dependency-free — it imports nothing from ``repro`` so a
+  broken control plane can still be scraped.
+* ``streams`` and ``serve`` never import ``repro.ft`` (fault tolerance
+  reaches *down* via duck typing, never up) and never import
+  ``repro.control`` at module level — the wiring inversion where a
+  pipeline/engine constructs its own control loop is confined to
+  function-local imports annotated ``# layer-ok: <reason>``, which
+  keeps the module graph acyclic (``control.group`` imports
+  ``streams.fleet``).
+* Everything else follows ``ALLOWED`` below: an import is legal iff
+  the importee's layer is in the importer's allow-set.
+
+LG001  module-level import outside the DAG (no annotation can sanction)
+LG002  ``repro.obs`` importing from ``repro``
+LG003  ``streams``/``serve`` importing ``repro.ft`` (banned even lazily)
+LG004  function-level upward import without a ``# layer-ok:`` annotation
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set
+
+from .model import Checker, Finding, Source
+
+# importer layer -> layers it may import from (module level)
+ALLOWED: Dict[str, Set[str]] = {
+    "": set(),                       # repro/__init__.py
+    "analysis": {"analysis"},
+    "configs": {"configs"},
+    "core": {"core", "configs", "kernels"},
+    "obs": {"obs"},
+    "dist": {"dist", "configs"},
+    "ckpt": {"ckpt"},
+    "kernels": {"kernels", "core", "configs"},
+    "streams": {"streams", "core", "configs"},
+    "data": {"data", "streams", "core"},
+    "models": {"models", "configs", "dist", "core"},
+    "serve": {"serve", "streams", "core", "models", "configs"},
+    "control": {"control", "streams", "core", "obs", "configs"},
+    "ft": {"ft", "control", "streams", "core", "configs"},
+    "roofline": {"roofline", "configs", "core"},
+    "train": {"train", "core", "ckpt", "ft", "models", "dist", "configs",
+              "data"},
+    "launch": {"launch", "configs", "dist", "models", "roofline", "train",
+               "core"},
+    "workloads": {"workloads", "core", "streams", "control", "ft",
+                  "serve", "obs", "configs"},
+}
+
+# layers that may additionally be imported function-locally when the
+# import line carries a ``# layer-ok: <reason>`` annotation — the
+# audited wiring/observability inversion points
+LAZY_ALLOWED: Dict[str, Set[str]] = {
+    "streams": {"control", "obs"},
+    "serve": {"control", "obs", "qos"},
+    "control": {"obs"},
+    "core": {"obs"},
+    "ft": {"obs"},
+}
+
+# hard bans that no annotation can sanction
+FORBIDDEN: Dict[str, Set[str]] = {
+    "streams": {"ft"},
+    "serve": {"ft"},
+    "obs": {l for l in ALLOWED if l and l != "obs"},
+}
+
+
+def layer_of(rel: str) -> Optional[str]:
+    """'streams' for 'repro/streams/queue.py'; None off-package."""
+    parts = rel.split("/")
+    if not parts or parts[0] != "repro":
+        return None
+    return parts[1].removesuffix(".py") if len(parts) > 1 else ""
+
+
+class LayerGuard(Checker):
+    name = "LayerGuard"
+
+    def check(self, src: Source) -> Iterator[Finding]:
+        layer = layer_of(src.rel)
+        if layer is None or layer == "__init__":
+            return
+        allowed = ALLOWED.get(layer, set())
+        lazy = LAZY_ALLOWED.get(layer, set())
+        forbidden = FORBIDDEN.get(layer, set())
+        for node, depth in _imports(src.tree):
+            target = _target_layer(node, src.rel)
+            if target is None or target in allowed:
+                continue
+            if target in forbidden:
+                code = "LG002" if layer == "obs" else "LG003"
+                yield self.finding(
+                    code, src, node,
+                    f"layer '{layer}' must never import repro.{target} "
+                    f"(hard ban; see repro.analysis.layering)")
+            elif depth == 0:
+                yield self.finding(
+                    "LG001", src, node,
+                    f"module-level import of repro.{target} from layer "
+                    f"'{layer}' breaks the import DAG — move it into "
+                    f"the function that needs it and annotate "
+                    f"'# layer-ok: <reason>'")
+            elif target not in lazy:
+                yield self.finding(
+                    "LG004", src, node,
+                    f"function-level import of repro.{target} from "
+                    f"layer '{layer}' is not a sanctioned inversion "
+                    f"point (see LAZY_ALLOWED)")
+            elif src.annotation(node.lineno, "layer-ok") in (None, ""):
+                yield self.finding(
+                    "LG004", src, node,
+                    f"lazy import of repro.{target} from layer "
+                    f"'{layer}' needs a '# layer-ok: <reason>' "
+                    f"annotation naming why the inversion is safe")
+
+
+def _imports(tree: ast.AST):
+    """(import-node, function-nesting-depth) for every import."""
+    def walk(node, depth):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.Import, ast.ImportFrom)):
+                yield child, depth
+            elif isinstance(child, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+                yield from walk(child, depth + 1)
+            else:
+                yield from walk(child, depth)
+    yield from walk(tree, 0)
+
+
+def _target_layer(node, rel: str) -> Optional[str]:
+    """Layer a repro-import lands in, else None for stdlib/third-party."""
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            parts = alias.name.split(".")
+            if parts[0] == "repro":
+                return parts[1] if len(parts) > 1 else ""
+        return None
+    mod = node.module or ""
+    if node.level:                   # relative: resolve against rel
+        base = rel.split("/")[:-1]   # package dirs, e.g. repro/streams
+        base = base[:len(base) - (node.level - 1)] if node.level > 1 \
+            else base
+        full = base + (mod.split(".") if mod else [])
+        if full and full[0] == "repro":
+            return full[1] if len(full) > 1 else ""
+        return None
+    parts = mod.split(".")
+    if parts[0] == "repro":
+        return parts[1] if len(parts) > 1 else ""
+    return None

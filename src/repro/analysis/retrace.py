@@ -1,0 +1,435 @@
+"""RetraceSentinel: static checks for the jit-dispatch contracts that
+keep the control plane at one trace per configuration, plus a sibling
+style pass (monotonic durations, scoped broad-except hygiene).
+
+The repo's two jit surfaces are declared in ``JIT_CONTRACTS``:
+
+* ``control/policy.py`` — ``_decide_step``'s jitted ``step`` closure
+  calling ``_step_math`` (and its helpers);
+* ``core/monitor.py`` / ``kernels/monitor/ops.py`` — the fleet
+  dispatch's ``step`` closure into ``_fleet_monitor_scan_impl``.
+
+For each contract the checker walks the module-local call graph from
+the declared roots and flags, inside that traced region:
+
+RS001  unhashable values reaching ``static_argnums``/``static_argnames``
+       (mutable default on a static parameter, or a list/dict/set/
+       ``np.array`` literal passed at a static position of a jitted
+       callable)
+RS002  a Python ``if``/``while``/``assert`` conditioned on a traced
+       operand — a data-dependent branch that either retraces per value
+       or fails under jit (``is None`` presence checks, ``isinstance``,
+       and static attributes ``.shape``/``.ndim``/``.dtype``/``.size``
+       and ``len()`` are trace-time constants and allowed)
+RS003  a donated buffer read after its dispatch — the donation registry
+       covers direct ``jax.jit(..., donate_argnums=...)`` results and
+       ``control_decide(..., donate=True)``; rebinding the name in the
+       call statement (``state, out = step(state, ...)``) is the
+       sanctioned pattern
+
+Style pass (``StylePass``):
+
+ST101  ``time.time()`` call without a ``# wall-clock: <reason>``
+       annotation — durations must use ``time.monotonic()``; wall
+       clocks are for cross-process timestamps only
+ST102  ``except Exception``/bare ``except`` in ``train``/``launch``
+       without a ``# crash-containment: <reason>`` annotation
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, Iterator, List, Optional, Set, Tuple
+
+from .model import Checker, Finding, Source, dotted_name
+
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+_STATIC_CALLS = {"len", "isinstance", "getattr", "hasattr", "type"}
+
+
+@dataclasses.dataclass(frozen=True)
+class JitContract:
+    module: str                 # path suffix, e.g. "control/policy.py"
+    roots: Tuple[str, ...]      # functions whose bodies are traced
+    traced: FrozenSet[str]      # parameter names that are traced operands
+
+
+JIT_CONTRACTS: Tuple[JitContract, ...] = (
+    JitContract(
+        module="control/policy.py",
+        roots=("_step_math",),
+        traced=frozenset({
+            "state", "lam", "mu", "ready", "replicas", "rep_basis",
+            "caps", "cv2", "occupancy", "saturated", "scalable",
+            "fleet_med", "stale", "faulty", "leg_rep", "leg_buf",
+            "leg_adm", "headroom", "max_reps", "occ_hi", "occ_lo",
+            "pressure", "slo_target", "over_frac", "current",
+        })),
+    JitContract(
+        module="core/monitor.py",
+        roots=("step",),
+        traced=frozenset({"state", "tc", "blocked"})),
+    JitContract(
+        module="kernels/monitor/ops.py",
+        roots=("_fleet_monitor_scan_impl",),
+        traced=frozenset({"state", "tc", "blocked", "tc_seq",
+                          "blocked_seq", "carry"})),
+)
+
+# eager API entry points that donate a positional argument when called
+# with ``donate=True``: name -> donated positional index
+DONATING_CALLS: Dict[str, int] = {"control_decide": 1}
+
+
+class RetraceSentinel(Checker):
+    name = "RetraceSentinel"
+
+    def check(self, src: Source) -> Iterator[Finding]:
+        contracts = [c for c in JIT_CONTRACTS
+                     if src.rel.endswith(c.module)]
+        for contract in contracts:
+            yield from self._check_contract(src, contract)
+        yield from self._check_static_args(src)
+        yield from self._check_donation(src)
+
+    # -- RS002: traced-value branches --------------------------------------
+    def _check_contract(self, src, contract) -> Iterator[Finding]:
+        fns = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.FunctionDef):
+                fns.setdefault(node.name, node)
+        region: Set[str] = set()
+        queue = [r for r in contract.roots if r in fns]
+        while queue:
+            name = queue.pop()
+            if name in region:
+                continue
+            region.add(name)
+            for call in (n for n in ast.walk(fns[name])
+                         if isinstance(n, ast.Call)):
+                callee = call.func.id if isinstance(call.func, ast.Name) \
+                    else None
+                if callee in fns and callee not in region:
+                    queue.append(callee)
+        for name in sorted(region):
+            yield from self._check_traced_fn(src, fns[name],
+                                             contract.traced)
+
+    def _check_traced_fn(self, src, fn, vocab) -> Iterator[Finding]:
+        tainted = {a.arg for a in fn.args.args if a.arg in vocab}
+        if fn.args.kwarg is not None and fn.args.kwarg.arg == "operands":
+            tainted.add("operands")
+        if not tainted:
+            return
+        # propagate through simple assignments until stable
+        for _ in range(3):
+            grew = False
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    if self._expr_tainted(node.value, tainted):
+                        for t in node.targets:
+                            for n in ast.walk(t):
+                                if isinstance(n, ast.Name) \
+                                        and n.id not in tainted:
+                                    tainted.add(n.id)
+                                    grew = True
+            if not grew:
+                break
+        for node in ast.walk(fn):
+            test = None
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+            if test is None or self._presence_check(test):
+                continue
+            if self._expr_tainted(test, tainted):
+                kind = type(node).__name__.lower()
+                yield self.finding(
+                    "RS002", src, node,
+                    f"python {kind} conditioned on traced operand(s) "
+                    f"inside the '{fn.name}' traced region — use "
+                    f"xp.where/lax.cond, or hoist to the dispatcher")
+
+    @staticmethod
+    def _presence_check(test) -> bool:
+        """``x is None`` / ``x is not None`` / isinstance: trace-time."""
+        if isinstance(test, ast.Compare) and len(test.ops) == 1 and \
+                isinstance(test.ops[0], (ast.Is, ast.IsNot)):
+            return True
+        if isinstance(test, ast.Call) and \
+                isinstance(test.func, ast.Name) and \
+                test.func.id in _STATIC_CALLS:
+            return True
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return RetraceSentinel._presence_check(test.operand)
+        if isinstance(test, ast.BoolOp):
+            return all(RetraceSentinel._presence_check(v)
+                       for v in test.values)
+        return False
+
+    def _expr_tainted(self, expr, tainted) -> bool:
+        """True when ``expr`` reads a tainted name through a non-static
+        path (``x.shape``/``len(x)`` are trace-time constants)."""
+        if isinstance(expr, ast.Name):
+            return expr.id in tainted
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in _STATIC_ATTRS:
+                return False
+            return self._expr_tainted(expr.value, tainted)
+        if isinstance(expr, ast.Call):
+            if isinstance(expr.func, ast.Name) and \
+                    expr.func.id in _STATIC_CALLS:
+                return False
+            return any(self._expr_tainted(a, tainted)
+                       for a in list(expr.args)
+                       + [k.value for k in expr.keywords])
+        if isinstance(expr, ast.Subscript):
+            return self._expr_tainted(expr.value, tainted) or \
+                self._expr_tainted(expr.slice, tainted)
+        for child in ast.iter_child_nodes(expr):
+            if isinstance(child, (ast.expr, ast.cmpop, ast.operator)):
+                if isinstance(child, ast.expr) and \
+                        self._expr_tainted(child, tainted):
+                    return True
+        return False
+
+    # -- RS001: unhashable statics -----------------------------------------
+    def _check_static_args(self, src) -> Iterator[Finding]:
+        fns = {n.name: n for n in ast.walk(src.tree)
+               if isinstance(n, ast.FunctionDef)}
+        jitted: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    _is_jax_jit(node.value.func):
+                nums = _static_argnums(node.value)
+                if nums and len(node.targets) == 1 and \
+                        isinstance(node.targets[0], ast.Name):
+                    jitted[node.targets[0].id] = nums
+            if isinstance(node, ast.Call) and _is_jax_jit(node.func):
+                nums = _static_argnums(node)
+                if not nums:
+                    continue
+                wrapped = node.args[0] if node.args else None
+                name = wrapped.id if isinstance(wrapped, ast.Name) \
+                    else None
+                fn = fns.get(name)
+                if fn is None:
+                    continue
+                params = [a.arg for a in fn.args.args]
+                defaults = fn.args.defaults
+                off = len(params) - len(defaults)
+                for i in nums:
+                    if i < off or i >= len(params):
+                        continue
+                    if _unhashable_literal(defaults[i - off]):
+                        yield self.finding(
+                            "RS001", src, fn,
+                            f"static parameter '{params[i]}' of jitted "
+                            f"'{fn.name}' has an unhashable default — "
+                            f"every dispatch raises or retraces")
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in jitted:
+                for i in jitted[node.func.id]:
+                    if i < len(node.args) and \
+                            _unhashable_literal(node.args[i]):
+                        yield self.finding(
+                            "RS001", src, node,
+                            f"unhashable value passed at static "
+                            f"position {i} of jitted "
+                            f"'{node.func.id}' — raises TypeError at "
+                            f"dispatch")
+
+    # -- RS003: donated-buffer escape --------------------------------------
+    def _check_donation(self, src) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            donating: Dict[str, Tuple[int, ...]] = {}
+            for n in ast.walk(node):
+                if isinstance(n, ast.Assign) and \
+                        isinstance(n.value, ast.Call) and \
+                        _is_jax_jit(n.value.func) and \
+                        len(n.targets) == 1 and \
+                        isinstance(n.targets[0], ast.Name):
+                    nums = _donate_argnums(n.value)
+                    if nums:
+                        donating[n.targets[0].id] = nums
+            yield from self._scan_block(src, node.body, donating, {})
+
+    def _scan_block(self, src, body, donating, donated
+                    ) -> Iterator[Finding]:
+        donated = dict(donated)         # expr -> donating-call line
+        for stmt in body:
+            if any(True for _ in _bodies(stmt)):
+                # compound statement: child blocks inherit the current
+                # donation set; donations made inside stay inside (the
+                # sanctioned idiom rebinds within the call statement),
+                # and any rebind inside clears the name conservatively
+                for child in _bodies(stmt):
+                    yield from self._scan_block(src, child, donating,
+                                                donated)
+                inner_assigned: Set[str] = set()
+                for sub in ast.walk(stmt):
+                    if isinstance(sub, ast.stmt):
+                        inner_assigned |= _assigned_names(sub)
+                for expr in list(donated):
+                    if expr in inner_assigned:
+                        del donated[expr]
+                continue
+            for expr, line in donated.items():
+                if _reads_name(stmt, expr):
+                    yield self.finding(
+                        "RS003", src, stmt,
+                        f"reads '{expr}' after it was donated to the "
+                        f"jitted dispatch on line {line} — the buffer "
+                        f"may already be reused by XLA")
+            for call in (n for n in ast.walk(stmt)
+                         if isinstance(n, ast.Call)):
+                name = call.func.id if isinstance(call.func, ast.Name) \
+                    else None
+                nums: Tuple[int, ...] = ()
+                if name in donating:
+                    nums = donating[name]
+                elif name in DONATING_CALLS and any(
+                        k.arg == "donate" and
+                        isinstance(k.value, ast.Constant) and
+                        k.value.value is True for k in call.keywords):
+                    nums = (DONATING_CALLS[name],)
+                for i in nums:
+                    if i < len(call.args):
+                        expr = dotted_name(call.args[i])
+                        if expr:
+                            donated[expr] = call.lineno
+            rebound = _assigned_names(stmt)
+            for expr in list(donated):
+                if expr in rebound:
+                    del donated[expr]
+
+
+class StylePass(Checker):
+    name = "StylePass"
+
+    _SCOPED = ("repro/train/", "repro/launch/")
+
+    def check(self, src: Source) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and \
+                    dotted_name(node.func) == "time.time":
+                note = src.annotation(node.lineno, "wall-clock")
+                if note is None:
+                    yield self.finding(
+                        "ST101", src, node,
+                        "time.time() without a '# wall-clock: <reason>' "
+                        "annotation — durations must use "
+                        "time.monotonic()")
+                elif not note:
+                    yield self.finding(
+                        "ST101", src, node,
+                        "'# wall-clock:' annotation gives no reason")
+        if any(src.rel.startswith(p) for p in self._SCOPED):
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.ExceptHandler) and \
+                        _is_broad(node.type):
+                    if src.annotation(node.lineno,
+                                      "crash-containment") in (None, ""):
+                        yield self.finding(
+                            "ST102", src, node,
+                            "broad except in train/launch — catch the "
+                            "concrete failure types (and log context), "
+                            "or annotate '# crash-containment: "
+                            "<reason>'")
+
+
+def _is_broad(type_node) -> bool:
+    if type_node is None:
+        return True
+    names = [type_node] if not isinstance(type_node, ast.Tuple) \
+        else list(type_node.elts)
+    return any(isinstance(n, ast.Name) and
+               n.id in ("Exception", "BaseException") for n in names)
+
+
+def _is_jax_jit(func) -> bool:
+    return dotted_name(func) in ("jax.jit", "jit")
+
+
+def _keyword(call, name):
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _tuple_ints(node) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+        return tuple(out)
+    return ()
+
+
+def _static_argnums(call) -> Tuple[int, ...]:
+    node = _keyword(call, "static_argnums")
+    return _tuple_ints(node) if node is not None else ()
+
+
+def _donate_argnums(call) -> Tuple[int, ...]:
+    node = _keyword(call, "donate_argnums")
+    return _tuple_ints(node) if node is not None else ()
+
+
+def _unhashable_literal(node) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func) in ("np.array", "numpy.array",
+                                          "jnp.array", "np.zeros",
+                                          "np.ones", "jnp.zeros",
+                                          "jnp.ones", "bytearray")
+    return False
+
+
+def _assigned_names(stmt) -> Set[str]:
+    out: Set[str] = set()
+    targets = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    elif isinstance(stmt, ast.For):
+        targets = [stmt.target]
+    for t in targets:
+        for n in ast.walk(t):
+            name = dotted_name(n)
+            if name:
+                out.add(name)
+    return out
+
+
+def _reads_name(stmt, expr: str) -> bool:
+    for n in ast.walk(stmt):
+        if dotted_name(n) == expr and \
+                isinstance(getattr(n, "ctx", None), ast.Load):
+            return True
+    return False
+
+
+def _bodies(stmt):
+    for attr in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, attr, None)
+        if b and isinstance(b, list) and \
+                all(isinstance(s, ast.stmt) for s in b):
+            yield b
+    for handler in getattr(stmt, "handlers", []) or []:
+        yield handler.body

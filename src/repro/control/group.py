@@ -31,11 +31,11 @@ tenants that expose ``_bind_external_monitor`` receive a
 ``Engine.service_rate()``, ...) keep working against the shared
 service, sliced to their own queue range.
 
-Lock ordering (see also ``control.loop``): attach/detach hold the
-group lock, then ``ControlLoop._lock``, then mutate the service
-(``service._lock`` -> ``arena.lock``) and remap the loop's per-queue
-state — the same loop -> service -> arena order a tick takes, so a
-tick can never observe a half-restructured group.
+Lock ordering: the group lock is the *outermost* rank of the
+canonical hierarchy in ``repro.analysis.lock_order.LOCK_ORDER``.
+Attach/detach descend it in declared order — group, then loop, then
+the service/arena mutation, then remap — so a tick can never observe
+a half-restructured group.
 """
 
 from __future__ import annotations

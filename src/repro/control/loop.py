@@ -64,16 +64,17 @@ error code and surfaced via ``health()``:
 * **tick**: any other tick failure is contained (``E_TICK``) — the
   timer thread never dies of one bad tick.
 
-Lock ordering (deadlock audit): a tick takes ``ControlLoop._lock``
-outermost, then reads the service (``service._lock`` -> ``arena.lock``,
-released before deciding), then actuates (``queue._resize_lock`` /
-``Stage._stop_lock``, each a leaf).  No actuator path re-enters the
-service, so ``FleetMonitorService.stop()``/``flush()`` from any other
-thread can only interleave between — never deadlock against — a tick
-mid-actuation.  Multi-tenant attach/detach (``control.group``) follows
-the same order one level up: the group holds ``ControlLoop._lock``
-across the whole restructure — ``FleetMonitorService.attach/detach``
-(service lock -> arena lock) then ``_remap_locked`` — so a tick can
+Lock ordering: the canonical hierarchy lives in
+``repro.analysis.lock_order.LOCK_ORDER`` (machine-checked by the
+``LockOrderChecker`` AST pass and the runtime ``LockWitness``); this
+loop acquires at the *loop* rank.  A tick takes ``_lock``, reads the
+service one rank down (released before deciding), then actuates
+through *sync*-tier leaves — no actuator path re-enters the service,
+so ``FleetMonitorService.stop()``/``flush()`` from any other thread
+can only interleave between — never deadlock against — a tick
+mid-actuation.  Multi-tenant attach/detach (``control.group``) enters
+one rank up: the group holds ``ControlLoop._lock`` across the whole
+restructure (service mutation, then ``_remap_locked``), so a tick can
 never observe a service whose stream set and the loop's per-queue
 state arrays disagree.
 """

@@ -70,7 +70,7 @@ def lower_cell(arch_id: str, shape_id: str, multi_pod: bool,
         ctx.param_rules = {**ctx.param_rules, **overrides["param_rules"]}
 
     model = build_model(cfg)
-    t0 = time.time()
+    t0 = time.monotonic()
 
     with use_sharding(ctx), mesh:
         if shape.kind == "train":
@@ -157,9 +157,9 @@ def lower_cell(arch_id: str, shape_id: str, multi_pod: bool,
             extra = {}
             tokens = shape.global_batch  # one new token per sequence
 
-        t_lower = time.time() - t0
+        t_lower = time.monotonic() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.monotonic() - t0 - t_lower
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
@@ -261,12 +261,20 @@ def main(argv=None):
             try:
                 res = lower_cell(arch_id, shape_id, mp, overrides,
                                  profile=args.profile)
-            except Exception as e:  # noqa: BLE001
+            except (ValueError, TypeError, KeyError, RuntimeError,
+                    NotImplementedError, OSError) as e:
+                # the failure modes lowering actually produces (bad
+                # config/shape, sharding mismatch, XLA compile/OOM —
+                # jax surfaces these as ValueError/TypeError/
+                # RuntimeError subclasses, plus filesystem errors);
+                # genuine programming errors still crash the sweep cell
                 res = {"arch": arch_id, "shape": shape_id,
                        "mesh": "multi" if mp else "single",
                        "status": "error", "error": f"{type(e).__name__}: "
                                                    f"{e}",
                        "traceback": traceback.format_exc()[-4000:]}
+                print(f"[error  ] {tag}  {type(e).__name__}: {e}",
+                      flush=True)
                 rc = 1
             path.write_text(json.dumps(res, indent=2, default=str))
             status = res["status"]

@@ -39,7 +39,7 @@ def main(argv=None):
 
     cells = [(a, s, m) for m in meshes for a in _SIZE_ORDER
              for s in _SHAPE_ORDER]
-    t_start = time.time()
+    t_start = time.monotonic()
     n_ok = n_fail = n_skip = 0
     for arch, shape, mesh in cells:
         tag = f"{arch}__{shape}__{mesh}"
@@ -47,7 +47,12 @@ def main(argv=None):
         if path.exists():
             try:
                 status = json.loads(path.read_text()).get("status")
-            except Exception:  # noqa: BLE001
+            except (OSError, json.JSONDecodeError, AttributeError) as exc:
+                # unreadable/corrupt result JSON (AttributeError: a
+                # non-dict payload): log and re-run the cell
+                print(f"[sweep] unreadable result {path}: "
+                      f"{type(exc).__name__}: {exc} — re-running",
+                      flush=True)
                 status = None
             if status in ("ok", "skipped"):
                 n_skip += 1
@@ -55,7 +60,7 @@ def main(argv=None):
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape, "--mesh", mesh,
                "--out", str(outdir), "--profile", args.profile]
-        t0 = time.time()
+        t0 = time.monotonic()
         try:
             p = subprocess.run(cmd, capture_output=True, text=True,
                                timeout=args.timeout)
@@ -68,11 +73,11 @@ def main(argv=None):
                  "status": "error", "error": "compile timeout"}, indent=2))
         n_ok += ok
         n_fail += (not ok)
-        print(f"[sweep {time.time()-t_start:7.0f}s] {tag}: "
-              f"{'ok' if ok else 'FAIL'} ({time.time()-t0:.0f}s)",
+        print(f"[sweep {time.monotonic()-t_start:7.0f}s] {tag}: "
+              f"{'ok' if ok else 'FAIL'} ({time.monotonic()-t0:.0f}s)",
               flush=True)
     print(f"[sweep done] ok={n_ok} fail={n_fail} skipped={n_skip} "
-          f"total={time.time()-t_start:.0f}s", flush=True)
+          f"total={time.monotonic()-t_start:.0f}s", flush=True)
     return 0 if n_fail == 0 else 1
 
 

@@ -33,13 +33,18 @@ returns False immediately) or **defers** (blocks until reopen /
 deadline); ``Engine.stop()`` closes every gate so deferred waiters are
 released immediately instead of stranding until their full timeout.
 
-Lock ordering (per-class lanes): ``submit`` takes gate condition ->
-lane ``_resize_lock`` (disjoint, sequential).  Workers take
-``_scale_lock`` only in ``workers()``/scale paths, never while holding
-a lane lock; the accounting lock (``_acct_lock``) is a leaf taken
-after serving, never under ``_scale_lock`` or any lane lock.  The
-control loop's actuator reads lane lengths lock-free and flips gates
-under the gate condition only — no path holds two lane locks at once.
+Lock ordering: every engine lock (gate condition, lane
+``_resize_lock``, ``_scale_lock``, ``_acct_lock``, ``_crash_lock``)
+lives in the *sync* tier of the canonical hierarchy in
+``repro.analysis.lock_order.LOCK_ORDER`` — mutually disjoint by
+protocol rather than totally ordered, with the runtime ``LockWitness``
+checking for cross-thread cycles.  The protocol: ``submit`` takes gate
+condition then lane lock sequentially (never nested with another
+lane); workers take ``_scale_lock`` only in ``workers()``/scale paths,
+never while holding a lane lock; ``_acct_lock`` is taken after
+serving, never under ``_scale_lock`` or any lane lock; the control
+loop's actuator reads lane lengths lock-free and flips gates under the
+gate condition only — no path holds two lane locks at once.
 """
 
 from __future__ import annotations
@@ -53,9 +58,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.control import (AdmissionPolicy, BufferPolicy, ControlLog,
-                           ControlLoop, PolicySet)
-from repro.control.log import ControlRecord
 from repro.core.controller import BufferAutotuner
 from repro.core.monitor import MonitorConfig
 from repro.models.api import Model
@@ -278,6 +280,9 @@ class _EngineActuator:
         gate.set_shed(shed)
         log = self._log
         if log is not None:
+            # layer-ok: audit-record type only, bound-log path; serve
+            # never depends on control at import time (see LayerGuard)
+            from repro.control.log import ControlRecord
             # per-class companion record: the class's cumulative
             # rejections ride ``value`` so a shed is distinguishable
             # from a queue timeout in the audit stream
@@ -357,6 +362,12 @@ class Engine:
         else:
             self.fleet = None          # bound by ControlGroup.attach
             self.monitor_thread = None
+        # control-plane wiring is the sanctioned layering inversion
+        # (control.group imports streams.fleet, which serve sits on):
+        # constructor-only, so the serve layer imports control lazily
+        # layer-ok: wiring inversion, constructor-only; keeps module DAG acyclic
+        from repro.control import (AdmissionPolicy, BufferPolicy,
+                                   ControlLoop, PolicySet)
         # capacity advice and (under control=True) capacity actuation
         # share this policy object — they cannot disagree
         self.buffer_policy = BufferPolicy(
@@ -413,6 +424,8 @@ class Engine:
         # and (under control=True) its loop on /metrics, labelled by
         # QoS class.  An externally monitored engine (monitor=False)
         # is scraped through its ControlGroup's exporter instead.
+        # layer-ok: obs is a dependency-free leaf; imported lazily so a
+        # broken exporter can never take the serving path down with it
         from repro.obs import make_exporter
         if obs and self.fleet is None:
             raise ValueError(

@@ -216,6 +216,8 @@ class EndStats:
 
     @tc.setter
     def tc(self, v) -> None:
+        # benign-race: copy-and-zero — lock-free hot-path write, torn
+        # reads cost one monitoring period (growth-rebind on regrow)
         self._tc[self._slot] = v
 
     @property
@@ -224,6 +226,7 @@ class EndStats:
 
     @blocked.setter
     def blocked(self, v) -> None:
+        # benign-race: copy-and-zero — see the ``tc`` setter
         self._blk[self._slot] = v
 
     @property
@@ -232,6 +235,7 @@ class EndStats:
 
     @bytes_count.setter
     def bytes_count(self, v) -> None:
+        # benign-race: copy-and-zero — see the ``tc`` setter
         self._byt[self._slot] = v
 
     @property
@@ -240,6 +244,7 @@ class EndStats:
 
     @err_count.setter
     def err_count(self, v) -> None:
+        # benign-race: cumulative-window — see ``record_error``
         self._err[self._slot] = v
 
     def record_latency(self, seconds, n: int = 1) -> None:
@@ -266,16 +271,22 @@ class EndStats:
             # batch fold: fancy-index += drops duplicate buckets, so
             # aggregate first; one row-add keeps the torn-write story
             # identical to the scalar path (one array touched once)
+            # benign-race: cumulative-window — monotone row, harvested
+            # by delta; a racing rebind drops the fold (growth-rebind)
             hist[slot] += np.bincount(b, minlength=LAT_BUCKETS) * n
+            # benign-race: cumulative-window — count bumped after row
             cnt[slot] += b.size * n
         else:
+            # benign-race: cumulative-window — see the batch branch
             hist[slot, b] += n
+            # benign-race: cumulative-window — count bumped after row
             cnt[slot] += n
 
     def record_error(self, n: int = 1) -> None:
         """Count ``n`` errors (deadline misses, sheds, failures) against
         this slot — cumulative, same contract as ``record_latency``."""
         err = self._err
+        # benign-race: cumulative-window — monotone, harvested by delta
         err[self._slot] += n
 
     def latency_histogram(self) -> np.ndarray:
@@ -289,8 +300,12 @@ class EndStats:
         tc_a, blk_a, byt_a = self._tc, self._blk, self._byt
         s = self._slot       # array refs before slot: see _bind
         tc, blk, nb = tc_a[s], blk_a[s], byt_a[s]
+        # benign-race: copy-and-zero — the paper's single-period race:
+        # increments landing between the copy and the zero are dropped
         tc_a[s] = 0.0
+        # benign-race: copy-and-zero — see above
         blk_a[s] = False
+        # benign-race: copy-and-zero — see above
         byt_a[s] = 0
         return float(tc), bool(blk), int(nb)
 

@@ -66,19 +66,19 @@ percent of the collector tick even at S=2e5.  Readouts are
 ``error_rates()`` / ``over_fraction()`` (the control loop's burn-rate
 sense input) and the exporter's single-lock ``obs_snapshot()``.
 
-Lock ordering (deadlock audit, also see ``control.loop``): the
-collector tick takes ``self._lock`` then ``arena.lock`` and releases
-both before firing callbacks; readouts take ``self._lock`` alone;
-``queue._resize_lock`` and ``Stage._stop_lock`` are leaves never held
-while acquiring either.  A ``ControlLoop`` tick mid-actuation holds
-only its own lock plus (briefly) a leaf, so ``stop()``/``flush()`` from
-any thread serialize cleanly against it — they can interleave with an
-actuation but never deadlock or observe a half-written staging row.
-The multi-tenant restructure (``attach``/``detach``) takes the same
-``self._lock`` -> ``arena.lock`` order (its caller, ``control.group``,
-already holds the loop lock above both), so it serializes against the
-collector tick like any readout and a tick never sees a half-rebuilt
-stream set.
+Lock ordering: ``self._lock`` sits at the *service* rank of the
+canonical hierarchy in ``repro.analysis.lock_order.LOCK_ORDER``, one
+above the arena.  The collector tick takes ``self._lock`` then
+``arena.lock`` (declared order) and releases both before firing
+callbacks; readouts take ``self._lock`` alone; the *sync*-tier leaves
+(queue resize, stage stop) are never held while acquiring either.  A
+``ControlLoop`` tick mid-actuation holds only its own (higher) rank
+plus briefly a leaf, so ``stop()``/``flush()`` from any thread
+serialize cleanly against it — they can interleave with an actuation
+but never deadlock or observe a half-written staging row.  The
+multi-tenant restructure (``attach``/``detach``) takes the same
+service -> arena order under the group/loop ranks above, so it
+serializes against the collector tick like any readout.
 """
 
 from __future__ import annotations

@@ -33,8 +33,6 @@ from typing import Any, Callable, Iterable, Optional
 
 import numpy as np
 
-from repro.control import (BufferPolicy, ControlLog, ControlLoop, PolicySet,
-                           ReplicaPolicy)
 from repro.core.controller import BufferAutotuner, ParallelismController
 from repro.core.monitor import MonitorConfig
 from repro.streams.arena import CounterArena, default_arena
@@ -311,6 +309,13 @@ class Pipeline:
         self.tuner = BufferAutotuner(current=capacity)
         self._capacities = np.full(len(self.queues), capacity, np.int64)
         self.parallelism = ParallelismController()
+        # control-plane wiring is the one sanctioned layering inversion
+        # (control.group imports streams.fleet, so a module-level import
+        # here would be a cycle): the pipeline *constructs* its own loop
+        # but the streams layer never depends on control at import time
+        # layer-ok: wiring inversion, constructor-only; keeps module DAG acyclic
+        from repro.control import (BufferPolicy, ControlLoop, PolicySet,
+                                   ReplicaPolicy)
         # the advisory readouts and the control loop share these policy
         # objects — recommended_replicas() can never disagree with what
         # scale_stage is asked to apply
@@ -337,6 +342,8 @@ class Pipeline:
         # mirrors (and loop, when control=True), one queue label per
         # link.  Externally monitored pipelines are scraped through
         # their ControlGroup's exporter.
+        # layer-ok: obs is a dependency-free leaf; imported lazily so a
+        # broken exporter can never take the data plane down with it
         from repro.obs import make_exporter
         if obs and self.fleet is None:
             raise ValueError(

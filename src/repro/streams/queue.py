@@ -71,6 +71,7 @@ class InstrumentedQueue:
         with self._resize_lock:
             tail = self._tail
             if tail - self._head >= self._cap:
+                # benign-race: growth-rebind — torn vs _bind drops one flag
                 end._blk[end._slot] = True
                 return False
             mask = self._mask
@@ -84,9 +85,12 @@ class InstrumentedQueue:
         tc_arr = end._tc
         byt_arr = end._byt
         slot = end._slot
+        # benign-race: copy-and-zero — an increment racing the monitor's
+        # sample costs at most one period; growth-rebind covers regrows
         tc_arr[slot] += 1.0
         nbytes = self.item_bytes
         if nbytes:
+            # benign-race: copy-and-zero — same one-period tolerance
             byt_arr[slot] += nbytes
         return True
 
@@ -107,6 +111,7 @@ class InstrumentedQueue:
         ``None`` payload from emptiness (``pop`` does exactly that)."""
         end = self.head
         if self._head >= self._tail:
+            # benign-race: growth-rebind — torn vs _bind drops one flag
             end._blk[end._slot] = True
             return default
         with self._resize_lock:
@@ -117,6 +122,7 @@ class InstrumentedQueue:
                 # the last item between the fast-path check and here —
                 # popping anyway would hand out an empty cell and push
                 # _head past _tail
+                # benign-race: growth-rebind — torn vs _bind drops one flag
                 end._blk[end._slot] = True
                 return default
             mask = self._mask
@@ -127,9 +133,12 @@ class InstrumentedQueue:
         tc_arr = end._tc     # array ref before slot (see try_push)
         byt_arr = end._byt
         slot = end._slot
+        # benign-race: copy-and-zero — an increment racing the monitor's
+        # sample costs at most one period; growth-rebind covers regrows
         tc_arr[slot] += 1.0
         nbytes = self.item_bytes
         if nbytes:
+            # benign-race: copy-and-zero — same one-period tolerance
             byt_arr[slot] += nbytes
         return item
 

@@ -59,7 +59,7 @@ class Trainer:
 
     def fit(self, data_iter, steps: int) -> list[dict]:
         start = int(self.state["step"])
-        t_last = time.time()
+        t_last = time.monotonic()
         steps_done = 0
         for batch in data_iter:
             if steps_done >= steps:
@@ -70,7 +70,7 @@ class Trainer:
             cur = start + steps_done
 
             if steps_done % self.tcfg.log_every == 0:
-                now = time.time()
+                now = time.monotonic()
                 dt = now - t_last
                 t_last = now
                 rate = self.tcfg.log_every / dt

@@ -11,6 +11,13 @@ With the real library installed, this file does nothing.
 subjects are all threads (serve workers, monitor/control/supervisor
 loops): a test that exits leaving a non-daemon thread alive would hang
 the interpreter at shutdown, so it fails loudly here instead.
+
+``_lock_order_witness`` arms ``repro.analysis``'s runtime lock witness
+for the concurrency suites: every ``threading.Lock``/``RLock`` created
+at a site named in the canonical ``LOCK_ORDER`` table is wrapped, and a
+test fails if any thread's real acquisition order inverts the hierarchy
+or forms a cross-thread cycle.  Suites outside ``_WITNESS_SUITES`` (and
+all locks created from non-contract sites) pay nothing.
 """
 
 from __future__ import annotations
@@ -43,6 +50,33 @@ def _no_thread_leaks():
             pytest.fail("test leaked non-daemon threads: "
                         f"{sorted(t.name for t in leaked)}")
         time.sleep(0.05)
+
+
+# the tier-1 concurrency suites the runtime lock witness covers (the
+# ISSUE-10 acceptance set plus the exporter-concurrency tests)
+_WITNESS_SUITES = {"test_control", "test_selfheal", "test_qos",
+                   "test_arena", "test_obs"}
+
+
+@pytest.fixture(autouse=True)
+def _lock_order_witness(request):
+    mod = getattr(getattr(request, "node", None), "module", None)
+    name = getattr(mod, "__name__", "").rpartition(".")[2]
+    if name not in _WITNESS_SUITES:
+        yield
+        return
+    from repro.analysis.witness import LockWitness
+    witness = LockWitness().activate()
+    try:
+        yield
+    finally:
+        witness.deactivate()
+        problems = witness.report()
+        if problems:
+            pytest.fail(
+                "LockWitness recorded lock-hierarchy hazards (see "
+                "repro.analysis.lock_order.LOCK_ORDER):\n  "
+                + "\n  ".join(problems), pytrace=False)
 
 
 def _install_hypothesis_stub() -> None:

@@ -1,0 +1,734 @@
+"""Contract analyzer (repro.analysis) — PR 10.
+
+Seeded known-bad fixtures prove every checker fires on the violation
+class it owns (LO001-LO003, LG001-LG004, BR001-BR002, RS001-RS003,
+ST101-ST102), the runtime LockWitness catches inversions / ordered
+re-entry / unordered-tier ABBA cycles on real ``threading`` locks,
+the baseline workflow round-trips (new / baselined / stale), and the
+shipped tree itself is clean against the shipped (empty) baseline —
+the same gate ``scripts/smoke.sh`` runs.
+"""
+
+import os
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import (ALL_CHECKERS, Baseline, LayerGuard,
+                            LockOrderChecker, BenignRaceChecker,
+                            RetraceSentinel, StylePass, run_analysis)
+from repro.analysis.__main__ import DEFAULT_BASELINE, main
+from repro.analysis.lock_order import classify_expr, classify_site
+from repro.analysis.model import Source
+from repro.analysis.witness import LockWitness, WitnessedLock
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src", "repro")
+
+
+def _src(rel, code):
+    return Source("<test>", rel, textwrap.dedent(code))
+
+
+def _codes(checker, rel, code):
+    return [f.code for f in checker.check(_src(rel, code))]
+
+
+# ---------------------------------------------------------------------------
+# LockOrderChecker
+# ---------------------------------------------------------------------------
+
+class TestLockOrderChecker:
+    def test_declared_order_is_clean(self):
+        code = """
+        def tick(self):
+            with self.loop._lock:
+                with self.service._lock:
+                    with self.arena.lock:
+                        pass
+        """
+        assert _codes(LockOrderChecker(), "repro/control/loop.py",
+                      code) == []
+
+    def test_lo001_inversion(self):
+        code = """
+        def bad(self):
+            with self.arena.lock:
+                with self.service._lock:
+                    pass
+        """
+        assert _codes(LockOrderChecker(), "repro/streams/fleet.py",
+                      code) == ["LO001"]
+
+    def test_lo002_unclassified_lock(self):
+        code = """
+        def f(self):
+            with self._mystery_lock:
+                pass
+        """
+        assert _codes(LockOrderChecker(), "repro/streams/fleet.py",
+                      code) == ["LO002"]
+
+    def test_lo003_ordered_reentry(self):
+        code = """
+        def f(a, b):
+            with a.arena.lock:
+                with b.arena.lock:
+                    pass
+        """
+        assert _codes(LockOrderChecker(), "repro/streams/queue.py",
+                      code) == ["LO003"]
+
+    def test_unordered_tier_nesting_is_legal(self):
+        code = """
+        def f(self):
+            with self._scale_lock:
+                with self._stop_lock:
+                    pass
+        """
+        assert _codes(LockOrderChecker(), "repro/streams/pipeline.py",
+                      code) == []
+
+    def test_locked_suffix_assumes_module_primary_held(self):
+        # fleet's primary is the service lock: re-entering it from a
+        # *_locked function is a self-deadlock
+        code = """
+        def _mutate_locked(self):
+            with self._lock:
+                pass
+        """
+        assert _codes(LockOrderChecker(), "repro/streams/fleet.py",
+                      code) == ["LO003"]
+
+    def test_locked_fn_override_table(self):
+        # _rebind_slots_locked runs under the ARENA lock (override),
+        # so acquiring the service lock inside it is an inversion
+        code = """
+        def _rebind_slots_locked(self):
+            with self.service._lock:
+                pass
+        """
+        assert _codes(LockOrderChecker(), "repro/streams/fleet.py",
+                      code) == ["LO001"]
+
+    def test_classifier_tables(self):
+        assert classify_expr("repro/control/loop.py",
+                             "self._lock").name == "loop"
+        assert classify_expr("repro/x.py", "self._arena.lock").name \
+            == "arena"
+        assert classify_expr("repro/x.py", "self._random_thing") is None
+        assert classify_site("repro/streams/arena.py", "lock").name \
+            == "arena"
+        assert classify_site("repro/serve/engine.py",
+                             "_acct_lock").name == "sync"
+        assert classify_site("repro/streams/arena.py", "nope") is None
+
+
+# ---------------------------------------------------------------------------
+# LayerGuard
+# ---------------------------------------------------------------------------
+
+class TestLayerGuard:
+    def test_lg001_module_level_upward_import(self):
+        code = "from repro.control import ControlLoop\n"
+        assert _codes(LayerGuard(), "repro/streams/pipeline.py",
+                      code) == ["LG001"]
+
+    def test_lg002_obs_importing_repro(self):
+        code = "from repro.streams import CounterArena\n"
+        assert _codes(LayerGuard(), "repro/obs/exporter.py",
+                      code) == ["LG002"]
+
+    def test_lg003_ft_ban_even_lazily(self):
+        code = """
+        def f():
+            from repro.ft import FaultInjector
+            return FaultInjector
+        """
+        assert _codes(LayerGuard(), "repro/serve/engine.py",
+                      code) == ["LG003"]
+
+    def test_lg004_lazy_import_needs_annotation(self):
+        code = """
+        def __init__(self):
+            from repro.control import ControlLoop
+            self.loop = ControlLoop
+        """
+        assert _codes(LayerGuard(), "repro/streams/pipeline.py",
+                      code) == ["LG004"]
+
+    def test_lg004_unsanctioned_lazy_target(self):
+        code = """
+        def f():
+            # layer-ok: an annotation cannot sanction a non-inversion
+            from repro.train import Trainer
+            return Trainer
+        """
+        assert _codes(LayerGuard(), "repro/streams/pipeline.py",
+                      code) == ["LG004"]
+
+    def test_annotated_lazy_inversion_is_clean(self):
+        code = """
+        def __init__(self):
+            # layer-ok: wiring inversion, constructor-only
+            from repro.control import ControlLoop
+            self.loop = ControlLoop
+        """
+        assert _codes(LayerGuard(), "repro/streams/pipeline.py",
+                      code) == []
+
+    def test_downward_and_stdlib_imports_are_clean(self):
+        code = """
+        import threading
+        from repro.core.monitor import MonitorConfig
+        from repro.streams.arena import CounterArena
+        """
+        assert _codes(LayerGuard(), "repro/streams/fleet.py",
+                      code) == []
+
+    def test_relative_imports_resolve(self):
+        code = "from .arena import CounterArena\n"
+        assert _codes(LayerGuard(), "repro/streams/queue.py", code) == []
+        code = "from ..control import ControlLoop\n"
+        assert _codes(LayerGuard(), "repro/streams/pipeline.py",
+                      code) == ["LG001"]
+
+
+# ---------------------------------------------------------------------------
+# BenignRaceChecker
+# ---------------------------------------------------------------------------
+
+class TestBenignRaceChecker:
+    def test_br001_unannotated_column_write(self):
+        code = """
+        def bump(self, end, slot):
+            end._tc[slot] += 1.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/queue.py",
+                      code) == ["BR001"]
+
+    def test_br002_bare_annotation(self):
+        code = """
+        def bump(self, end, slot):
+            # benign-race:
+            end._tc[slot] += 1.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/queue.py",
+                      code) == ["BR002"]
+
+    def test_annotated_contract_is_clean(self):
+        code = """
+        def bump(self, end, slot):
+            # benign-race: copy-and-zero - costs at most one period
+            end._tc[slot] += 1.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/queue.py",
+                      code) == []
+
+    def test_annotation_found_in_comment_block_above(self):
+        code = """
+        def bump(self, end, slot):
+            # the write below races the sampler's copy+zero pair;
+            # benign-race: copy-and-zero - one period of loss, tolerated
+            # by the estimator contract
+            end._tc[slot] += 1.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/queue.py",
+                      code) == []
+
+    def test_arena_lock_scope_is_exempt(self):
+        code = """
+        def zero(self, slot):
+            with self.arena.lock:
+                self._tc[slot] = 0.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/arena.py",
+                      code) == []
+
+    def test_locked_fn_is_exempt(self):
+        code = """
+        def _zero_locked(self, slot):
+            self._tc[slot] = 0.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/arena.py",
+                      code) == []
+
+    def test_alias_tracking(self):
+        code = """
+        def bump(self, slot):
+            tc_arr = self._tc
+            tc_arr[slot] += 1.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/queue.py",
+                      code) == ["BR001"]
+
+    def test_tuple_unpack_alias_tracking(self):
+        code = """
+        def harvest(self, slot):
+            tc_a, blk_a = self._tc, self._blk
+            blk_a[slot] = False
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/arena.py",
+                      code) == ["BR001"]
+
+    def test_non_column_writes_ignored(self):
+        code = """
+        def f(self, slot):
+            self.totals[slot] += 1.0
+        """
+        assert _codes(BenignRaceChecker(), "repro/streams/queue.py",
+                      code) == []
+
+
+# ---------------------------------------------------------------------------
+# RetraceSentinel + StylePass
+# ---------------------------------------------------------------------------
+
+class TestRetraceSentinel:
+    def test_rs002_python_branch_on_traced_operand(self):
+        code = """
+        def _step_math(state, lam):
+            if lam > 0:
+                return state
+            return state
+        """
+        assert _codes(RetraceSentinel(), "repro/control/policy.py",
+                      code) == ["RS002"]
+
+    def test_rs002_reaches_call_graph_helpers(self):
+        code = """
+        def _step_math(state, lam):
+            return _clip(state, lam)
+
+        def _clip(state, lam):
+            while lam > 0:
+                lam = lam - 1
+            return state
+        """
+        assert _codes(RetraceSentinel(), "repro/control/policy.py",
+                      code) == ["RS002"]
+
+    def test_rs002_taint_propagates_through_assignment(self):
+        code = """
+        def _step_math(state, lam):
+            pressure = lam * 2.0
+            if pressure > 1.0:
+                return state
+            return state
+        """
+        assert _codes(RetraceSentinel(), "repro/control/policy.py",
+                      code) == ["RS002"]
+
+    def test_presence_and_shape_checks_are_allowed(self):
+        code = """
+        def _step_math(state, lam):
+            if lam is None:
+                return state
+            if state.shape[0] > 3:
+                return state
+            if len(state) > 2 and isinstance(lam, float):
+                return state
+            return state
+        """
+        assert _codes(RetraceSentinel(), "repro/control/policy.py",
+                      code) == []
+
+    def test_untraced_module_not_checked(self):
+        code = """
+        def _step_math(state, lam):
+            if lam > 0:
+                return state
+            return state
+        """
+        assert _codes(RetraceSentinel(), "repro/launch/sweep.py",
+                      code) == []
+
+    def test_rs001_mutable_default_on_static_param(self):
+        code = """
+        import jax
+
+        def run(x, opts=[1, 2]):
+            return x
+
+        run_j = jax.jit(run, static_argnums=(1,))
+        """
+        assert "RS001" in _codes(RetraceSentinel(),
+                                 "repro/kernels/monitor/ops.py", code)
+
+    def test_rs001_unhashable_literal_at_static_position(self):
+        code = """
+        import jax
+
+        step = jax.jit(fn, static_argnums=(1,))
+
+        def g(x):
+            return step(x, [1, 2])
+        """
+        assert _codes(RetraceSentinel(), "repro/core/monitor.py",
+                      code) == ["RS001"]
+
+    def test_rs003_donated_buffer_escape(self):
+        code = """
+        import jax
+
+        def drive(self):
+            step = jax.jit(f, donate_argnums=(0,))
+            out = step(self.state)
+            return self.state
+        """
+        assert _codes(RetraceSentinel(), "repro/core/monitor.py",
+                      code) == ["RS003"]
+
+    def test_rs003_same_statement_rebind_is_sanctioned(self):
+        code = """
+        import jax
+
+        def drive(self):
+            step = jax.jit(f, donate_argnums=(0,))
+            self.state = step(self.state)
+            return self.state
+        """
+        assert _codes(RetraceSentinel(), "repro/core/monitor.py",
+                      code) == []
+
+    def test_rs003_control_decide_donate_kwarg(self):
+        code = """
+        def tick(self):
+            dec = control_decide(cfg, self.state, donate=True)
+            return self.state.occ
+        """
+        assert _codes(RetraceSentinel(), "repro/control/loop.py",
+                      code) == ["RS003"]
+
+    def test_rs003_try_fallback_rebind_no_false_positive(self):
+        # the real loop.py idiom: donation + rebind inside a try whose
+        # except falls back — must NOT leak a donation to the outer
+        # block (regression for the compound-statement scan)
+        code = """
+        def tick(self):
+            try:
+                self.state, dec = control_decide(
+                    cfg, self.state, donate=True)
+            except ValueError:
+                dec = None
+            return self.state
+        """
+        assert _codes(RetraceSentinel(), "repro/control/loop.py",
+                      code) == []
+
+
+class TestStylePass:
+    def test_st101_wall_clock_call(self):
+        code = """
+        import time
+
+        def f():
+            return time.time()
+        """
+        assert _codes(StylePass(), "repro/streams/queue.py",
+                      code) == ["ST101"]
+
+    def test_st101_annotated_is_clean(self):
+        code = """
+        import time
+
+        def stamp():
+            # wall-clock: cross-process timestamp for the audit log
+            return time.time()
+        """
+        assert _codes(StylePass(), "repro/control/log.py", code) == []
+
+    def test_st101_attribute_reference_is_not_a_call(self):
+        code = """
+        import dataclasses
+        import time
+
+        @dataclasses.dataclass
+        class Rec:
+            t: float = dataclasses.field(default_factory=time.time)
+        """
+        assert _codes(StylePass(), "repro/control/log.py", code) == []
+
+    def test_st102_broad_except_in_train(self):
+        code = """
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+        """
+        assert _codes(StylePass(), "repro/train/trainer.py",
+                      code) == ["ST102"]
+
+    def test_st102_bare_except_in_launch(self):
+        code = """
+        def f():
+            try:
+                g()
+            except:
+                pass
+        """
+        assert _codes(StylePass(), "repro/launch/sweep.py",
+                      code) == ["ST102"]
+
+    def test_st102_scoped_to_train_launch_only(self):
+        code = """
+        def f():
+            try:
+                g()
+            except Exception:
+                pass
+        """
+        assert _codes(StylePass(), "repro/streams/pipeline.py",
+                      code) == []
+
+    def test_st102_crash_containment_annotation(self):
+        code = """
+        def f():
+            try:
+                g()
+            # crash-containment: worker thread must never die silently
+            except Exception:
+                pass
+        """
+        assert _codes(StylePass(), "repro/train/trainer.py", code) == []
+
+
+# ---------------------------------------------------------------------------
+# Fingerprints + baseline workflow
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    BAD = """
+    import time
+
+    def f():
+        return time.time()
+    """
+
+    def test_fingerprint_survives_line_shift(self):
+        a = list(StylePass().check(_src("repro/x/y.py", self.BAD)))
+        shifted = "# a new comment line\n" + textwrap.dedent(self.BAD)
+        b = list(StylePass().check(Source("<test>", "repro/x/y.py",
+                                          shifted)))
+        assert a[0].line != b[0].line
+        assert a[0].fingerprint == b[0].fingerprint
+
+    def test_fingerprint_dies_with_the_code(self):
+        a = list(StylePass().check(_src("repro/x/y.py", self.BAD)))
+        changed = textwrap.dedent(self.BAD).replace(
+            "return time.time()", "return 1.0 + time.time()")
+        b = list(StylePass().check(Source("<test>", "repro/x/y.py",
+                                          changed)))
+        assert a[0].fingerprint != b[0].fingerprint
+
+    def test_split_new_baselined_stale(self, tmp_path):
+        findings = list(StylePass().check(_src("repro/x/y.py", self.BAD)))
+        bl_path = str(tmp_path / "baseline.json")
+        Baseline().save(bl_path, findings)
+        bl = Baseline.load(bl_path)
+        new, old, stale = bl.split(findings)
+        assert (len(new), len(old), len(stale)) == (0, 1, 0)
+        new, old, stale = bl.split([])          # finding fixed -> stale
+        assert (len(new), len(old), len(stale)) == (0, 0, 1)
+        new, old, stale = Baseline().split(findings)
+        assert (len(new), len(old), len(stale)) == (1, 0, 0)
+
+
+class TestCli:
+    BAD = ("import time\n"
+           "def f():\n"
+           "    return time.time()\n")
+    CLEAN = ("import time\n"
+             "def f():\n"
+             "    return time.monotonic()\n")
+
+    def test_exit_codes_and_baseline_roundtrip(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text(self.BAD)
+        bl = str(tmp_path / "baseline.json")
+        assert main([str(bad), "--baseline", bl]) == 1
+        assert "ST101" in capsys.readouterr().out
+        assert main([str(bad), "--baseline", bl,
+                     "--write-baseline"]) == 0
+        assert main([str(bad), "--baseline", bl]) == 0   # baselined
+        assert main([str(bad), "--baseline", bl,
+                     "--no-baseline"]) == 1               # raw report
+        bad.write_text(self.CLEAN)                        # fixed
+        assert main([str(bad), "--baseline", bl]) == 1    # stale entry
+        assert "stale" in capsys.readouterr().out
+
+    def test_missing_path_is_usage_error(self, tmp_path):
+        assert main([str(tmp_path / "nope.py")]) == 2
+
+
+def test_src_tree_is_clean_against_shipped_baseline():
+    """The tier-1 incarnation of the smoke gate: every checker over the
+    real tree, matched against the shipped baseline (which is empty)."""
+    findings = run_analysis([SRC])
+    bl = Baseline.load(DEFAULT_BASELINE)
+    new, _, stale = bl.split(findings)
+    assert not new, "unbaselined findings:\n" + "\n".join(
+        f.render() for f in new)
+    assert not stale, f"stale baseline entries: {stale}"
+
+
+def test_all_checkers_registry():
+    names = {c.name for c in ALL_CHECKERS}
+    assert names == {"LockOrderChecker", "LayerGuard",
+                     "BenignRaceChecker", "RetraceSentinel", "StylePass"}
+
+
+# ---------------------------------------------------------------------------
+# LockWitness (runtime)
+# ---------------------------------------------------------------------------
+
+def _site_module(tmp_path, rel, attrs, kinds=None):
+    """Write a module at ``tmp_path/<rel>`` whose ``make_<attr>()``
+    functions create a lock at a creation site classify_site maps to a
+    hierarchy level, and return its namespace."""
+    path = tmp_path / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    kinds = kinds or {}
+    lines = ["import threading"]
+    for attr in attrs:
+        kind = kinds.get(attr, "Lock")
+        lines += [f"def make_{attr}():",
+                  f"    {attr} = threading.{kind}()",
+                  f"    return {attr}"]
+    code = "\n".join(lines) + "\n"
+    path.write_text(code)
+    ns = {}
+    exec(compile(code, str(path), "exec"), ns)
+    return ns
+
+
+class TestLockWitness:
+    def test_classified_sites_get_wrapped_unclassified_stay_raw(
+            self, tmp_path):
+        fleet = _site_module(tmp_path, "repro/streams/fleet.py",
+                             ["_lock"])
+        with LockWitness() as w:
+            svc = fleet["make__lock"]()
+            raw = threading.Lock()            # this file: unclassified
+        assert isinstance(svc, WitnessedLock)
+        assert svc.level.name == "service"
+        assert not isinstance(raw, WitnessedLock)
+        assert w.report() == []
+
+    def test_deactivate_restores_factories(self, tmp_path):
+        before = (threading.Lock, threading.RLock)
+        w = LockWitness().activate()
+        assert (threading.Lock, threading.RLock) != before
+        w.deactivate()
+        assert (threading.Lock, threading.RLock) == before
+        w.deactivate()                        # idempotent
+        assert (threading.Lock, threading.RLock) == before
+
+    def test_double_activation_refused(self):
+        w = LockWitness().activate()
+        try:
+            with pytest.raises(RuntimeError, match="already active"):
+                w.activate()
+        finally:
+            w.deactivate()
+
+    def test_inversion_recorded(self, tmp_path):
+        fleet = _site_module(tmp_path, "repro/streams/fleet.py",
+                             ["_lock"])
+        loop = _site_module(tmp_path, "repro/control/loop.py",
+                            ["_lock"])
+        with LockWitness() as w:
+            svc, lp = fleet["make__lock"](), loop["make__lock"]()
+            with svc:
+                with lp:                       # service held, loop outer
+                    pass
+        report = w.report()
+        assert len(report) == 1 and "inversion" in report[0]
+        assert "service" in report[0] and "loop" in report[0]
+
+    def test_declared_order_records_nothing(self, tmp_path):
+        loop = _site_module(tmp_path, "repro/control/loop.py", ["_lock"])
+        fleet = _site_module(tmp_path, "repro/streams/fleet.py",
+                             ["_lock"])
+        arena = _site_module(tmp_path, "repro/streams/arena.py",
+                             ["lock"], kinds={"lock": "RLock"})
+        with LockWitness() as w:
+            lp, svc, ar = (loop["make__lock"](), fleet["make__lock"](),
+                           arena["make_lock"]())
+            with lp:
+                with svc:
+                    with ar:
+                        pass
+        assert w.report() == []
+
+    def test_reentrant_rlock_is_not_a_violation(self, tmp_path):
+        arena = _site_module(tmp_path, "repro/streams/arena.py",
+                             ["lock"], kinds={"lock": "RLock"})
+        with LockWitness() as w:
+            ar = arena["make_lock"]()
+            with ar:
+                with ar:                       # RLock re-entry
+                    pass
+        assert w.report() == []
+
+    def test_same_ordered_rank_nesting_recorded(self, tmp_path):
+        fleet = _site_module(tmp_path, "repro/streams/fleet.py",
+                             ["_lock"])
+        with LockWitness() as w:
+            a, b = fleet["make__lock"](), fleet["make__lock"]()
+            with a:
+                with b:                        # two service-rank locks
+                    pass
+        report = w.report()
+        assert len(report) == 1 and "same-rank" in report[0]
+
+    def test_unordered_tier_abba_cycle_detected(self, tmp_path):
+        engine = _site_module(tmp_path, "repro/serve/engine.py",
+                              ["_scale_lock", "_acct_lock"])
+        with LockWitness() as w:
+            a = engine["make__scale_lock"]()
+            b = engine["make__acct_lock"]()
+            with a:
+                with b:                        # edge a -> b (legal tier)
+                    pass
+            with b:
+                with a:                        # edge b -> a: ABBA
+                    pass
+        assert w.violations == []              # no static-rank violation
+        report = w.report()
+        assert len(report) == 1 and "cycle" in report[0]
+
+    def test_unordered_tier_consistent_order_is_clean(self, tmp_path):
+        engine = _site_module(tmp_path, "repro/serve/engine.py",
+                              ["_scale_lock", "_acct_lock"])
+        with LockWitness() as w:
+            a = engine["make__scale_lock"]()
+            b = engine["make__acct_lock"]()
+            for _ in range(3):
+                with a:
+                    with b:
+                        pass
+        assert w.report() == []
+
+    def test_cross_thread_inversion_caught(self, tmp_path):
+        """The witness sees call-graph nesting the AST checker cannot:
+        a worker thread acquiring outer-rank under inner-rank."""
+        fleet = _site_module(tmp_path, "repro/streams/fleet.py",
+                             ["_lock"])
+        arena = _site_module(tmp_path, "repro/streams/arena.py",
+                             ["lock"], kinds={"lock": "RLock"})
+        with LockWitness() as w:
+            svc, ar = fleet["make__lock"](), arena["make_lock"]()
+
+            def worker():
+                with ar:
+                    with svc:                  # arena held, service outer
+                        pass
+
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+        report = w.report()
+        assert len(report) == 1 and "inversion" in report[0]

@@ -10,6 +10,7 @@ the monitor=False rejection.
 
 import json
 import re
+import threading
 import urllib.error
 import urllib.request
 
@@ -195,6 +196,100 @@ def test_group_obs_knob_wires_shared_mirrors():
                                                  min_q_samples=8))
     assert off.exporter is None
     off.stop()
+
+
+def test_exporter_concurrent_scrapes_drain_and_defrag():
+    """Parallel /metrics scrapes race a /control_log drain, a hot
+    writer, collector ticks and a mid-scrape arena defrag (queue churn
+    past ``defrag_threshold`` moves live slots while snapshots are
+    being rendered).  Every response must stay well-formed, and the
+    drain cursor must hand each record to exactly one scraper.  Runs
+    under the conftest LockWitness, so any hierarchy inversion or
+    same-tier ABBA cycle on the way fails the test too."""
+    arena = CounterArena(64, defrag_threshold=0.3)
+    queues = [InstrumentedQueue(8, arena=arena) for _ in range(4)]
+    svc = FleetMonitorService(queues, MonitorConfig(window=8,
+                                                    min_q_samples=8),
+                              period_s=1e-3, chunk_t=2,
+                              scale_to_period=False, ends="both")
+    log = ControlLog(capacity=4096)
+    errors, drained = [], []
+    drained_lock = threading.Lock()
+    stop = threading.Event()
+
+    def guard(fn):
+        def run():
+            try:
+                fn()
+            except Exception as e:   # pragma: no cover - reraised below
+                errors.append(e)
+                stop.set()
+        return run
+
+    def writer():
+        for i in range(300):
+            log.append(ControlRecord(
+                t=float(i), tick=i, queue=i % 4, policy="replicas",
+                observed_lam=1.0, observed_mu=2.0, action="scale",
+                value=2, outcome="applied"))
+            if stop.is_set():
+                return
+        stop.set()
+
+    def churn():
+        # allocate/close extra queues so retirements push fragmentation
+        # past the threshold -> compact-on-retire relocates live slots
+        while not stop.is_set():
+            extra = [InstrumentedQueue(4, arena=arena) for _ in range(6)]
+            for q in extra[::2]:
+                q.close()
+            for q in extra[1::2]:
+                q.close()
+
+    def sampler():
+        while not stop.is_set():
+            queues[0].head.record_latency(np.full(8, 2e-3))
+            svc.sample()
+
+    with MetricsExporter(service=svc, log=log) as ex:
+        def scraper():
+            while not stop.is_set():
+                text = urllib.request.urlopen(
+                    ex.url + "/metrics", timeout=10).read().decode()
+                _assert_well_formed(text)
+
+        def drainer():
+            while not stop.is_set():
+                lines = urllib.request.urlopen(
+                    ex.url + "/control_log", timeout=10).read().decode()
+                ts = [json.loads(ln)["t"] for ln in lines.splitlines()
+                      if "dropped" not in json.loads(ln)]
+                assert ts == sorted(ts), "drain response out of order"
+                with drained_lock:
+                    drained.extend(ts)
+
+        threads = [threading.Thread(target=guard(fn)) for fn in
+                   (writer, churn, sampler, drainer, drainer,
+                    scraper, scraper, scraper)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+        # final drain picks up whatever the racing drains left behind
+        lines = urllib.request.urlopen(
+            ex.url + "/control_log", timeout=10).read().decode()
+        drained.extend(json.loads(ln)["t"] for ln in lines.splitlines()
+                       if "dropped" not in json.loads(ln))
+        _assert_well_formed(urllib.request.urlopen(
+            ex.url + "/metrics", timeout=10).read().decode())
+    svc.stop()
+    # exactly-once delivery across concurrent drains: no duplicates,
+    # nothing invented, everything the writer appended accounted for
+    assert len(drained) == len(set(drained))
+    assert sorted(drained) == [float(i) for i in range(300)]
+    assert arena.fragmentation() < 0.3 + 1e-9   # defrag actually ran
 
 
 def test_pipeline_obs_requires_monitor():
